@@ -1,0 +1,49 @@
+"""Fig. 10: aspect-ratio exploration for flexible accelerators.
+
+Edge (256 PEs) and cloud (2048 PEs) flexible arrays reconfigured to every
+aspect ratio; per DNN workload the mapper finds the best mapping under the
+MAESTRO-like cost model (the paper uses MAESTRO here because it models
+configurable cluster sizes). Expectation: EDP saturates once utilization
+is maximized; balanced ratios win most workloads but skewed GEMMs prefer
+skewed arrays -- the motivation for cluster-target mappings.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.workloads import CLOUD_ASPECTS, EDGE_ASPECTS, dnn_layers
+from repro.core.architecture import cloud_accelerator, edge_accelerator
+from repro.core.optimizer import union_opt
+
+OUT = Path("experiments/benchmarks")
+
+
+def run() -> dict:
+    layers = dnn_layers()
+    result = {"figure": "fig10", "edge": {}, "cloud": {}}
+    for tag, mk, aspects in (
+        ("edge", edge_accelerator, EDGE_ASPECTS),
+        ("cloud", cloud_accelerator, CLOUD_ASPECTS),
+    ):
+        for wname, problem in layers.items():
+            row = {}
+            for aspect in aspects:
+                arch = mk(aspect=aspect)
+                sol = union_opt(problem, arch, mapper="heuristic",
+                                cost_model="maestro", metric="edp")
+                row["x".join(map(str, aspect))] = {
+                    "edp": sol.cost.edp, "util": sol.cost.utilization,
+                }
+            result[tag][wname] = row
+            best = min(row, key=lambda k: row[k]["edp"])
+            print(f"[fig10] {tag:5s} {wname:10s} best aspect {best:8s} "
+                  f"(util {row[best]['util']:.0%})")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig10.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    run()

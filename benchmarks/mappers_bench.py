@@ -1,0 +1,46 @@
+"""Mapper comparison (paper Sec. III-B1): search quality vs evaluations
+for every mapper on the same problem/arch/cost-model -- the plug-and-play
+matrix prior frameworks cannot run (each mapper was tied to one model)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from benchmarks.workloads import dnn_layers
+from repro.core.architecture import cloud_accelerator
+from repro.core.optimizer import union_opt
+
+OUT = Path("experiments/benchmarks")
+MAPPERS = ["exhaustive", "random", "decoupled", "genetic", "heuristic"]
+COST_MODELS = ["timeloop", "maestro"]
+
+
+def run() -> dict:
+    problem = dnn_layers()["BERT-2"]
+    arch = cloud_accelerator()
+    rows = []
+    for cm in COST_MODELS:
+        for mp in MAPPERS:
+            kw = {"max_mappings": 3000} if mp == "exhaustive" else {}
+            t0 = time.time()
+            sol = union_opt(problem, arch, mapper=mp, cost_model=cm,
+                            metric="edp", **kw)
+            rows.append({
+                "mapper": mp, "cost_model": cm,
+                "edp": sol.cost.edp, "util": sol.cost.utilization,
+                "evaluated": sol.search.evaluated,
+                "seconds": time.time() - t0,
+            })
+            print(f"[mappers] {cm:9s} x {mp:10s}: EDP {sol.cost.edp:.3e} "
+                  f"util {sol.cost.utilization:5.0%} "
+                  f"({sol.search.evaluated} evals, {rows[-1]['seconds']:.1f}s)")
+    result = {"figure": "mappers", "problem": "BERT-2", "rows": rows}
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "mappers.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""SPerf variant table: collect tagged dry-run artifacts (baseline vs
+rules variants) and print/emit the hypothesis-grid comparison."""
+
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from pathlib import Path
+
+ART = Path("experiments/dryrun")
+PEAK, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def terms(art: dict):
+    c = art.get("corrected", art)
+    comp = c["flops_per_device"] / PEAK
+    mem = c["bytes_per_device"] / HBM_BW
+    coll = c["collective_bytes_per_device"] / LINK_BW
+    step = max(comp, mem, coll)
+    rf = art["model_flops"] / (step * art["chips"] * PEAK) if step else 0.0
+    return comp, mem, coll, step, rf
+
+
+def run() -> dict:
+    groups = defaultdict(dict)
+    for p in sorted(ART.glob("*.json")):
+        art = json.loads(p.read_text())
+        base = f"{art['arch']}__{art['shape']}__{art['mesh']}"
+        groups[base][art.get("tag") or "baseline"] = art
+
+    rows = []
+    for cell, variants in sorted(groups.items()):
+        if len(variants) < 2:
+            continue
+        print(f"\n[perf] {cell}")
+        base_step = None
+        for tag in sorted(variants, key=lambda t: (t != "baseline", t)):
+            comp, mem, coll, step, rf = terms(variants[tag])
+            if tag == "baseline":
+                base_step = step
+            speed = f" ({base_step/step:5.2f}x)" if (base_step and tag != "baseline") else ""
+            print(f"    {tag:16s} compute={comp:8.2f}s memory={mem:8.2f}s "
+                  f"collective={coll:8.2f}s step={step:8.2f}s "
+                  f"roofline={rf:6.2%}{speed}")
+            rows.append({"cell": cell, "variant": tag, "compute_s": comp,
+                         "memory_s": mem, "collective_s": coll,
+                         "step_s": step, "roofline_frac": rf})
+    out = Path("experiments/benchmarks")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "perf_variants.json").write_text(json.dumps(rows, indent=1))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

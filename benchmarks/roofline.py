@@ -1,0 +1,77 @@
+"""Roofline table: read every dry-run artifact and emit the SRoofline rows
+(three terms, dominant bound, useful-FLOPs ratio, roofline fraction).
+
+Writes experiments/roofline.md (the table embedded in EXPERIMENTS.md) and
+experiments/benchmarks/roofline.json.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES
+from repro.core.cost.roofline import RooflineReport
+
+ART = Path("experiments/dryrun")
+OUT = Path("experiments/benchmarks")
+
+
+def suggestion(rep: RooflineReport, art: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    kind = SHAPES[art["shape"]].kind
+    if rep.bound == "collective":
+        return ("overlap/shrink collectives: reduce-scatter instead of "
+                "all-reduce + int8 cross-pod compression")
+    if rep.bound == "memory":
+        if kind == "decode":
+            return ("decode is weight/KV-bandwidth bound: quantize KV cache "
+                    "or raise batch to amortize weight reads")
+        return "raise arithmetic intensity: larger per-chip tiles, less remat"
+    return "compute-bound: reduce remat recompute or shard the unsharded axis"
+
+
+def run(mesh: str = "16x16") -> dict:
+    rows = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        art = json.loads(p.read_text())
+        if art.get("tag"):
+            continue  # perf-iteration variants are reported in SPerf
+        rep = RooflineReport.from_artifact(art["cell"], art)
+        r = rep.row()
+        r["arch"], r["shape"] = art["arch"], art["shape"]
+        r["fits_hbm"] = art.get("memory_tpu_analytic", art["memory"])["fits_hbm"]
+        r["what_to_do"] = suggestion(rep, art)
+        rows.append(r)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"| arch | shape | compute (s) | memory (s) | collective (s) | bound "
+        f"| useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['bound']} | "
+            f"{r['useful_flops_frac']:.2f} | {r['roofline_frac']:.2%} |"
+        )
+    table = "\n".join(lines)
+    OUT.mkdir(parents=True, exist_ok=True)
+    Path("experiments/roofline.md").write_text(table + "\n")
+    (OUT / "roofline.json").write_text(json.dumps(rows, indent=1))
+
+    bounds = {}
+    for r in rows:
+        bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+    print(f"[roofline] {len(rows)} cells on {mesh}: bound distribution {bounds}")
+    worst = sorted((r for r in rows if r["roofline_frac"] > 0),
+                   key=lambda r: r["roofline_frac"])[:5]
+    for r in worst:
+        print(f"[roofline]   worst: {r['arch']}/{r['shape']} "
+              f"frac={r['roofline_frac']:.2%} bound={r['bound']}")
+    return {"rows": rows, "bounds": bounds}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Run every benchmark: one per paper table/figure + the roofline reader.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig8 fig11  # subset
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks import (
+    fig3_mapping_edp,
+    fig8_ttgt,
+    fig10_aspect_ratio,
+    fig11_chiplet,
+    mappers_bench,
+    perf_variants,
+    roofline,
+)
+
+BENCHES = {
+    "fig3": fig3_mapping_edp.run,
+    "fig8": fig8_ttgt.run,
+    "fig10": fig10_aspect_ratio.run,
+    "fig11": fig11_chiplet.run,
+    "mappers": mappers_bench.run,
+    "roofline": roofline.run,
+    "perf_variants": perf_variants.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    summary = {}
+    for name in names:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+            summary[name] = {"ok": True, "seconds": round(time.time() - t0, 1)}
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            summary[name] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+    out = Path("experiments/benchmarks")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "summary.json").write_text(json.dumps(summary, indent=1))
+    print("\n===== summary =====")
+    for k, v in summary.items():
+        print(f"  {k:10s} {'OK' if v['ok'] else 'FAIL'} "
+              f"({v.get('seconds', '-')}s)")
+    if not all(v["ok"] for v in summary.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

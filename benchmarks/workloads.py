@@ -1,0 +1,49 @@
+"""Paper workload tables (Tables III & IV) as Union Problems.
+
+Table III: TCCG tensor contractions with the reference TDS sizes.
+Table IV:  DNN layers from MLPerf models (ResNet50 CONV / DLRM & BERT GEMM).
+The paper costs everything with uint8 MACs (word_bytes=1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.problem import Problem
+
+WORD = 1  # uint8 (paper Sec. V)
+
+
+def dnn_layers() -> Dict[str, Problem]:
+    """Paper Table IV."""
+    out: Dict[str, Problem] = {}
+    # CONV layers: paper table gives activation sizes; same-padding => X,Y
+    # are also the output sizes Problem.conv2d expects.
+    out["ResNet50-1"] = Problem.conv2d(32, 64, 64, 56, 56, 1, 1, name="ResNet50-1", word_bytes=WORD)
+    out["ResNet50-2"] = Problem.conv2d(32, 64, 64, 56, 56, 3, 3, name="ResNet50-2", word_bytes=WORD)
+    out["ResNet50-3"] = Problem.conv2d(32, 512, 1024, 14, 14, 1, 1, name="ResNet50-3", word_bytes=WORD)
+    for name, (n, nin, non) in {
+        "DLRM-1": (512, 1024, 1024),
+        "DLRM-2": (512, 1024, 64),
+        "DLRM-3": (512, 2048, 2048),
+        "BERT-1": (256, 768, 768),
+        "BERT-2": (256, 3072, 768),
+        "BERT-3": (256, 768, 3072),
+    }.items():
+        out[name] = Problem.gemm(n, non, nin, name=name, word_bytes=WORD)
+    return out
+
+
+def tc_problems() -> List[Tuple[str, int, Problem]]:
+    """Paper Table III / Fig. 8: (name, TDS, problem)."""
+    probs = []
+    for tds in (16, 64):
+        probs.append(("intensli2", tds, Problem.tc_intensli2(tds, word_bytes=WORD)))
+        probs.append(("ccsd7", tds, Problem.tc_ccsd7(tds, word_bytes=WORD)))
+    for tds in (16, 32):
+        probs.append(("ccsd-t4", tds, Problem.tc_ccsd_t4(tds, word_bytes=WORD)))
+    return probs
+
+
+EDGE_ASPECTS = [(1, 256), (2, 128), (4, 64), (8, 32), (16, 16)]
+CLOUD_ASPECTS = [(1, 2048), (2, 1024), (4, 512), (8, 256), (16, 128), (32, 64)]

@@ -1,0 +1,14 @@
+"""Union-JAX: unified HW-SW co-design ecosystem (Jeong et al., 2021) as a
+production multi-pod JAX training/serving framework.
+
+Public API highlights:
+  repro.core.problem.Problem            -- unified workload abstraction
+  repro.core.architecture.Architecture  -- cluster-target hardware abstraction
+  repro.core.mapping.Mapping            -- cluster-target loop-centric mapping
+  repro.core.mappers                    -- plug-and-play mappers
+  repro.core.cost                       -- plug-and-play cost models
+  repro.configs                         -- assigned architectures + paper workloads
+  repro.launch                          -- mesh / dryrun / train / serve
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""Architecture configs: the 10 assigned architectures + paper workloads."""
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    register,
+    get_config,
+    list_configs,
+)
+
+# import for registration side effects
+from repro.configs import (  # noqa: F401
+    codeqwen15_7b,
+    qwen3_0p6b,
+    starcoder2_15b,
+    qwen15_110b,
+    zamba2_2p7b,
+    xlstm_1p3b,
+    deepseek_v2_lite,
+    qwen2_moe_a2p7b,
+    llava_next_34b,
+    hubert_xlarge,
+)

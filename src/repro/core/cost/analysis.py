@@ -1,0 +1,184 @@
+"""Shared reuse/traffic analysis over an expanded mapping loop nest.
+
+This module turns (Problem, Mapping, Architecture) into per-buffer-level
+access counts per data space, using the classic analytical-cost-model
+reuse rules (Timeloop/Interstellar style):
+
+  * A buffer at cluster level i holds one temporal tile TT^i per data space.
+  * The tile held changes whenever a RELEVANT temporal loop above the
+    residency advances (relevant = the loop's dim projects into the data
+    space), or when an IRRELEVANT temporal loop that encloses a deeper
+    relevant temporal loop advances (re-walk => refetch).
+  * Relevant spatial distribution partitions data across instances;
+    irrelevant spatial distribution multicasts the same tile (distinct
+    parent reads are counted once under ideal multicast; per-instance
+    fills are always counted).
+  * Output data spaces additionally pay read-modify-write traffic when
+    reduction loops enclose their residency.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.architecture import Architecture
+from repro.core.mapping import Mapping
+from repro.core.problem import DataSpace, Problem
+
+
+@dataclass(frozen=True)
+class Loop:
+    level: int  # mapping/cluster level index (0 = outermost)
+    kind: str  # "temporal" | "spatial"
+    dim: str
+    trips: int
+
+
+@dataclass
+class LevelTraffic:
+    """Per-buffer-level traffic for ONE data space (elements, not bytes)."""
+
+    fills_per_instance: int = 0  # elements read into one instance from parent
+    drains_per_instance: int = 0  # output elements written back to parent
+    parent_reads: int = 0  # distinct element-reads served by ONE parent instance
+    parent_writes: int = 0  # distinct element-writes absorbed by ONE parent instance
+    instances: int = 1  # number of instances of this level in the machine
+    tile_elems: int = 0  # resident tile footprint (elements)
+
+
+@dataclass
+class AccessProfile:
+    """Full result of the analysis."""
+
+    loops: List[Loop]
+    # traffic[(ds_name, level_idx)] -> LevelTraffic; only non-virtual levels
+    traffic: Dict[Tuple[str, int], LevelTraffic] = field(default_factory=dict)
+    compute_cycles: float = 0.0
+    leaf_tile_macs: int = 0
+    total_temporal_trips: int = 1
+    parallelism: int = 1
+    utilization: float = 0.0
+    l1_reads: Dict[str, int] = field(default_factory=dict)  # innermost accesses per ds
+
+
+def expand_loops(problem: Problem, mapping: Mapping) -> List[Loop]:
+    loops: List[Loop] = []
+    for i, lm in enumerate(mapping.levels):
+        trips = mapping.temporal_trips(i, problem)
+        order = list(lm.temporal_order) + [d for d in problem.dims if d not in lm.temporal_order]
+        for d in order:
+            if trips[d] > 1:
+                loops.append(Loop(i, "temporal", d, trips[d]))
+        fan = mapping.spatial_fanout(i, problem)
+        for d in problem.dims:
+            if fan[d] > 1:
+                loops.append(Loop(i, "spatial", d, fan[d]))
+    return loops
+
+
+def _real_parent(arch: Architecture, i: int) -> Optional[int]:
+    """Nearest non-virtual cluster level above i (list index)."""
+    for j in range(i - 1, -1, -1):
+        if not arch.clusters[j].virtual:
+            return j
+    return None
+
+
+def analyze(problem: Problem, mapping: Mapping, arch: Architecture) -> AccessProfile:
+    loops = expand_loops(problem, mapping)
+    prof = AccessProfile(loops=loops)
+
+    n_levels = arch.n_levels
+    # compute totals
+    total_trips = 1
+    for lp in loops:
+        if lp.kind == "temporal":
+            total_trips *= lp.trips
+    par = mapping.total_parallelism(problem)
+    leaf = arch.clusters[-1]
+    leaf_tile = {d: mapping.levels[-1].tt(d) for d in problem.dims}
+    leaf_macs = math.prod(leaf_tile.values())
+    prof.leaf_tile_macs = leaf_macs
+    prof.total_temporal_trips = total_trips
+    prof.parallelism = par
+    prof.utilization = par / max(1, arch.num_pes)
+    prof.compute_cycles = total_trips * math.ceil(leaf_macs / max(1, leaf.macs_per_cycle))
+
+    reduction = set(problem.reduction_dims())
+
+    for ds in problem.data_spaces:
+        rel = set(ds.dims)
+        for i in range(n_levels):
+            if arch.clusters[i].virtual:
+                continue
+            # loops above the residency at level i: all loops of levels < i,
+            # plus temporal loops of level i itself.
+            above = [
+                lp for lp in loops
+                if lp.level < i or (lp.level == i and lp.kind == "temporal")
+            ]
+            # tile changes: relevant temporal loops, or irrelevant temporal
+            # loops enclosing a deeper relevant temporal loop.
+            changes = 1
+            unique = 1
+            for p, lp in enumerate(above):
+                if lp.kind != "temporal":
+                    continue
+                if lp.dim in rel:
+                    changes *= lp.trips
+                    unique *= lp.trips
+                else:
+                    deeper_relevant = any(
+                        q.kind == "temporal" and q.dim in rel for q in above[p + 1 :]
+                    )
+                    if deeper_relevant:
+                        changes *= lp.trips
+            tile = {d: mapping.levels[i].tt(d) for d in problem.dims}
+            foot = ds.footprint(tile)
+            # spatial multipliers between the real parent and this level
+            pr = _real_parent(arch, i)
+            rel_spatial = 1
+            all_spatial_above = 1
+            inst = 1
+            for lp in loops:
+                if lp.kind != "spatial":
+                    continue
+                if lp.level < i:
+                    inst *= lp.trips
+                if pr is not None and pr <= lp.level < i:
+                    all_spatial_above *= lp.trips
+                    if lp.dim in rel:
+                        rel_spatial *= lp.trips
+
+            lt = LevelTraffic(instances=inst, tile_elems=foot)
+            if not ds.is_output:
+                lt.fills_per_instance = changes * foot
+                # one parent instance serves (instances between parent and i);
+                # ideal multicast: only RELEVANT spatial splits are distinct.
+                lt.parent_reads = changes * foot * rel_spatial
+            else:
+                lt.drains_per_instance = changes * foot
+                lt.fills_per_instance = max(0, changes - unique) * foot  # RMW refills
+                lt.parent_writes = changes * foot * rel_spatial
+                lt.parent_reads = max(0, changes - unique) * foot * rel_spatial
+            prof.traffic[(ds.name, i)] = lt
+
+        # innermost (register/MAC) accesses: one operand access per MAC
+        total_macs = problem.macs
+        prof.l1_reads[ds.name] = 2 * total_macs if ds.is_output else total_macs
+    return prof
+
+
+def boundary_bytes_per_instance(
+    prof: AccessProfile, problem: Problem, level: int
+) -> float:
+    """Total fill+drain bytes crossing INTO one instance of `level`."""
+    total = 0.0
+    for ds in problem.data_spaces:
+        lt = prof.traffic.get((ds.name, level))
+        if lt is None:
+            continue
+        total += (lt.fills_per_instance + lt.drains_per_instance) * ds.word_bytes
+    return total

@@ -1,0 +1,74 @@
+"""Cost model interface + result record."""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.architecture import Architecture
+from repro.core.mapping import Mapping
+from repro.core.problem import Problem
+
+
+@dataclass
+class Cost:
+    """Result of evaluating one mapping on one architecture."""
+
+    latency_cycles: float
+    energy_pj: float
+    utilization: float
+    macs: int
+    frequency_hz: float
+    breakdown: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def latency_s(self) -> float:
+        return self.latency_cycles / self.frequency_hz
+
+    @property
+    def energy_j(self) -> float:
+        return self.energy_pj * 1e-12
+
+    @property
+    def edp(self) -> float:
+        """Energy-Delay Product in J*s (paper's headline metric)."""
+        return self.energy_j * self.latency_s
+
+    def metric(self, name: str) -> float:
+        if name == "latency":
+            return self.latency_cycles
+        if name == "energy":
+            return self.energy_pj
+        if name == "edp":
+            return self.edp
+        raise ValueError(f"unknown metric {name!r}")
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"Cost(cycles={self.latency_cycles:.3g}, E={self.energy_pj:.3g}pJ, "
+            f"EDP={self.edp:.3g}Js, util={self.utilization:.2%})"
+        )
+
+
+class CostModel(abc.ABC):
+    """Every cost model: conformability check + evaluate."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
+        ...
+
+    def conformable(self, problem: Problem) -> bool:
+        """Whether this model can evaluate the problem at all.
+
+        Overridden per model; see also repro.core.ir.conformability which
+        runs these checks as compiler passes.
+        """
+        return True
+
+    def evaluate_metric(
+        self, problem: Problem, mapping: Mapping, arch: Architecture, metric: str = "edp"
+    ) -> float:
+        return self.evaluate(problem, mapping, arch).metric(metric)

@@ -1,0 +1,120 @@
+"""MAESTRO-like cluster data-centric cost model (paper Sec. III-B2, [10]).
+
+Operation-level model: only accepts high-level operations it natively
+understands (CONV2D / GEMM / DWCONV / TC-as-GEMM tags) -- the
+conformability pass enforces this, mirroring the paper's discussion that
+MAESTRO consumes operations while Timeloop consumes loop nests.
+
+Differences from the Timeloop-like model (deliberate -- the two models
+bracket reality, which is exactly why Union makes them swappable):
+
+  * NoC multicast is an explicit energy term (data-centric reuse): every
+    delivered copy pays a hop cost, but multicast reads the source once.
+  * Latency is computed per cluster level as (steps x per-step max of
+    compute and fill) with a pipeline-startup term -- MAESTRO's
+    double-buffered cluster schedule -- instead of a global roofline max.
+  * Edge/utilization effects: partial spatial occupancy directly scales
+    the per-step compute time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.core.architecture import Architecture
+from repro.core.cost.analysis import analyze, boundary_bytes_per_instance
+from repro.core.cost.base import Cost, CostModel
+from repro.core.cost.energy import ACCEL_45NM_UINT8, EnergyTable
+from repro.core.mapping import Mapping
+from repro.core.problem import Problem
+
+_SUPPORTED_OPS = {"CONV2D", "GEMM", "DWCONV", "TC", "ATTN_QK", "ATTN_PV", "SSD"}
+
+
+class MaestroLikeModel(CostModel):
+    name = "maestro_like"
+
+    def __init__(self, energy_table: EnergyTable = ACCEL_45NM_UINT8) -> None:
+        self.etab = energy_table
+
+    def conformable(self, problem: Problem) -> bool:
+        return problem.operation in _SUPPORTED_OPS and problem.unit_op == "mac2"
+
+    def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
+        if not self.conformable(problem):
+            raise ValueError(
+                f"{self.name} only supports operations {_SUPPORTED_OPS}, "
+                f"got {problem.operation!r} (unit op {problem.unit_op!r})"
+            )
+        prof = analyze(problem, mapping, arch)
+        freq = arch.frequency_hz
+        leaf = arch.clusters[-1]
+
+        # ----- latency: per-level double-buffered schedule ---------------- #
+        # steady-state per-outer-step time = max(compute chunk, fill chunk);
+        # plus one pipeline-startup fill of the first tile at every level.
+        compute_cycles = prof.compute_cycles
+        latency = float(compute_cycles)
+        breakdown = {"compute_cycles": float(compute_cycles)}
+        startup = 0.0
+        for i, cl in enumerate(arch.clusters):
+            if cl.virtual or i == 0 or math.isinf(cl.fill_bandwidth):
+                continue
+            total_fill = boundary_bytes_per_instance(prof, problem, i)
+            if total_fill <= 0:
+                continue
+            fill_cycles = total_fill * freq / cl.fill_bandwidth
+            # first-tile startup: one tile's worth of fill is exposed
+            tile_bytes = sum(
+                prof.traffic[(ds.name, i)].tile_elems * ds.word_bytes
+                for ds in problem.data_spaces
+                if (ds.name, i) in prof.traffic
+            )
+            startup += tile_bytes * freq / cl.fill_bandwidth
+            breakdown[f"fill_cycles_{cl.name}"] = fill_cycles
+            latency = max(latency, fill_cycles)
+        latency += startup
+        breakdown["startup_cycles"] = startup
+
+        # ----- energy: buffer accesses + NoC delivery hops ---------------- #
+        energy = 0.0
+        noc_energy = 0.0
+        for ds in problem.data_spaces:
+            wb = ds.word_bytes
+            for i, cl in enumerate(arch.clusters):
+                lt = prof.traffic.get((ds.name, i))
+                if lt is None:
+                    continue
+                parent_idx = None
+                for j in range(i - 1, -1, -1):
+                    if not arch.clusters[j].virtual:
+                        parent_idx = j
+                        break
+                energy += lt.fills_per_instance * lt.instances * wb * cl.write_energy
+                energy += lt.drains_per_instance * lt.instances * wb * cl.read_energy
+                if parent_idx is not None:
+                    parent = arch.clusters[parent_idx]
+                    n_parent = 1
+                    for lp in prof.loops:
+                        if lp.kind == "spatial" and lp.level < parent_idx:
+                            n_parent *= lp.trips
+                    # source reads once per distinct datum (multicast-aware)
+                    energy += lt.parent_reads * n_parent * wb * parent.read_energy
+                    energy += lt.parent_writes * n_parent * wb * parent.write_energy
+                    # but every DELIVERED copy pays a NoC hop
+                    delivered = (lt.fills_per_instance + lt.drains_per_instance) * lt.instances
+                    noc_energy += delivered * wb * self.etab.noc_hop_pj_byte
+            energy += prof.l1_reads[ds.name] * wb * arch.clusters[-1].read_energy
+        energy += problem.macs * leaf.mac_energy
+        energy += noc_energy
+        breakdown["noc_energy_pj"] = noc_energy
+
+        return Cost(
+            latency_cycles=latency,
+            energy_pj=energy,
+            utilization=prof.utilization,
+            macs=problem.macs,
+            frequency_hz=freq,
+            breakdown=breakdown,
+        )

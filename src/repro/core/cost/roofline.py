@@ -1,0 +1,212 @@
+"""TPU v5e three-term roofline cost model.
+
+Terms (in seconds, per chip):
+
+  compute    = FLOPs_per_chip / 197e12
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = ici_bytes_per_chip / 50e9   (ring-discounted per collective)
+
+Two modes:
+
+  * analytic  -- ``TPURooflineModel.evaluate`` scores a (Problem, Mapping)
+    pair before any compilation: HBM traffic from the shared reuse
+    analysis, collective traffic inferred from which mesh-level spatial
+    splits are relevant/irrelevant/reduction for each data space. This is
+    what the mappers use to search sharding+tiling jointly.
+  * artifact  -- ``RooflineReport.from_artifact`` consumes the dry-run's
+    compiled HLO statistics (launch/dryrun.py) and is the source of truth
+    for EXPERIMENTS.md. `cost_analysis()` on an SPMD module reports
+    PER-DEVICE FLOPs/bytes, so no further division by chip count happens.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.architecture import Architecture, TPU_V5E
+from repro.core.cost.analysis import analyze, boundary_bytes_per_instance
+from repro.core.cost.base import Cost, CostModel
+from repro.core.mapping import Mapping
+from repro.core.problem import Problem
+
+MESH_AXES = ("pod", "data", "model")
+
+
+@dataclass
+class RooflineReport:
+    """The §Roofline record for one (arch x shape x mesh) cell."""
+
+    name: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_total: float = 0.0
+    peak_flops: float = TPU_V5E["peak_bf16_flops"]
+    hbm_bw: float = TPU_V5E["hbm_bw"]
+    link_bw: float = TPU_V5E["ici_link_bw"]
+    extras: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / self.link_bw
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic fully-overlapped step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is 'useful'."""
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization at the optimistic step time (MFU bound)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops_total / (t * self.chips * self.peak_flops)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_time_s,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+        }
+
+    @staticmethod
+    def from_artifact(name: str, art: Dict) -> "RooflineReport":
+        """Build from a dry-run artifact dict (launch/dryrun.py output).
+
+        Prefers the structure-corrected costs (scan bodies x trip count --
+        see dryrun.corrected_costs); raw cost_analysis numbers are the
+        fallback for artifacts produced without the correction pass.
+        """
+        src = art.get("corrected", art)
+        return RooflineReport(
+            name=name,
+            chips=int(art["chips"]),
+            flops_per_chip=float(src["flops_per_device"]),
+            hbm_bytes_per_chip=float(src["bytes_per_device"]),
+            collective_bytes_per_chip=float(src["collective_bytes_per_device"]),
+            model_flops_total=float(art.get("model_flops", 0.0)),
+            extras={k: float(v) for k, v in art.get("extras", {}).items()},
+        )
+
+
+class TPURooflineModel(CostModel):
+    """Analytic three-term roofline over (Problem, Mapping) on a TPU arch."""
+
+    name = "tpu_roofline"
+
+    def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
+        prof = analyze(problem, mapping, arch)
+        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
+        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
+        link_bw = float(arch.attrs.get("ici_link_bw", TPU_V5E["ici_link_bw"]))
+
+        # chips = product of fanouts at mesh-axis levels
+        chips = 1
+        mesh_levels = []
+        for i, cl in enumerate(arch.clusters):
+            if cl.dimension in MESH_AXES and cl.fanout > 1:
+                chips *= cl.fanout
+                mesh_levels.append(i)
+
+        # compute term: FLOPs divide evenly over the chips actually used
+        used_chips = 1
+        for i in mesh_levels:
+            # parallelism expressed at the mapping level whose children are
+            # the mesh level's instances (= level i-1 in list order)
+            used_chips *= mapping.parallelism(i - 1, problem) if i > 0 else 1
+        used_chips = max(1, min(chips, used_chips))
+        flops_per_chip = 2.0 * problem.macs / used_chips
+        compute_s = flops_per_chip / peak
+
+        # memory term: traffic into the innermost real buffer (VMEM) per chip
+        vmem_level = arch.n_levels - 1
+        hbm_bytes = boundary_bytes_per_instance(prof, problem, vmem_level)
+        memory_s = hbm_bytes / hbm_bw
+
+        # collective term from mesh-level spatial splits
+        coll_bytes = 0.0
+        for i in mesh_levels:
+            lvl = i - 1  # mapping level that distributes over this mesh axis
+            if lvl < 0:
+                continue
+            fan = mapping.spatial_fanout(lvl, problem)
+            split = {d: f for d, f in fan.items() if f > 1}
+            if not split:
+                continue
+            n = math.prod(split.values())
+            red = set(problem.reduction_dims())
+            tile = mapping.outer_spatial_tile(lvl + 1, problem)
+            for ds in problem.data_spaces:
+                rel = set(ds.dims)
+                shard = ds.footprint(tile)
+                if ds.is_output:
+                    if any(d in red for d in split):
+                        # partial sums all-reduced: ring = 2*(n-1)/n * bytes
+                        coll_bytes += 2.0 * (n - 1) / n * shard * ds.word_bytes
+                else:
+                    if not any(d in rel for d in split):
+                        # replicated input must be broadcast: all-gather
+                        coll_bytes += (n - 1) / n * shard * ds.word_bytes
+        collective_s = coll_bytes / link_bw
+
+        latency_s = max(compute_s, memory_s, collective_s)
+        freq = arch.frequency_hz
+        rep = RooflineReport(
+            name=problem.name, chips=chips,
+            flops_per_chip=flops_per_chip, hbm_bytes_per_chip=hbm_bytes,
+            collective_bytes_per_chip=coll_bytes,
+            model_flops_total=2.0 * problem.macs,
+            peak_flops=peak, hbm_bw=hbm_bw, link_bw=link_bw,
+        )
+        # energy: rough HBM+ICI+MAC (used only for EDP-style ranking on TPU)
+        energy_pj = (
+            hbm_bytes * used_chips * 7.0
+            + coll_bytes * used_chips * 2.0
+            + problem.macs * arch.clusters[-1].mac_energy
+        )
+        return Cost(
+            latency_cycles=latency_s * freq,
+            energy_pj=energy_pj,
+            utilization=mapping.utilization(problem, arch),
+            macs=problem.macs,
+            frequency_hz=freq,
+            breakdown={
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "bound": {"compute": 0.0, "memory": 1.0, "collective": 2.0}[rep.bound],
+            },
+        )

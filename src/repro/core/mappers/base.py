@@ -1,0 +1,75 @@
+"""Mapper interface and search bookkeeping."""
+
+from __future__ import annotations
+
+import abc
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.architecture import Architecture
+from repro.core.cost.base import Cost, CostModel
+from repro.core.mapping import Mapping
+from repro.core.mapspace import MapSpace
+from repro.core.problem import Problem
+
+
+@dataclass
+class SearchResult:
+    best_mapping: Optional[Mapping]
+    best_cost: Optional[Cost]
+    metric: str
+    evaluated: int
+    elapsed_s: float
+    trajectory: List[Tuple[int, float]] = field(default_factory=list)  # (eval#, best metric)
+
+    @property
+    def best_metric(self) -> float:
+        return self.best_cost.metric(self.metric) if self.best_cost else float("inf")
+
+
+class Mapper(abc.ABC):
+    name: str = "base"
+
+    @abc.abstractmethod
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+    ) -> SearchResult:
+        ...
+
+    def _mk_result(self, metric: str) -> "_Tracker":
+        return _Tracker(metric)
+
+
+class _Tracker:
+    """Shared incumbent tracking for all mappers."""
+
+    def __init__(self, metric: str) -> None:
+        self.metric = metric
+        self.best_mapping: Optional[Mapping] = None
+        self.best_cost: Optional[Cost] = None
+        self.evaluated = 0
+        self.t0 = time.time()
+        self.trajectory: List[Tuple[int, float]] = []
+
+    def offer(self, mapping: Mapping, cost: Cost) -> bool:
+        self.evaluated += 1
+        if self.best_cost is None or cost.metric(self.metric) < self.best_cost.metric(self.metric):
+            self.best_mapping = mapping
+            self.best_cost = cost
+            self.trajectory.append((self.evaluated, cost.metric(self.metric)))
+            return True
+        return False
+
+    def result(self) -> SearchResult:
+        return SearchResult(
+            best_mapping=self.best_mapping,
+            best_cost=self.best_cost,
+            metric=self.metric,
+            evaluated=self.evaluated,
+            elapsed_s=time.time() - self.t0,
+            trajectory=self.trajectory,
+        )

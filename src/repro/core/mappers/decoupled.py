@@ -1,0 +1,122 @@
+"""Marvel-style decoupled mapper (paper [13]).
+
+Phase 1 decouples the OFF-CHIP map-space: choose the outer-level tiling
+that minimizes DRAM (outermost-memory) traffic. Phase 2 searches the
+ON-CHIP levels conditioned on each of the top-k off-chip prefixes.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Dict, List, Tuple
+
+from repro.core.cost.analysis import analyze
+from repro.core.cost.base import CostModel
+from repro.core.mappers.base import Mapper, SearchResult
+from repro.core.mapping import Mapping
+from repro.core.mapspace import MapSpace
+
+
+class DecoupledMapper(Mapper):
+    name = "decoupled"
+
+    def __init__(
+        self,
+        offchip_samples: int = 400,
+        onchip_samples: int = 400,
+        top_k: int = 4,
+        seed: int = 0,
+    ) -> None:
+        self.offchip_samples = offchip_samples
+        self.onchip_samples = onchip_samples
+        self.top_k = top_k
+        self.seed = seed
+
+    # ------------------------------------------------------------------ #
+    def _dram_traffic(self, space: MapSpace, m: Mapping) -> float:
+        prof = analyze(space.problem, m, space.arch)
+        total = 0.0
+        # traffic served by the outermost (DRAM) level = parent_reads/writes
+        # of the first non-virtual level below it
+        for ds in space.problem.data_spaces:
+            for i in range(1, space.arch.n_levels):
+                lt = prof.traffic.get((ds.name, i))
+                if lt is None:
+                    continue
+                total += (lt.parent_reads + lt.parent_writes) * ds.word_bytes
+                break  # first real level below DRAM only
+        return total
+
+    def _resample_inner(
+        self, space: MapSpace, base: Mapping, rng: random.Random, split_level: int
+    ) -> Mapping:
+        """Keep levels [0, split_level) of `base`, resample the rest."""
+        m = Mapping.from_dict(base.to_dict())
+        for d in space.dims:
+            cur = m.levels[split_level - 1].st(d) if split_level > 0 else space.problem.dims[d]
+            for i in range(split_level, space.n_levels):
+                tt = rng.choice([v for v in space._divs(cur)])
+                spatial_ok = (
+                    space.child_fanout[i] > 1
+                    and i < space.n_levels - 1
+                    and (space.constraints is None
+                         or space.constraints._spatial_ok(space.arch.clusters[i].name, d))
+                )
+                st = rng.choice([v for v in space._divs(tt)]) if spatial_ok else tt
+                if i == space.n_levels - 1:
+                    st = tt
+                m.levels[i].temporal_tile_sizes[d] = tt
+                m.levels[i].spatial_tile_sizes[d] = st
+                cur = st
+        for i in range(split_level, space.n_levels):
+            order = list(space.dims)
+            rng.shuffle(order)
+            m.levels[i].temporal_order = tuple(order)
+        return m
+
+    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+        rng = random.Random(self.seed)
+        tr = self._mk_result(metric)
+        # the off-chip boundary: everything above the first level with fanout>1
+        split = next(
+            (i for i, f in enumerate(space.child_fanout) if f > 1),
+            1,
+        )
+        split = max(1, split)
+        # Phase 1: rank off-chip prefixes by DRAM traffic
+        cands: List[Tuple[float, Mapping]] = []
+        for _ in range(self.offchip_samples):
+            m = space.random_mapping(rng)
+            cands.append((self._dram_traffic(space, m), m))
+        cands.sort(key=lambda t: t[0])
+        seen_prefix = set()
+        prefixes: List[Mapping] = []
+        for _, m in cands:
+            key = tuple(
+                (m.levels[i].tt(d), m.levels[i].st(d))
+                for i in range(split)
+                for d in space.dims
+            )
+            if key not in seen_prefix:
+                seen_prefix.add(key)
+                prefixes.append(m)
+            if len(prefixes) >= self.top_k:
+                break
+        # Phase 2: on-chip search conditioned on each prefix
+        per_prefix = max(1, self.onchip_samples // max(1, len(prefixes)))
+        for base in prefixes:
+            for _ in range(per_prefix):
+                m = self._resample_inner(space, base, rng, split)
+                if not m.is_legal(space.problem, space.arch):
+                    continue
+                if space.constraints is not None and not space.constraints.ok(
+                    m, space.problem, space.arch
+                ):
+                    continue
+                cost = cost_model.evaluate(space.problem, m, space.arch)
+                tr.offer(m, cost)
+        if tr.best_mapping is None:  # fall back to the best phase-1 candidate
+            m = cands[0][1]
+            tr.offer(m, cost_model.evaluate(space.problem, m, space.arch))
+        return tr.result()

@@ -1,0 +1,24 @@
+"""Exhaustive (capped) map-space search."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.cost.base import CostModel
+from repro.core.mappers.base import Mapper, SearchResult
+from repro.core.mapspace import MapSpace
+
+
+class ExhaustiveMapper(Mapper):
+    name = "exhaustive"
+
+    def __init__(self, max_mappings: Optional[int] = 50_000, orders: str = "canonical") -> None:
+        self.max_mappings = max_mappings
+        self.orders = orders
+
+    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+        tr = self._mk_result(metric)
+        for m in space.enumerate_tilings(max_mappings=self.max_mappings, orders=self.orders):
+            cost = cost_model.evaluate(space.problem, m, space.arch)
+            tr.offer(m, cost)
+        return tr.result()

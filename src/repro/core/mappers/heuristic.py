@@ -1,0 +1,123 @@
+"""Heuristic mapper: utilization-first greedy seed + local hill-climb.
+
+The greedy seed spreads the largest problem dims spatially across the
+spatial-capable levels (maximizing PE utilization, which Fig. 10 of the
+paper shows dominates EDP), then temporal tiles are chosen to saturate
+each level's memory. Hill-climbing refines with the shared mutation
+operator, accepting only improvements.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Dict, List
+
+from repro.core.cost.base import CostModel
+from repro.core.mappers.base import Mapper, SearchResult
+from repro.core.mapping import LevelMapping, Mapping
+from repro.core.mapspace import MapSpace
+
+
+class HeuristicMapper(Mapper):
+    name = "heuristic"
+
+    def __init__(self, climb_steps: int = 300, restarts: int = 3, seed: int = 0) -> None:
+        self.climb_steps = climb_steps
+        self.restarts = restarts
+        self.seed = seed
+
+    # ------------------------------------------------------------------ #
+    def _greedy_seed(self, space: MapSpace, rng: random.Random) -> Mapping:
+        problem, arch = space.problem, space.arch
+        dims = dict(problem.dims)
+        n = space.n_levels
+        # remaining sizes to tile, per dim
+        chains: Dict[str, List[int]] = {d: [] for d in dims}
+        cur = dict(dims)
+        for i in range(n):
+            fan = space.child_fanout[i]
+            # choose spatial factors for this level greedily from big dims
+            st_factors = {d: 1 for d in dims}
+            if fan > 1 and i < n - 1:
+                budget = fan
+                # sort dims by remaining size, prefer non-reduction dims for
+                # outputs-stationarity but allow all
+                for d in sorted(dims, key=lambda d: -cur[d]):
+                    if budget <= 1:
+                        break
+                    if space.constraints is not None and not space.constraints._spatial_ok(
+                        arch.clusters[i].name, d
+                    ):
+                        continue
+                    f = math.gcd(cur[d], budget)
+                    # largest divisor of cur[d] that divides budget
+                    best = 1
+                    for v in space._divs(cur[d]):
+                        if budget % v == 0 and v > best:
+                            best = v
+                    f = best
+                    if f > 1:
+                        st_factors[d] = f
+                        budget //= f
+            for d in dims:
+                tt = cur[d]  # temporal tile = whole remaining (stream at this level)
+                st = tt // st_factors[d]
+                chains[d].extend((tt, st))
+                cur[d] = st
+        levels = []
+        for i, cl in enumerate(arch.clusters):
+            tt = {d: chains[d][2 * i] for d in dims}
+            st = {d: chains[d][2 * i + 1] for d in dims}
+            levels.append(LevelMapping(cl.name, tuple(dims), tt, st))
+        m = Mapping(levels, problem.name)
+        # repair memory violations: shrink temporal tiles at offending levels
+        for i, cl in enumerate(arch.clusters):
+            if cl.virtual or cl.memory_bytes is None or i == 0:
+                continue
+            guard = 0
+            while True:
+                tile = {d: m.levels[i].tt(d) for d in dims}
+                need = sum(ds.footprint_bytes(tile) for ds in problem.data_spaces)
+                if need <= cl.memory_bytes or guard > 64:
+                    break
+                guard += 1
+                # halve the biggest temporal tile dim (keeping divisibility)
+                d = max(dims, key=lambda d: m.levels[i].tt(d))
+                tt = m.levels[i].tt(d)
+                smaller = [v for v in space._divs(tt) if v < tt]
+                if not smaller:
+                    break
+                new_tt = max(smaller)
+                # keep inner chain nested
+                m.levels[i].temporal_tile_sizes[d] = new_tt
+                m.levels[i].spatial_tile_sizes[d] = min(m.levels[i].st(d), new_tt)
+                for j in range(i + 1, space.n_levels):
+                    m.levels[j].temporal_tile_sizes[d] = min(
+                        m.levels[j].tt(d), m.levels[j - 1].st(d)
+                    )
+                    m.levels[j].spatial_tile_sizes[d] = min(
+                        m.levels[j].st(d), m.levels[j].tt(d)
+                    )
+        if m.is_legal(problem, arch):
+            return m
+        return space.random_mapping(rng)
+
+    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+        rng = random.Random(self.seed)
+        tr = self._mk_result(metric)
+        for r in range(self.restarts):
+            m = self._greedy_seed(space, rng) if r == 0 else space.random_mapping(rng)
+            if space.constraints is not None and not space.constraints.ok(
+                m, space.problem, space.arch
+            ):
+                m = space.random_mapping(rng)
+            best = cost_model.evaluate(space.problem, m, space.arch)
+            tr.offer(m, best)
+            for _ in range(self.climb_steps // self.restarts):
+                cand = space.mutate(m, rng)
+                c = cost_model.evaluate(space.problem, cand, space.arch)
+                tr.offer(cand, c)
+                if c.metric(metric) < best.metric(metric):
+                    m, best = cand, c
+        return tr.result()

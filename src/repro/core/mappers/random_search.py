@@ -1,0 +1,36 @@
+"""Random-sampling mapper (Timeloop's default search [11])."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.cost.base import CostModel
+from repro.core.mappers.base import Mapper, SearchResult
+from repro.core.mapspace import MapSpace
+
+
+class RandomMapper(Mapper):
+    name = "random"
+
+    def __init__(self, samples: int = 2000, seed: int = 0, patience: int = 0) -> None:
+        """``patience``: stop after this many consecutive non-improving
+        samples (0 = never early-stop), mirroring Timeloop's victory
+        condition."""
+        self.samples = samples
+        self.seed = seed
+        self.patience = patience
+
+    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+        rng = random.Random(self.seed)
+        tr = self._mk_result(metric)
+        stale = 0
+        for _ in range(self.samples):
+            m = space.random_mapping(rng)
+            cost = cost_model.evaluate(space.problem, m, space.arch)
+            if tr.offer(m, cost):
+                stale = 0
+            else:
+                stale += 1
+                if self.patience and stale >= self.patience:
+                    break
+        return tr.result()

@@ -1,0 +1,274 @@
+"""Map-space definition, enumeration, sampling and mutation.
+
+The map-space of (problem, architecture, constraints) is the set of legal
+Union mappings. It is exponential/multiplicative (paper Sec. III-B3), so we
+provide:
+
+  * ``enumerate_tilings``  -- systematic divisor-chain enumeration with
+    early pruning (fanout, memory, constraints), capped;
+  * ``random_mapping``     -- uniform-ish rejection sampling with repair;
+  * ``mutate`` / ``crossover`` -- neighborhood operators shared by the
+    genetic and heuristic mappers.
+
+All mappers consume THIS interface, which is what makes them interchangeable
+across cost models (the paper's core interoperability claim).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import random
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.architecture import Architecture
+from repro.core.constraints import Constraints
+from repro.core.mapping import LevelMapping, Mapping
+from repro.core.problem import Problem
+
+
+def divisors(n: int) -> List[int]:
+    out = []
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            out.append(i)
+            if i != n // i:
+                out.append(n // i)
+        i += 1
+    return sorted(out)
+
+
+@dataclass
+class MapSpace:
+    problem: Problem
+    arch: Architecture
+    constraints: Optional[Constraints] = None
+
+    def __post_init__(self) -> None:
+        self.dims = list(self.problem.dims.keys())
+        self.n_levels = self.arch.n_levels
+        # spatial capability per mapping level: fanout of the child cluster
+        self.child_fanout = [
+            self.arch.clusters[i + 1].fanout if i + 1 < self.n_levels else 1
+            for i in range(self.n_levels)
+        ]
+        self._div_cache: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------ #
+    def _divs(self, n: int) -> List[int]:
+        if n not in self._div_cache:
+            self._div_cache[n] = divisors(n)
+        return self._div_cache[n]
+
+    def size_log10(self) -> float:
+        """Rough log10 of the number of tilings (ignoring orders)."""
+        total = 0.0
+        for d, s in self.problem.dims.items():
+            nd = len(self._divs(s))
+            total += 2 * self.n_levels * math.log10(max(nd, 1)) * 0.5
+        # loop orders per level
+        total += self.n_levels * math.log10(math.factorial(len(self.dims))) * 0.5
+        return total
+
+    # ------------------------------------------------------------------ #
+    # Chain representation: per dim, a tuple of 2n divisors
+    # (TT_0, ST_0, TT_1, ST_1, ..., TT_{n-1}, ST_{n-1}), nested:
+    # full >= TT_0 >= ST_0 >= TT_1 >= ... and each divides the previous.
+    # ------------------------------------------------------------------ #
+    def _chain_to_mapping(
+        self,
+        chains: Dict[str, Tuple[int, ...]],
+        orders: Optional[Sequence[Sequence[str]]] = None,
+    ) -> Mapping:
+        levels = []
+        for i, cl in enumerate(self.arch.clusters):
+            tt = {d: chains[d][2 * i] for d in self.dims}
+            st = {d: chains[d][2 * i + 1] for d in self.dims}
+            order = tuple(orders[i]) if orders else tuple(self.dims)
+            levels.append(LevelMapping(cl.name, order, tt, st))
+        return Mapping(levels, self.problem.name)
+
+    def _sample_chain(self, rng: random.Random, size: int, spatial_slots: List[bool]) -> Tuple[int, ...]:
+        """Sample one nested divisor chain for a dim of the given size."""
+        chain: List[int] = []
+        cur = size
+        for i in range(self.n_levels):
+            tt = rng.choice(self._divs(cur))
+            if spatial_slots[i]:
+                st = rng.choice(self._divs(tt))
+            else:
+                st = tt
+            if i == self.n_levels - 1:
+                st = tt  # innermost cannot parallelize
+            chain.extend((tt, st))
+            cur = st
+        return tuple(chain)
+
+    def random_mapping(self, rng: random.Random, max_tries: int = 200) -> Mapping:
+        """Rejection-sample a legal mapping (with spatial repair)."""
+        spatial_slots = [f > 1 for f in self.child_fanout]
+        for _ in range(max_tries):
+            chains = {}
+            for d in self.dims:
+                allowed_spatial = [
+                    spatial_slots[i]
+                    and (self.constraints is None
+                         or self.constraints._spatial_ok(self.arch.clusters[i].name, d))
+                    for i in range(self.n_levels)
+                ]
+                chains[d] = self._sample_chain(rng, self.problem.dims[d], allowed_spatial)
+            # repair: clamp per-level parallelism to child fanout
+            for i in range(self.n_levels):
+                par = math.prod(chains[d][2 * i] // chains[d][2 * i + 1] for d in self.dims)
+                while par > self.child_fanout[i]:
+                    cand = [d for d in self.dims if chains[d][2 * i] // chains[d][2 * i + 1] > 1]
+                    d = rng.choice(cand)
+                    c = list(chains[d])
+                    # grow ST toward TT by the smallest prime factor
+                    ratio = c[2 * i] // c[2 * i + 1]
+                    p = min(f for f in self._divs(ratio) if f > 1)
+                    newst = c[2 * i + 1] * p
+                    # rescale the rest of the chain below to keep nesting
+                    c[2 * i + 1] = newst
+                    for j in range(2 * i + 2, 2 * self.n_levels):
+                        c[j] = math.gcd(c[j], newst) if c[j] > newst else c[j]
+                        newst = c[j]
+                    chains[d] = tuple(c)
+                    par = math.prod(chains[d][2 * i] // chains[d][2 * i + 1] for d in self.dims)
+            orders = [list(self.dims) for _ in range(self.n_levels)]
+            for o in orders:
+                rng.shuffle(o)
+            if self.constraints is not None:
+                for i, cl in enumerate(self.arch.clusters):
+                    want = self.constraints.loop_orders.get(cl.name)
+                    if want:
+                        orders[i] = list(want) + [d for d in self.dims if d not in want]
+            m = self._chain_to_mapping(chains, orders)
+            if m.is_legal(self.problem, self.arch) and (
+                self.constraints is None or self.constraints.ok(m, self.problem, self.arch)
+            ):
+                return m
+        # guaranteed-legal fallback
+        return Mapping.trivial(self.problem, self.arch)
+
+    # ------------------------------------------------------------------ #
+    def enumerate_tilings(
+        self,
+        max_mappings: Optional[int] = None,
+        orders: str = "canonical",
+        rng: Optional[random.Random] = None,
+    ) -> Iterator[Mapping]:
+        """Systematic enumeration of legal tilings with early pruning.
+
+        ``orders``: 'canonical' uses the problem dim order at every level;
+        'sampled' draws one random order per tiling (cheap diversification).
+        """
+        rng = rng or random.Random(0)
+        spatial_slots = [f > 1 for f in self.child_fanout]
+
+        def chains_for_dim(d: str) -> List[Tuple[int, ...]]:
+            size = self.problem.dims[d]
+            results: List[Tuple[int, ...]] = []
+
+            def rec(cur: int, i: int, acc: List[int]) -> None:
+                if i == self.n_levels:
+                    results.append(tuple(acc))
+                    return
+                for tt in self._divs(cur):
+                    st_opts = self._divs(tt) if (spatial_slots[i] and i < self.n_levels - 1) else [tt]
+                    if self.constraints is not None and not self.constraints._spatial_ok(
+                        self.arch.clusters[i].name, d
+                    ):
+                        st_opts = [tt]
+                    for st in st_opts:
+                        if tt // st > self.child_fanout[i]:
+                            continue
+                        rec(st, i + 1, acc + [tt, st])
+
+            rec(size, 0, [])
+            return results
+
+        per_dim = {d: chains_for_dim(d) for d in self.dims}
+        count = 0
+        for combo in itertools.product(*(per_dim[d] for d in self.dims)):
+            chains = dict(zip(self.dims, combo))
+            # per-level fanout product prune
+            ok = True
+            for i in range(self.n_levels):
+                par = math.prod(chains[d][2 * i] // chains[d][2 * i + 1] for d in self.dims)
+                if par > self.child_fanout[i]:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            if orders == "sampled":
+                ordset = []
+                for _ in range(self.n_levels):
+                    o = list(self.dims)
+                    rng.shuffle(o)
+                    ordset.append(o)
+            else:
+                ordset = None
+            m = self._chain_to_mapping(chains, ordset)
+            if not m.is_legal(self.problem, self.arch):
+                continue
+            if self.constraints is not None and not self.constraints.ok(m, self.problem, self.arch):
+                continue
+            yield m
+            count += 1
+            if max_mappings is not None and count >= max_mappings:
+                return
+
+    # ------------------------------------------------------------------ #
+    # Neighborhood operators (used by genetic / heuristic mappers)
+    # ------------------------------------------------------------------ #
+    def mutate(self, mapping: Mapping, rng: random.Random, tries: int = 50) -> Mapping:
+        """Random small move: re-sample one dim's chain, or permute one order."""
+        for _ in range(tries):
+            m = Mapping.from_dict(mapping.to_dict())
+            move = rng.random()
+            if move < 0.3:
+                # permute a level's temporal order
+                i = rng.randrange(self.n_levels)
+                order = list(m.levels[i].temporal_order)
+                if len(order) >= 2:
+                    a, b = rng.sample(range(len(order)), 2)
+                    order[a], order[b] = order[b], order[a]
+                    m.levels[i].temporal_order = tuple(order)
+            else:
+                # re-sample one dim's chain
+                d = rng.choice(self.dims)
+                spatial_slots = [
+                    f > 1 and (self.constraints is None
+                               or self.constraints._spatial_ok(self.arch.clusters[i].name, d))
+                    for i, f in enumerate(self.child_fanout)
+                ]
+                chain = self._sample_chain(rng, self.problem.dims[d], spatial_slots)
+                for i in range(self.n_levels):
+                    m.levels[i].temporal_tile_sizes[d] = chain[2 * i]
+                    m.levels[i].spatial_tile_sizes[d] = chain[2 * i + 1]
+            if m.is_legal(self.problem, self.arch) and (
+                self.constraints is None or self.constraints.ok(m, self.problem, self.arch)
+            ):
+                return m
+        return mapping
+
+    def crossover(self, a: Mapping, b: Mapping, rng: random.Random, tries: int = 20) -> Mapping:
+        """Per-dim uniform crossover of tile chains; orders from either parent."""
+        for _ in range(tries):
+            m = Mapping.from_dict(a.to_dict())
+            for d in self.dims:
+                src = a if rng.random() < 0.5 else b
+                for i in range(self.n_levels):
+                    m.levels[i].temporal_tile_sizes[d] = src.levels[i].temporal_tile_sizes[d]
+                    m.levels[i].spatial_tile_sizes[d] = src.levels[i].spatial_tile_sizes[d]
+            for i in range(self.n_levels):
+                src = a if rng.random() < 0.5 else b
+                m.levels[i].temporal_order = src.levels[i].temporal_order
+            if m.is_legal(self.problem, self.arch) and (
+                self.constraints is None or self.constraints.ok(m, self.problem, self.arch)
+            ):
+                return m
+        return a

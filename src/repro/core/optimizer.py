@@ -1,0 +1,91 @@
+"""Union-opt (paper Sec. III-B): the end-to-end mapping optimizer.
+
+Given a problem (or a LayerOp to be lowered), a target architecture, a
+constraint file, a mapper choice and a cost-model choice, Union-opt:
+
+  1. runs the conformability pass for the chosen cost model,
+  2. builds the map-space,
+  3. searches it with the chosen mapper,
+  4. returns the best Union mapping + cost (+ the loop-nest rendering,
+     Fig. 5(e)/Fig. 9 style).
+
+This is the single entry point used by the case-study benchmarks AND by
+the sharding auto-tuner (repro/sharding/auto.py) that turns mappings into
+PartitionSpecs/BlockSpecs -- the co-design loop closure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Union as TUnion
+
+from repro.core.architecture import Architecture
+from repro.core.constraints import Constraints
+from repro.core.cost import MaestroLikeModel, TimeloopLikeModel, TPURooflineModel
+from repro.core.cost.base import Cost, CostModel
+from repro.core.ir.conformability import conformable_models
+from repro.core.ir.dialects import LayerOp
+from repro.core.ir.lowering import lower_layer_to_problem
+from repro.core.mappers import MAPPER_REGISTRY, Mapper
+from repro.core.mappers.base import SearchResult
+from repro.core.mapping import Mapping
+from repro.core.mapspace import MapSpace
+from repro.core.problem import Problem
+
+COST_MODEL_REGISTRY = {
+    "timeloop": TimeloopLikeModel,
+    "maestro": MaestroLikeModel,
+    "tpu_roofline": TPURooflineModel,
+}
+
+
+@dataclass
+class UnionSolution:
+    problem: Problem
+    mapping: Mapping
+    cost: Cost
+    search: SearchResult
+    mapper: str
+    cost_model: str
+    metric: str
+
+    def loop_nest(self) -> str:
+        return self.mapping.loop_nest_str(self.problem)
+
+
+def union_opt(
+    workload: TUnion[Problem, LayerOp],
+    arch: Architecture,
+    mapper: TUnion[str, Mapper] = "heuristic",
+    cost_model: TUnion[str, CostModel] = "timeloop",
+    metric: str = "edp",
+    constraints: Optional[Constraints] = None,
+    **mapper_kw,
+) -> UnionSolution:
+    problem = (
+        lower_layer_to_problem(workload) if isinstance(workload, LayerOp) else workload
+    )
+    cm = (
+        COST_MODEL_REGISTRY[cost_model]() if isinstance(cost_model, str) else cost_model
+    )
+    rep = conformable_models(problem, [cm])
+    ok, why = rep.results.get(cm.name, (cm.conformable(problem), "model check"))
+    if not ok:
+        raise ValueError(
+            f"problem {problem.name!r} is not conformable to cost model "
+            f"{cm.name!r}: {why}"
+        )
+    mp = MAPPER_REGISTRY[mapper](**mapper_kw) if isinstance(mapper, str) else mapper
+    space = MapSpace(problem, arch, constraints)
+    res = mp.search(space, cm, metric)
+    if res.best_mapping is None:
+        raise RuntimeError(f"mapper {mp.name} found no legal mapping for {problem.name}")
+    return UnionSolution(
+        problem=problem,
+        mapping=res.best_mapping,
+        cost=res.best_cost,
+        search=res,
+        mapper=mp.name,
+        cost_model=cm.name,
+        metric=metric,
+    )

@@ -1,0 +1,44 @@
+"""Pallas TPU kernels for the compute hot-spots, tiled by Union mappings.
+
+Each kernel directory has three files:
+  <name>.py -- the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    -- the jit'd public wrapper (padding, tile selection, vjp)
+  ref.py    -- the pure-jnp oracle the kernel is validated against
+
+The co-design closure (DESIGN.md Sec. 2): BlockSpec tile sizes are not
+hand-picked constants -- they come from a Union mapping of the operator's
+Problem onto the ``tpu_chip()`` cluster hierarchy (HBM -> grid-step ->
+VMEM+MXU), found by Union-opt under MXU-alignment constraints. Rule R3
+(tile footprint <= VMEM) makes every legal mapping a valid BlockSpec.
+
+``set_interpret(True)`` routes all kernels through interpret mode (Python
+execution of the kernel body) for CPU validation; on TPU leave it False.
+"""
+
+_INTERPRET = False
+_USE_PALLAS = False
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = bool(value)
+
+
+def interpret_default() -> bool:
+    return _INTERPRET
+
+
+def enable_pallas(value: bool = True, *, interpret: bool | None = None) -> None:
+    """Route model attention/SSD through the Pallas kernels.
+
+    On CPU pass interpret=True (kernel bodies execute in Python); on TPU
+    leave interpret unset/False for compiled kernels.
+    """
+    global _USE_PALLAS
+    _USE_PALLAS = bool(value)
+    if interpret is not None:
+        set_interpret(interpret)
+
+
+def pallas_enabled() -> bool:
+    return _USE_PALLAS

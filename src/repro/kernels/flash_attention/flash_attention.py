@@ -1,0 +1,155 @@
+"""Flash attention (causal / bidirectional, GQA-native) Pallas TPU kernel.
+
+Layout: q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D). Grid = (B, Hq, Sq/bq,
+Skv/bk) with the KV axis innermost; online-softmax running max / sum /
+accumulator live in VMEM scratch across the KV sweep.
+
+GQA is native: the K/V BlockSpec index_map folds the q-head onto its KV
+group (``h // group``), so KV heads are never materialized ``Hq/Hkv``
+times in HBM (the jnp reference path must ``jnp.repeat``; see
+models/layers.py).
+
+Causality is handled two ways, in Union mapping terms both at the C2
+grid level: fully-masked KV blocks are skipped via ``pl.when`` (no MXU
+work), and only diagonal blocks pay the element mask. A (1,1) SMEM
+``kv_len`` input masks the valid cache prefix for decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    kvlen_ref,  # (1, 2) SMEM: [valid KV prefix, q position offset]
+    q_ref,  # (1, 1, bq, d)
+    k_ref,  # (1, 1, bk, d)
+    v_ref,  # (1, 1, bk, dv)
+    o_ref,  # (1, 1, bq, dv)
+    m_ref,  # (bq, 128) f32 scratch -- running max (broadcast over lanes)
+    l_ref,  # (bq, 128) f32 scratch -- running denominator
+    acc_ref,  # (bq, dv) f32 scratch
+    *,
+    scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    n_kv: int,
+):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[0, 0]
+    q_offset = kvlen_ref[0, 1]
+    q_pos0 = q_offset + i * bq  # global position of this q block's first row
+
+    # Skip KV blocks that are entirely masked: block start beyond both the
+    # causal frontier and the valid cache prefix.
+    causal_live = (q_pos0 + bq - 1 >= j * bk) if causal else True
+    live = jnp.logical_and(causal_live, j * bk < kv_len)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0]  # (bq, d)
+        k = k_ref[0, 0]  # (bk, d)
+        v = v_ref[0, 0]  # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_pos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]  # (bq,)
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=1)
+        m_next = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_next)  # rescale factor for old state
+        p = jnp.exp(s - m_next[:, None])  # (bq, bk)
+        l_next = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_next[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_next[:, None], l_ref.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _flush():
+        l = l_ref[:, 0]
+        # fully-masked rows (decode padding) produce l == 0 -> emit zeros
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, Dv)
+    *,
+    causal: bool,
+    scale: float,
+    q_offset=0,  # int or traced scalar: global position of q[0]
+    kv_len: Optional[jnp.ndarray] = None,  # scalar int32; None => Skv
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, Dv = v.shape
+    assert Hq % Hkv == 0, f"GQA heads {Hq} % {Hkv} != 0"
+    group = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (
+        f"seq ({Sq},{Skv}) not divisible by blocks ({bq},{bk}); pad in ops"
+    )
+    grid = (B, Hq, Sq // bq, Skv // bk)
+    kvl = jnp.stack(
+        [
+            jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32),
+            jnp.asarray(q_offset, jnp.int32),
+        ]
+    ).reshape(1, 2)
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        bq=bq,
+        bk=bk,
+        n_kv=grid[3],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dv), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+        name="union_flash_attention",
+    )(kvl, q, k, v)

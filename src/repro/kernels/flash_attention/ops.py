@@ -1,0 +1,139 @@
+"""Public flash-attention op: (b,s,h,d) layout adapter, padding, decode path.
+
+Block sizes come from a Union mapping of the attention score Problem
+(einsum ``qd,kd->qk`` per head) onto ``tpu_chip()``: the C1 temporal tile
+(bq, bk) must satisfy rule R3 with the f32 score block + q/k/v/acc blocks
+resident -- same legality machinery as the matmul planner.
+
+Gradients: forward runs the Pallas kernel; backward recomputes through the
+jnp oracle (ref.py) under ``jax.vjp`` -- numerically identical math. A
+fused backward kernel is a further TPU optimization left on the table and
+recorded in EXPERIMENTS.md SPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as _cfg
+from repro.core.architecture import tpu_chip
+from repro.core.constraints import mxu_aligned
+from repro.core.optimizer import union_opt
+from repro.core.problem import Problem
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.lru_cache(maxsize=256)
+def plan_blocks(Sq: int, Skv: int, D: int) -> Tuple[int, int]:
+    """Union-opt the per-head score GEMM (Sq x Skv x D) for (bq, bk)."""
+    problem = Problem.from_einsum(
+        "attn_scores", "qd,kd->qk", {"q": Sq, "k": Skv, "d": D}, "GEMM"
+    )
+    cons = mxu_aligned(["q", "k"], 128)
+    try:
+        sol = union_opt(
+            problem, tpu_chip(vmem_tile_budget=8 * (1 << 20)),
+            mapper="heuristic", cost_model="timeloop",
+            metric="latency", constraints=cons, climb_steps=200,
+        )
+        leaf = sol.mapping.levels[-1]
+        bq, bk = leaf.tt("q"), leaf.tt("k")
+    except Exception:
+        bq = bk = 0
+
+    def _fix(b: int, dim: int, default: int) -> int:
+        if b >= 128 and dim % b == 0 and b <= 1024:
+            return b
+        d = min(default, dim)
+        while dim % d != 0:
+            d //= 2
+        return max(d, 1)
+
+    return _fix(bq, Sq, 512), _fix(bk, Skv, 512)
+
+
+# ------------------------------------------------------------------ #
+# custom-vjp core over the padded (B, H, S, D) layout.  ``meta`` is a
+# float32 (2,) array [kv_len, q_offset] so traced decode positions stay
+# differentiable-dtype (zero cotangent) without being static.
+# ------------------------------------------------------------------ #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _fa(q, k, v, meta, causal, scale, blocks, interpret):
+    bq, bk = blocks
+    return flash_attention_pallas(
+        q, k, v,
+        causal=causal, scale=scale,
+        q_offset=meta[1].astype(jnp.int32), kv_len=meta[0].astype(jnp.int32),
+        bq=bq, bk=bk, interpret=interpret,
+    )
+
+
+def _fa_fwd(q, k, v, meta, causal, scale, blocks, interpret):
+    return _fa(q, k, v, meta, causal, scale, blocks, interpret), (q, k, v, meta)
+
+
+def _fa_bwd(causal, scale, blocks, interpret, res, g):
+    q, k, v, meta = res
+    kvl = meta[0].astype(jnp.int32)
+    qo = meta[1].astype(jnp.int32)
+
+    def f(q, k, v):
+        return attention_ref(
+            q, k, v, causal=causal, scale=scale, q_offset=qo, kv_len=kvl
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, jnp.zeros_like(meta)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (b, Sq, hq, d) -- model layout (see models/layers.py)
+    k: jnp.ndarray,  # (b, Skv, hkv, d)
+    v: jnp.ndarray,  # (b, Skv, hkv, dv)
+    *,
+    causal: bool,
+    q_offset=0,
+    kv_len: Optional[jnp.ndarray] = None,
+    sm_scale: Optional[float] = None,
+    blocks: Optional[Tuple[int, int]] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Drop-in for models.layers.mha's math on TPU. Handles GQA natively
+    and pads Sq/Skv up to the block grid (padded KV is masked via kv_len)."""
+    interpret = _cfg.interpret_default() if interpret is None else interpret
+    b, Sq, hq, d = q.shape
+    _, Skv, hkv, dv = v.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    bq, bk = blocks or plan_blocks(_round_up(Sq, 128), _round_up(Skv, 128), d)
+    bq, bk = min(bq, _round_up(Sq, 8)), min(bk, _round_up(Skv, 8))
+    Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bk)
+    qt = jnp.swapaxes(q, 1, 2)  # (b, hq, Sq, d)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if Sqp != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skvp != Skv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    meta = jnp.stack(
+        [
+            jnp.asarray(Skv if kv_len is None else kv_len, jnp.float32),
+            jnp.asarray(q_offset, jnp.float32),
+        ]
+    )
+    out = _fa(qt, kt, vt, meta, causal, scale, (bq, bk), interpret)
+    return jnp.swapaxes(out[:, :, :Sq], 1, 2)  # (b, Sq, hq, dv)

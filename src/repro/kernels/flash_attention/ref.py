@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, Dv)
+    *,
+    causal: bool,
+    scale: float,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, Dv = v.shape
+    g = Hq // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with every key masked (decode padding): emit zeros like the kernel
+    any_live = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    return jnp.where(any_live, out, 0.0).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.matmul.ops import (  # noqa: F401
+    matmul,
+    plan_tiles,
+    tiles_from_mapping,
+)

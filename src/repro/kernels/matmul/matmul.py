@@ -1,0 +1,70 @@
+"""Union-tiled MXU matmul kernel.
+
+Grid = (M/bm, N/bn, K/bk) with K innermost (the revolving accumulator
+dimension). Per grid step the kernel multiplies a (bm, bk) x (bk, bn)
+VMEM-resident pair on the MXU, accumulating into an f32 VMEM scratch that
+is flushed to the output block on the last K step.
+
+In Union terms (DESIGN.md Sec. 2): the C2 "GridStep" level's temporal
+trips are the grid; the C1 "VMEM" level's temporal tile (bm, bn, bk) is
+the BlockSpec; legality rule R3 (footprint <= VMEM) is what makes the
+mapping compilable. ``ops.plan_tiles`` produces (bm, bn, bk) by running
+Union-opt on the GEMM Problem over the ``tpu_chip()`` hierarchy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    x: jnp.ndarray,  # (M, K)
+    y: jnp.ndarray,  # (K, N)
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shape ({M},{N},{K}) not divisible by tiles ({bm},{bn},{bk}); "
+        "pad in ops.matmul"
+    )
+    out_dtype = out_dtype or x.dtype
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        name="union_matmul",
+    )(x, y)

@@ -1,0 +1,126 @@
+"""Public matmul op: padding + Union tile planning + custom vjp.
+
+``plan_tiles(M, N, K)`` runs Union-opt (heuristic mapper x Timeloop-like
+cost model, MXU-aligned constraints) on the GEMM Problem over the
+``tpu_chip()`` hierarchy and reads the C1/VMEM-level temporal tile as the
+BlockSpec -- the paper's mapping IS the program (DESIGN.md Sec. 2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as _cfg
+from repro.core.architecture import tpu_chip
+from repro.core.constraints import mxu_aligned
+from repro.core.mapping import Mapping
+from repro.core.optimizer import union_opt
+from repro.core.problem import Problem
+from repro.kernels.matmul.matmul import matmul_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def tiles_from_mapping(mapping: Mapping, problem: Problem) -> Tuple[int, int, int]:
+    """Read (bm, bn, bk) from the innermost (VMEM) level temporal tile."""
+    leaf = mapping.levels[-1]
+    return leaf.tt("m"), leaf.tt("n"), leaf.tt("k")
+
+
+@functools.lru_cache(maxsize=512)
+def plan_tiles(
+    M: int, N: int, K: int, *, mapper: str = "heuristic", budget: int = 400
+) -> Tuple[int, int, int]:
+    """Union-opt the GEMM (M,N,K) onto one TPU chip; return (bm, bn, bk)."""
+    problem = Problem.gemm(M, N, K)
+    arch = tpu_chip()
+    cons = mxu_aligned(["m", "n", "k"], 128)
+    try:
+        sol = union_opt(
+            problem, arch, mapper=mapper, cost_model="timeloop",
+            metric="latency", constraints=cons, climb_steps=budget,
+        )
+        bm, bn, bk = tiles_from_mapping(sol.mapping, problem)
+    except Exception:
+        bm = bn = bk = 0
+    # fall back to safe MXU-aligned defaults if the mapper degenerated
+    # (e.g. trivial mapping with tile 1): clamp into [128, dim]
+    def _fix(b: int, dim: int, default: int) -> int:
+        if b >= 128 and dim % b == 0:
+            return b
+        d = min(default, dim)
+        while dim % d != 0:
+            d //= 2
+        return max(d, 1)
+
+    bm = _fix(bm, M, 256)
+    bn = _fix(bn, N, 256)
+    bk = _fix(bk, K, 512)
+    return bm, bn, bk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _matmul(x, y, tiles, out_dtype, interpret):
+    bm, bn, bk = tiles
+    return matmul_pallas(
+        x, y, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret
+    )
+
+
+def _matmul_fwd(x, y, tiles, out_dtype, interpret):
+    return _matmul(x, y, tiles, out_dtype, interpret), (x, y)
+
+
+def _matmul_bwd(tiles, out_dtype, interpret, res, g):
+    x, y = res
+    g = g.astype(x.dtype)
+    # dX = g @ Y^T ; dY = X^T @ g -- re-plan tiles for the transposed shapes
+    M, K = x.shape
+    _, N = y.shape
+    tx = plan_tiles(M, K, N)
+    ty = plan_tiles(K, N, M)
+    dx = _matmul(g, y.T, tx, x.dtype, interpret)
+    dy = _matmul(x.T, g, ty, y.dtype, interpret)
+    return dx, dy
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    tiles: Optional[Tuple[int, int, int]] = None,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Union-tiled matmul for arbitrary (even non-128-aligned) shapes.
+
+    Leading batch dims of ``x`` are flattened into M. Pads M/N/K up to
+    the tile grid and slices the result back.
+    """
+    interpret = _cfg.interpret_default() if interpret is None else interpret
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    K = x.shape[-1]
+    K2, N = y.shape
+    assert K == K2, f"matmul inner dim mismatch {K} vs {K2}"
+    x2 = x.reshape(M, K)
+    tiles = tiles or plan_tiles(_round_up(M, 128), _round_up(N, 128), _round_up(K, 128))
+    bm, bn, bk = tiles
+    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    if (Mp, Kp) != (M, K):
+        x2 = jnp.pad(x2, ((0, Mp - M), (0, Kp - K)))
+    yp = jnp.pad(y, ((0, Kp - K), (0, Np - N))) if (Kp, Np) != (K, N) else y
+    out = _matmul(x2, yp, (bm, bn, bk), out_dtype, interpret)
+    return out[:M, :N].reshape(*lead, N)

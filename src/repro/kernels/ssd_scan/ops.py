@@ -1,0 +1,126 @@
+"""Public chunked-SSD op: Pallas intra-chunk kernel + jnp inter-chunk scan.
+
+Signature matches models.ssm._ssd_chunked so the model can swap it in on
+TPU. ``plan_chunk`` sizes the chunk with the same Union R3 legality rule
+used by the matmul planner (cl*cl f32 scores + operands within VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as _cfg
+from repro.core.architecture import TPU_V5E
+from repro.kernels.ssd_scan.ssd_scan import ssd_intra_chunk_pallas
+
+
+@functools.lru_cache(maxsize=64)
+def plan_chunk(hp: int, n: int, vmem_budget: int = 8 * (1 << 20)) -> int:
+    """Largest power-of-two chunk cl with the kernel working set in VMEM:
+    cl*cl scores + L (2x) + cl*(hp + 2n + 2) operands, all f32."""
+    cl = 1024
+    while cl > 64:
+        ws = 4 * (2 * cl * cl + cl * (hp + 2 * n + 2) + n * hp)
+        if ws <= vmem_budget:
+            return cl
+        cl //= 2
+    return 64
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, l, nh, hp) dt-scaled inputs (f32 or bf16)
+    dA: jnp.ndarray,  # (b, l, nh)
+    B: jnp.ndarray,  # (b, l, nh, n)
+    C: jnp.ndarray,  # (b, l, nh, n)
+    chunk: Optional[int] = None,
+    init_state: Optional[jnp.ndarray] = None,  # (b, nh, hp, n)
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (b,l,nh,hp) f32, final_state (b,nh,hp,n) f32).
+
+    Differentiable: forward runs the Pallas intra-chunk kernel; backward
+    recomputes through the jnp oracle (ref.py) under ``jax.vjp``.
+    """
+    interpret = _cfg.interpret_default() if interpret is None else interpret
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    chunk = chunk or min(plan_chunk(hp, n), l)
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, nh, hp, n), jnp.float32)
+    )
+    return _ssd(x, dA, B, C, s0, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dA, B, C, s0, chunk, interpret):
+    return _ssd_impl(x, dA, B, C, s0, chunk, interpret)
+
+
+def _ssd_fwd(x, dA, B, C, s0, chunk, interpret):
+    return _ssd(x, dA, B, C, s0, chunk, interpret), (x, dA, B, C, s0)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    from repro.kernels.ssd_scan.ref import ssd_chunked_ref
+
+    x, dA, B, C, s0 = res
+    _, vjp = jax.vjp(
+        lambda *a: ssd_chunked_ref(*a[:4], chunk=chunk, init_state=a[4]),
+        x, dA, B, C, s0,
+    )
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def _ssd_impl(
+    x, dA, B, C, init_state, chunk, interpret
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    chunk = chunk or min(plan_chunk(hp, n), l)
+    assert l % chunk == 0, f"seq {l} % chunk {chunk} != 0"
+    nc = l // chunk
+
+    # (b, l, nh, *) -> (b, nh, nc, cl, *): head-major so each grid step is
+    # one contiguous (cl, *) VMEM block
+    def to_blocks(t, feat):
+        t = t.astype(jnp.float32)
+        if feat:
+            return t.reshape(b, nc, chunk, nh, -1).transpose(0, 3, 1, 2, 4)
+        return t.reshape(b, nc, chunk, nh).transpose(0, 3, 1, 2)
+
+    xb, dab = to_blocks(x, True), to_blocks(dA, False)
+    bb, cb = to_blocks(B, True), to_blocks(C, True)
+
+    y_diag, S_c, dte = ssd_intra_chunk_pallas(xb, dab, bb, cb, interpret=interpret)
+
+    # inter-chunk recurrence (cheap, O(nc) elementwise+add)
+    chunk_decay = dte[:, :, :, -1]  # (b, nh, nc) = exp(full-chunk decay)
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, nh, hp, n), jnp.float32)
+    )
+
+    def step(S_prev, inp):
+        S_new, dec = inp  # (b, nh, n, hp), (b, nh)
+        S_next = S_prev * dec[:, :, None, None] + S_new
+        return S_next, S_prev  # emit the state ENTERING this chunk
+
+    xs = (S_c.transpose(2, 0, 1, 3, 4), chunk_decay.transpose(2, 0, 1))
+    final_nhp, S_in = jax.lax.scan(step, s0.transpose(0, 1, 3, 2), xs)
+    S_in = S_in.transpose(1, 2, 0, 3, 4)  # (b, nh, nc, n, hp)
+
+    # inter-chunk contribution: y_off[l] = (C_l . S_in) * exp(cum_l)
+    y_off = jnp.einsum("bhcln,bhcnp,bhcl->bhclp", cb, S_in, dte)
+    y = (y_diag + y_off).transpose(0, 2, 3, 1, 4).reshape(b, l, nh, hp)
+    return y, final_nhp.transpose(0, 1, 3, 2)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the chunked SSD scan (standalone; also cross-checked
+against models.ssm._ssd_chunked and the O(1)-state recurrence in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def ssd_recurrent_ref(
+    x: jnp.ndarray,  # (b, l, nh, hp) dt-scaled inputs
+    dA: jnp.ndarray,  # (b, l, nh) log decay per step
+    B: jnp.ndarray,  # (b, l, nh, n)
+    C: jnp.ndarray,  # (b, l, nh, n)
+    init_state: Optional[jnp.ndarray] = None,  # (b, nh, hp, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token recurrence: S_t = exp(dA_t) S_{t-1} + x_t B_t^T;
+    y_t = S_t C_t. The slowest, most obviously-correct form."""
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    S = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, nh, hp, n), jnp.float32)
+    )
+    ys = []
+    for t in range(l):
+        S = S * jnp.exp(dA[:, t].astype(jnp.float32))[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x[:, t].astype(jnp.float32), B[:, t].astype(jnp.float32)
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", S, C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1), S
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked_ref(
+    x: jnp.ndarray,  # (b, l, nh, hp)
+    dA: jnp.ndarray,  # (b, l, nh)
+    B: jnp.ndarray,  # (b, l, nh, n)
+    C: jnp.ndarray,  # (b, l, nh, n)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunkwise-parallel form, mathematically equal to ssd_recurrent_ref."""
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    xr = x.reshape(b, nc, chunk, nh, hp).astype(jnp.float32)
+    dAr = dA.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, nh, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, nh, n).astype(jnp.float32)
+
+    Lmat = jnp.exp(_segsum(dAr.transpose(0, 1, 3, 2)))  # (b, nc, nh, cl, cl)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * Lmat, xr)
+
+    cum = jnp.cumsum(dAr, axis=2)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    S_c = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Br, decay_to_end, xr)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+    S = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, nh, hp, n), jnp.float32)
+    )
+    S_ins = []
+    for c in range(nc):
+        S_ins.append(S)
+        S = S * chunk_decay[:, c][:, :, None, None] + S_c[:, c]
+    S_in = jnp.stack(S_ins, axis=1)  # (b, nc, nh, hp, n)
+
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cr, S_in, jnp.exp(cum))
+    return (y_diag + y_off).reshape(b, l, nh, hp), S

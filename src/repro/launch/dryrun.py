@@ -1,0 +1,341 @@
+import os
+# constant_folding: avoids minute-long folds of huge iota/broadcast consts.
+# convert-mover: stops XLA from widening the bf16 scan-residual stacks to
+# f32 (it hoists the f32 converts that rms_norm applies into the
+# dynamic-update-slice that saves the per-unit carry, doubling its bytes).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=constant_folding,convert-mover"
+)
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, lower + compile the cell's
+step function for the single-pod 16x16 mesh AND the 2x16x16 multi-pod
+mesh, record memory_analysis() (fits-in-HBM proof), cost_analysis()
+(per-device FLOPs/bytes for the roofline), and the collective schedule
+parsed from compiled HLO. Artifacts go to experiments/dryrun/*.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --jobs-file cells.txt  # subset
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, runnable_cells
+from repro.models import model as model_mod
+from repro.launch.hloparse import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.sharding.specs import ShardingRules
+
+HBM_PER_CHIP = 16 * (1 << 30)
+
+
+def _sharded_nbytes(struct_tree, sharding_tree, sizes) -> int:
+    """Exact per-device bytes of a pytree of ShapeDtypeStructs under the
+    given NamedShardings (division by the mesh-axis product per leaf)."""
+    total = 0
+    structs = jax.tree.leaves(struct_tree)
+    shards = jax.tree.leaves(
+        sharding_tree, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)
+    )
+    for s, sh in zip(structs, shards):
+        div = 1
+        spec = sh.spec if hasattr(sh, "spec") else None
+        if spec is not None:
+            for entry in spec:
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    div *= sizes.get(ax, 1)
+        total += (s.size * s.dtype.itemsize) // max(1, div)
+    return total
+
+
+def analytic_memory(arch: str, shape_name: str, mesh, args, in_sh,
+                    microbatches: int = 1, rules=None) -> dict:
+    """TPU-dtype-correct per-chip memory estimate. The CPU backend's
+    float-normalization pass widens bf16 while-loop buffers to f32, so
+    memory_analysis() OVERSTATES TPU residency; this estimate keeps bf16
+    at 2 bytes and adds the activation terms analytically."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = math.prod(sizes.get(a, 1) for a in ("pod", "data"))
+    tp = sizes.get("model", 1)
+    args_bytes = sum(_sharded_nbytes(a, s, sizes) for a, s in zip(args, in_sh))
+    B, S, d, V = shape.global_batch, shape.seq_len, cfg.d_model, cfg.vocab
+    tok_local = B * S // dp
+    act = 0
+    def score_chunk_bytes(factor: int) -> int:
+        # mirrors models.layers._auto_q_chunk: the q-chunk shrinks until the
+        # f32 score chunk fits per-chip (llava: 56 heads unshardable on 16)
+        hq_loc = max(1, cfg.n_heads // tp) if cfg.n_heads % tp == 0 else cfg.n_heads
+        b_loc = B // dp if B % dp == 0 else B
+        qc = min(1024, S)
+        while qc > 128 and b_loc * qc * S * hq_loc * 4 > (1 << 31):
+            qc //= 2
+        return factor * max(1, b_loc) * qc * S * hq_loc * 4
+
+    if shape.kind == "train":
+        mb = max(1, microbatches)
+        n_units = (cfg.n_layers - cfg.first_k_dense) // len(cfg.block_pattern)
+        sp = tp if (S // 1) % tp == 0 else 1
+        act += n_units * (B // min(B, dp)) * (B * S * d // (dp * sp) // (B // min(B, dp))) * 2 // mb  # carry stack bf16
+        act += 2 * tok_local * max(1, V // tp) * 4 // mb  # fwd+bwd f32 logits
+        act += score_chunk_bytes(2) // mb
+        if mb > 1:  # f32 gradient accumulator (sharded like the params)
+            act += cfg.num_params() * 4 // (dp * tp)
+        if rules is not None and getattr(rules, "remat_policy", "full") == "save_block_outputs":
+            # saved per-block residual contributions (bf16, seq-sharded)
+            act += cfg.n_layers * (B * S // (dp * sp)) * d * 2 // mb
+    elif shape.kind == "prefill":
+        sp = tp if (B * S) % (dp * tp) == 0 else 1  # sequence sharding
+        act += 12 * tok_local // sp * d * 2
+        act += score_chunk_bytes(2)
+        act += tok_local * max(1, V // tp) * 2
+    else:  # decode
+        act += 4 * (B // min(B, dp)) * max(1, V // tp) * 4
+    total = args_bytes + act
+    return {
+        "args_bytes": int(args_bytes),
+        "activation_bytes": int(act),
+        "total_bytes": int(total),
+        "fits_hbm": bool(total <= HBM_PER_CHIP),
+    }
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token / sequence
+
+
+def corrected_costs(arch: str, shape_name: str, mesh, rules, remat: bool) -> dict:
+    """Structure-corrected per-device FLOPs/bytes/collectives.
+
+    XLA's ``cost_analysis()`` counts a while-loop body ONCE, not x trips,
+    so the scanned unit stack is undercounted by ~n_units. Fix: compile
+    the SAME cell at 1 and 2 scanned units with the scan fully unrolled
+    (trip count 1 -> body counted exactly), then extrapolate linearly:
+
+        cost(N) = cost(u1) + (N - 1) * (cost(u2) - cost(u1))
+
+    The prefix (first_k_dense), embedding, head, loss, and batch-dependent
+    terms live in cost(u1); the per-unit compute/bytes/collectives
+    (including the per-unit gradient all-reduce) are the slope. Linearity
+    holds because units are structurally identical.
+    """
+    cfg = get_config(arch)
+    pat = len(cfg.block_pattern)
+    n_units = (cfg.n_layers - cfg.first_k_dense) // pat
+    shape = SHAPES[shape_name]
+    donate = {"train": (0,), "decode": (1,), "prefill": ()}[shape.kind]
+    meas = {}
+    for u in (1, 2):
+        cfg_u = dataclasses.replace(cfg, n_layers=cfg.first_k_dense + pat * u)
+        model_mod.set_scan_unroll(u)
+        try:
+            fn, args, in_sh, out_sh = build_cell(
+                arch, shape_name, mesh, rules, remat=remat, cfg=cfg_u
+            )
+            with mesh:
+                compiled = jax.jit(
+                    fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=donate,
+                ).lower(*args).compile()
+                ca = compiled.cost_analysis() or {}
+                colls = parse_collectives(compiled.as_text())
+        finally:
+            model_mod.set_scan_unroll(1)
+        meas[u] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": colls.row(),
+        }
+
+    def extrap(a1, a2):
+        return a1 + (n_units - 1) * max(0.0, a2 - a1)
+
+    coll = {
+        k: extrap(meas[1]["coll"][k], meas[2]["coll"][k])
+        for k in meas[1]["coll"]
+    }
+    return {
+        "method": "scan-body linear extrapolation (u=1,2 unrolled)",
+        "n_units": n_units,
+        "flops_per_device": extrap(meas[1]["flops"], meas[2]["flops"]),
+        "bytes_per_device": extrap(meas[1]["bytes"], meas[2]["bytes"]),
+        "collective_bytes_per_device": coll["collective_bytes"],
+        "collectives": coll,
+        "raw_u1": meas[1],
+        "raw_u2": meas[2],
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
+             out_dir: Path = Path("experiments/dryrun"), remat: bool = True,
+             tag: str = "") -> dict:
+    rules = rules or ShardingRules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    cell_name = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    t0 = time.time()
+    # auto-pick the microbatch count: the smallest power of two whose
+    # TPU-dtype-analytic residency fits HBM (the 110B train cell needs 2)
+    microbatches = 1
+    while SHAPES[shape_name].kind == "train" and microbatches < 8:
+        fn, args, in_sh, out_sh = build_cell(
+            arch, shape_name, mesh, rules, remat=remat, microbatches=microbatches
+        )
+        if analytic_memory(arch, shape_name, mesh, args, in_sh,
+                           microbatches, rules)["fits_hbm"]:
+            break
+        microbatches *= 2
+    fn, args, in_sh, out_sh = build_cell(
+        arch, shape_name, mesh, rules, remat=remat, microbatches=microbatches
+    )
+    # donate the large carried aggregate (train state / decode cache) so the
+    # output aliases the input instead of doubling residency
+    donate = {"train": (0,), "decode": (1,), "prefill": ()}[SHAPES[shape_name].kind]
+    with mesh:
+        lowered = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    corrected = corrected_costs(arch, shape_name, mesh, rules, remat)
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    per_dev_bytes = (
+        int(getattr(mem, "argument_size_in_bytes", 0))
+        + int(getattr(mem, "output_size_in_bytes", 0))
+        - int(getattr(mem, "alias_size_in_bytes", 0))
+        + int(getattr(mem, "temp_size_in_bytes", 0))
+    )
+    art = {
+        "cell": cell_name,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "multi_pod": multi_pod,
+        "tag": tag,
+        # raw cost_analysis numbers (scan body counted once -- see
+        # corrected_costs docstring); `corrected` holds the roofline inputs
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": colls.total_link_bytes,
+        "collectives": colls.row(),
+        "corrected": corrected,
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_per_device": per_dev_bytes,
+            "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+        },
+        "memory_tpu_analytic": analytic_memory(
+            arch, shape_name, mesh, args, in_sh, microbatches, rules
+        ),
+        "microbatches": microbatches,
+        "model_flops": model_flops(arch, shape_name),
+        "hlo_lines": hlo.count("\n"),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_name}.json").write_text(json.dumps(art, indent=2))
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rules", default="", help="comma list of ShardingRules "
+                    "overrides, e.g. 'fsdp_only=true,dp_over_pod=false'")
+    args = ap.parse_args()
+
+    rules = ShardingRules()
+    if args.rules:
+        import dataclasses as _dc
+
+        kv = {}
+        for item in args.rules.split(","):
+            k, v = item.split("=")
+            kv[k] = {"true": True, "false": False}.get(v.lower(), v)
+        rules = _dc.replace(rules, **kv)
+
+    cells = runnable_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    out_dir = Path(args.out)
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            cell = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+            if args.skip_existing and (out_dir / f"{cell}.json").exists():
+                print(f"SKIP {cell} (exists)", flush=True)
+                continue
+            try:
+                t0 = time.time()
+                art = run_cell(arch, shape, mp, rules=rules, out_dir=out_dir,
+                               remat=not args.no_remat, tag=args.tag)
+                n_ok += 1
+                print(
+                    f"OK   {cell}: flops/dev={art['flops_per_device']:.3e} "
+                    f"bytes/dev={art['bytes_per_device']:.3e} "
+                    f"coll/dev={art['collective_bytes_per_device']:.3e} "
+                    f"peak={art['memory']['peak_per_device']/2**30:.2f}GiB "
+                    f"tpu_est={art['memory_tpu_analytic']['total_bytes']/2**30:.2f}GiB "
+                    f"fits={art['memory_tpu_analytic']['fits_hbm']} "
+                    f"({time.time()-t0:.0f}s)",
+                    flush=True,
+                )
+            except Exception as e:
+                n_fail += 1
+                print(f"FAIL {cell}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Parse compiled HLO text for collective traffic (the roofline's third term).
+
+``cost_analysis()`` does not expose collective bytes, so we sum the output
+array sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the (SPMD, per-device) compiled module and apply the
+standard ring-algorithm byte conventions per collective type:
+
+  all-gather        bytes_out x (n-1)/n      (each device receives the rest)
+  all-reduce        bytes    x 2(n-1)/n      (reduce-scatter + all-gather)
+  reduce-scatter    bytes_in x (n-1)/n  == bytes_out x (n-1)
+  all-to-all        bytes    x (n-1)/n
+  collective-permute bytes_out              (one hop)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    raw_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    link_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+    def row(self) -> Dict[str, float]:
+        out = {"collective_bytes": self.total_link_bytes}
+        for k in _COLLECTIVES:
+            out[f"{k}_count"] = self.counts.get(k, 0)
+            out[f"{k}_bytes"] = self.link_bytes.get(k, 0.0)
+        return out
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum byte sizes of all arrays in an HLO result type string."""
+    total = 0.0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        _ngroups, gsize, _total = map(int, m.groups())
+        return max(1, gsize)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=\s]+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or opname.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        if opname.endswith("-done"):
+            continue  # the -start op carries the shape
+        bytes_out = _shape_bytes(result_type)
+        if bytes_out <= 0:
+            # fallback: scan full line's result section
+            bytes_out = _shape_bytes(ls.split("=", 1)[1].split("(", 1)[0])
+        n = _group_size(ls, default_group)
+        if base == "all-gather":
+            link = bytes_out * (n - 1) / max(1, n)
+        elif base == "all-reduce":
+            link = bytes_out * 2 * (n - 1) / max(1, n)
+        elif base == "reduce-scatter":
+            link = bytes_out * (n - 1)
+        elif base == "all-to-all":
+            link = bytes_out * (n - 1) / max(1, n)
+        else:  # collective-permute
+            link = bytes_out
+        stats.counts[base] += 1
+        stats.raw_bytes[base] += bytes_out
+        stats.link_bytes[base] += link
+    return stats

@@ -1,0 +1,46 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target mesh: one v5e pod = 16x16 = 256 chips (data, model);
+    multi-pod = 2 pods x 256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(jax.devices())} "
+            "(the dry-run must set --xla_force_host_platform_device_count "
+            "BEFORE importing jax)"
+        )
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh for elastic re-configuration / debug runs."""
+    need = int(np.prod(shape))
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(f"mesh {tuple(shape)} needs {need} devices")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(tuple(shape)), tuple(axes))
+
+
+def make_host_mesh():
+    """Single-host debug mesh over all visible devices: (data=N, model=1)."""
+    n = len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,147 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell -- weak-type-correct, shardable, no device allocation.
+Also assembles the full dry-run cell: (fn, args, in/out shardings)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config
+from repro.launch import steps as steps_mod
+from repro.models import init_cache, init_params
+from repro.optim.optimizers import adamw
+from repro.sharding.hints import hints_from_mesh
+from repro.sharding.specs import (
+    ShardingRules,
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    named,
+    param_specs,
+    state_specs,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStructs for one global batch of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        return {
+            "frames": SDS((B, S, cfg.d_frontend), jnp.bfloat16),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        n_img = cfg.n_frontend_tokens
+        return {
+            "tokens": SDS((B, S - n_img), jnp.int32),
+            "patch_embeds": SDS((B, n_img, cfg.d_frontend), jnp.bfloat16),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def state_struct(cfg: ModelConfig, optimizer=None):
+    optimizer = optimizer or adamw(1e-4)
+    init = steps_mod.make_init_state(cfg, optimizer)
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def input_specs(arch: str, shape_name: str, optimizer=None) -> Dict:
+    """All inputs of the cell's step function, as ShapeDtypeStructs."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return {
+            "params": params_struct(cfg),
+            "cache": cache_struct(cfg, shape),
+            "tokens": SDS((shape.global_batch, 1), jnp.int32),
+            "pos": SDS((), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"params": params_struct(cfg), "batch": batch_struct(cfg, shape)}
+    return {"state": state_struct(cfg, optimizer), "batch": batch_struct(cfg, shape)}
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    rules: ShardingRules = ShardingRules(),
+    *,
+    remat: bool = True,
+    cfg: ModelConfig | None = None,
+    microbatches: int = 1,
+):
+    """Returns (fn, args_tuple, in_shardings, out_shardings) ready for
+    jax.jit(...).lower(*args). ``cfg`` overrides the registry config (used
+    by the dry-run's reduced-depth cost-correction compiles);
+    ``microbatches`` enables gradient accumulation for train cells."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    hints_from_mesh(mesh, rules)  # activation sharding constraints at trace time
+    optimizer = adamw(1e-4)
+    if shape.kind == "train":
+        fn = steps_mod.make_train_step(
+            cfg, optimizer, remat=remat, microbatches=microbatches,
+            remat_policy=getattr(rules, "remat_policy", "full"),
+        )
+        state = state_struct(cfg, optimizer)
+        batch = batch_struct(cfg, shape)
+        st_specs = state_specs(state, cfg, mesh, rules)
+        b_specs = batch_specs(cfg, shape, mesh, rules)
+        in_sh = (named(st_specs, mesh), named(b_specs, mesh))
+        out_sh = (named(st_specs, mesh), named({"loss": P(), "step": P()}, mesh))
+        return fn, (state, batch), in_sh, out_sh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = dp_axes(mesh, rules)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes.get(a, 1)
+    # divisibility guards: batch=1 long-context cells replicate the batch
+    # axis; hubert's vocab=504 cannot shard over a 16-way model axis
+    bdp = dp if (dp and shape.global_batch % dp_total == 0) else None
+    v_ax = rules.tp_axis if cfg.vocab % sizes.get(rules.tp_axis, 1) == 0 else None
+    if shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg)
+        params = params_struct(cfg)
+        batch = batch_struct(cfg, shape)
+        p_specs = param_specs(params, cfg, mesh, rules, for_training=False)
+        b_specs = batch_specs(cfg, shape, mesh, rules)
+        in_sh = (named(p_specs, mesh), named(b_specs, mesh))
+        out_sh = named(P(bdp, v_ax), mesh)
+        return fn, (params, batch), in_sh, out_sh
+    # decode
+    fn = steps_mod.make_serve_step(cfg)
+    params = params_struct(cfg)
+    cache = cache_struct(cfg, shape)
+    p_specs = param_specs(params, cfg, mesh, rules, for_training=False)
+    c_specs = cache_specs(cache, cfg, mesh, rules)
+    tok_spec = P(bdp, None)
+    in_sh = (
+        named(p_specs, mesh),
+        named(c_specs, mesh),
+        named(tok_spec, mesh),
+        named(P(), mesh),
+    )
+    out_sh = (named(tok_spec, mesh), named(c_specs, mesh))
+    tokens = SDS((shape.global_batch, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return fn, (params, cache, tokens, pos), in_sh, out_sh

@@ -1,0 +1,96 @@
+"""Step functions: train_step / serve_step, shared by the real drivers
+(train.py / serve.py) and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, init_params, loss_fn, forward
+from repro.optim.optimizers import Optimizer
+
+
+def make_init_state(cfg: ModelConfig, optimizer: Optimizer):
+    def init_state(key):
+        params = init_params(cfg, key)
+        return {"params": params, "opt": optimizer.init(params)}
+
+    return init_state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    remat: bool = True,
+    microbatches: int = 1,
+    remat_policy: str = "full",
+):
+    """One optimizer step. ``microbatches > 1`` = gradient accumulation:
+    the global batch is split along axis 0 and scanned, with f32 grad
+    accumulators -- the standard memory/throughput knob for big cells."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat, remat_policy=remat_policy)
+        )(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            l, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                assert x.shape[0] % microbatches == 0, (
+                    f"batch {x.shape[0]} % microbatches {microbatches} != 0"
+                )
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, b):
+                loss_acc, g_acc = carry
+                l, g = grads_of(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches, g_acc, g
+                )
+                return (loss_acc + l / microbatches, g_acc), None
+
+            (l, grads), _ = jax.lax.scan(body, (jnp.zeros(()), acc0), mb)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": l, "step": new_opt["step"]}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return loss_fn(cfg, params, batch, remat=False)
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward over the full prompt (logits of the last position)."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch, remat=False)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True):
+    """One decode step: new token given a KV/SSM cache of seq_len tokens."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(cfg, params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    return serve_step

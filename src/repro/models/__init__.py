@@ -1,0 +1,10 @@
+"""Model substrate: composable JAX model definitions for all assigned
+architecture families (dense / moe / hybrid / ssm / vlm / audio)."""
+
+from repro.models.model import (  # noqa: F401
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+)

@@ -1,0 +1,418 @@
+"""SSM / recurrent blocks: Mamba-2 (SSD), mLSTM and sLSTM (xLSTM).
+
+Training uses chunkwise-parallel forms (O(L) in sequence, MXU-friendly
+intra-chunk einsums); decoding uses O(1)-state recurrent steps. The
+chunkwise SSD intra-chunk contraction is the Pallas kernel target
+(repro/kernels/ssd_scan); this module is the pure-jnp reference path that
+the kernel is validated against, and the default path on CPU.
+
+Stability notes: all gate math is f32; mLSTM uses the xLSTM exponential-
+gating stabilizer (carried max-state m) in its chunkwise form, and the
+property tests check chunked == recurrent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DTYPE, dense, init_dense, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ===================================================================== #
+# shared helpers
+# ===================================================================== #
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (j<=i).
+
+    x: (..., L) -> (..., L, L) lower-triangular log-decay matrix.
+    """
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, L, C), w: (W, C), b: (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def conv_step(conv_state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """One causal-conv step. conv_state: (B, W-1, C); x_t: (B, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b
+    return window[:, 1:, :], y
+
+
+# ===================================================================== #
+# Mamba-2 (SSD)
+# ===================================================================== #
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    """Projections are kept SEPARATE (z / x / B / C / dt) rather than one
+    fused in_proj so each piece has a clean GSPMD sharding: x/z column-
+    sharded over 'model' (head-parallel), B/C replicated (shared across
+    heads within a group), dt head-sharded."""
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": init_dense(ks[0], d, di),
+        "in_x": init_dense(ks[1], d, di),
+        "in_B": init_dense(ks[2], d, g * n),
+        "in_C": init_dense(ks[3], d, g * n),
+        "in_dt": init_dense(ks[4], d, nh),
+        "conv_x_w": (jax.random.normal(ks[5], (cfg.conv_width, di), jnp.float32) * 0.1).astype(DTYPE),
+        "conv_x_b": jnp.zeros((di,), DTYPE),
+        "conv_B_w": (jax.random.normal(ks[6], (cfg.conv_width, g * n), jnp.float32) * 0.1).astype(DTYPE),
+        "conv_B_b": jnp.zeros((g * n,), DTYPE),
+        "conv_C_w": (jax.random.normal(ks[7], (cfg.conv_width, g * n), jnp.float32) * 0.1).astype(DTYPE),
+        "conv_C_b": jnp.zeros((g * n,), DTYPE),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), DTYPE),
+        "out_proj": init_dense(ks[0], di, d),
+    }
+
+
+def _ssd_chunked(
+    x: jnp.ndarray,  # (b, l, nh, hp)  (already includes dt scaling)
+    dA: jnp.ndarray,  # (b, l, nh)      log decay per step (<= 0)
+    B: jnp.ndarray,  # (b, l, nh, n)
+    C: jnp.ndarray,  # (b, l, nh, n)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (b, nh, hp, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunkwise SSD (Mamba-2 minimal). Returns (y, final_state)."""
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, f"seq {l} % chunk {chunk} != 0"
+    nc = l // chunk
+    xr = x.reshape(b, nc, chunk, nh, hp).astype(jnp.float32)
+    dAr = dA.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, nh, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, nh, n).astype(jnp.float32)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dAr.transpose(0, 1, 3, 2)))  # (b, nc, nh, cl, cl)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Lmat, xr.transpose(0, 1, 2, 3, 4))
+
+    # chunk-final states: S_c = sum_j exp(cum_end - cum_j) B_j x_j^T
+    cum = jnp.cumsum(dAr, axis=2)  # (b, nc, cl, nh)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, cl, nh)
+    S_c = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Br, decay_to_end, xr)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, nh)
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, nh, hp, n), jnp.float32)
+    )
+
+    def step(carry, inp):
+        S_prev = carry
+        S_new, dec = inp  # (b, nh, hp, n), (b, nh)
+        S_next = S_prev * dec[:, :, None, None] + S_new
+        return S_next, S_prev  # emit the state ENTERING this chunk
+
+    xs = (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    final, S_in = jax.lax.scan(step, s0, xs)
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (b, nc, nh, hp, n)
+
+    # inter-chunk contribution: y_off_i = (C_i . S_in) * exp(cum_i)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cr, S_in, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, l, nh, hp)
+    return y, final
+
+
+def mamba2_apply(
+    p: Params,
+    cfg: ModelConfig,
+    u: jnp.ndarray,  # (b, L, d)
+    cache: Optional[Params] = None,  # {"conv": (b,W-1,convdim), "state": (b,nh,hp,n)}
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, L, d = u.shape
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    hp = cfg.ssm_head_dim
+    z = dense(p["in_z"], u)
+    xs_r = dense(p["in_x"], u)
+    B_r = dense(p["in_B"], u)
+    C_r = dense(p["in_C"], u)
+    dt_raw = dense(p["in_dt"], u)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+
+    new_cache = None
+    if cache is None:
+        xs = jax.nn.silu(causal_conv1d(xs_r, p["conv_x_w"], p["conv_x_b"]))
+        B = jax.nn.silu(causal_conv1d(B_r, p["conv_B_w"], p["conv_B_b"]))
+        C = jax.nn.silu(causal_conv1d(C_r, p["conv_C_w"], p["conv_C_b"]))
+        xh = xs.reshape(b, L, nh, hp)
+        Bh = jnp.repeat(B.reshape(b, L, g, n), nh // g, axis=2)
+        Ch = jnp.repeat(C.reshape(b, L, g, n), nh // g, axis=2)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,L,nh)
+        from repro import kernels as _k
+        if _k.pallas_enabled():
+            from repro.kernels.ssd_scan import ssd_chunked as _ssd_fast
+            y, _ = _ssd_fast(
+                xh.astype(jnp.float32) * dt[..., None], dt * A, Bh, Ch,
+                chunk=min(chunk, L),
+            )
+        else:
+            y, _ = _ssd_chunked(
+                xh.astype(jnp.float32) * dt[..., None], dt * A, Bh, Ch,
+                chunk=min(chunk, L),
+            )
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    else:
+        # single-token recurrent step; L == 1
+        conv_x, x_t = conv_step(cache["conv_x"], xs_r[:, 0], p["conv_x_w"], p["conv_x_b"])
+        conv_B, B_t = conv_step(cache["conv_B"], B_r[:, 0], p["conv_B_w"], p["conv_B_b"])
+        conv_C, C_t = conv_step(cache["conv_C"], C_r[:, 0], p["conv_C_w"], p["conv_C_b"])
+        x_t, B_t, C_t = jax.nn.silu(x_t), jax.nn.silu(B_t), jax.nn.silu(C_t)
+        xh = x_t.reshape(b, nh, hp).astype(jnp.float32)
+        Bh = jnp.repeat(B_t.reshape(b, g, n), nh // g, axis=1).astype(jnp.float32)
+        Ch = jnp.repeat(C_t.reshape(b, g, n), nh // g, axis=1).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+        dA = jnp.exp(dt * A)  # (b,nh)
+        state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt, xh, Bh
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xh * p["D"][None, :, None]
+        y = y[:, None]  # (b, 1, nh, hp)
+        new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": state}
+    # gated RMSNorm + out projection
+    y = y.reshape(b, L, di).astype(u.dtype)
+    y = rms_norm(y, p["gate_norm"], cfg.rms_eps) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int) -> Params:
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, di), DTYPE),
+        "conv_B": jnp.zeros((batch, cfg.conv_width - 1, g * n), DTYPE),
+        "conv_C": jnp.zeros((batch, cfg.conv_width - 1, g * n), DTYPE),
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+# ===================================================================== #
+# mLSTM (xLSTM): matrix memory with exponential gating
+# ===================================================================== #
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_dense(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32) * 0.1).astype(DTYPE),
+        "conv_b": jnp.zeros((di,), DTYPE),
+        "wq": init_dense(ks[2], di, di),
+        "wk": init_dense(ks[3], di, di),
+        "wv": init_dense(ks[4], di, di),
+        "w_i": init_dense(ks[5], d, nh, bias=True),
+        "w_f": init_dense(ks[6], d, nh, bias=True),
+        "out_norm": jnp.ones((di,), DTYPE),
+        "down": init_dense(ks[7], di, d),
+    }
+
+
+def _mlstm_chunked(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,  # (b, l, nh, dh)
+    ilog: jnp.ndarray, flog: jnp.ndarray,  # (b, l, nh) raw i, log-sigmoid f
+    chunk: int,
+    init: Optional[Tuple] = None,  # (Cst, nst, m)
+) -> Tuple[jnp.ndarray, Tuple]:
+    b, l, nh, dh = q.shape
+    nc = l // chunk
+    sc = 1.0 / math.sqrt(dh)
+    qr = (q.astype(jnp.float32) * sc).reshape(b, nc, chunk, nh, dh)
+    kr = k.astype(jnp.float32).reshape(b, nc, chunk, nh, dh)
+    vr = v.astype(jnp.float32).reshape(b, nc, chunk, nh, dh)
+    ir = ilog.astype(jnp.float32).reshape(b, nc, chunk, nh)
+    fr = flog.astype(jnp.float32).reshape(b, nc, chunk, nh)
+    cf = jnp.cumsum(fr, axis=2)  # inclusive cumulative log-forget
+    if init is None:
+        Cst = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        nst = jnp.zeros((b, nh, dh), jnp.float32)
+        mst = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        Cst, nst, mst = init
+
+    # intra-chunk log weights: D[i,j] = cf_i - cf_j + ilog_j (j<=i)
+    Dmat = _segsum(fr.transpose(0, 1, 3, 2)) + ir.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    # (b, nc, nh, cl, cl); -inf above diagonal
+    m_intra = jnp.max(Dmat, axis=-1)  # (b, nc, nh, cl)
+
+    def step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, cfc, irc, Dm, m_in = inp
+        # per-position stabilizer
+        b_i = cfc.transpose(0, 2, 1) + m_prev[:, :, None]  # (b, nh, cl)
+        m_i = jnp.maximum(b_i, m_in)  # (b, nh, cl)
+        inter_scale = jnp.exp(b_i - m_i)  # (b, nh, cl)
+        num_inter = jnp.einsum("blhd,bhde->bhle", qc, C_prev) * inter_scale[..., None]
+        den_inter = jnp.einsum("blhd,bhd->bhl", qc, n_prev) * inter_scale
+        W = jnp.einsum("blhd,bshd->bhls", qc, kc) * jnp.exp(Dm - m_i[..., None])
+        num = num_inter + jnp.einsum("bhls,bshd->bhld", W, vc)
+        den = den_inter + jnp.sum(W, axis=-1)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # chunk-boundary state update
+        total = cfc[:, -1, :]  # (b, nh)
+        gk = total[:, None, :] - cfc + irc  # (b, cl, nh)
+        m_next = jnp.maximum(total + m_prev, jnp.max(gk, axis=1))
+        scale_old = jnp.exp(total + m_prev - m_next)
+        gke = jnp.exp(gk - m_next[:, None, :])
+        C_new = C_prev * scale_old[:, :, None, None] + jnp.einsum(
+            "blh,blhd,blhe->bhde", gke, kc, vc
+        )
+        n_new = n_prev * scale_old[:, :, None] + jnp.einsum("blh,blhd->bhd", gke, kc)
+        return (C_new, n_new, m_next), h.transpose(0, 2, 1, 3)  # (b, cl, nh, dh)
+
+    xs = (
+        qr.transpose(1, 0, 2, 3, 4), kr.transpose(1, 0, 2, 3, 4),
+        vr.transpose(1, 0, 2, 3, 4), cf.transpose(1, 0, 2, 3),
+        ir.transpose(1, 0, 2, 3), Dmat.transpose(1, 0, 2, 3, 4),
+        m_intra.transpose(1, 0, 2, 3),
+    )
+    carry, ys = jax.lax.scan(step, (Cst, nst, mst), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, nh, dh)
+    return y, carry
+
+
+def mlstm_apply(
+    p: Params, cfg: ModelConfig, u: jnp.ndarray,
+    cache: Optional[Params] = None, chunk: int = 256,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, L, d = u.shape
+    di, nh = cfg.d_inner, cfg.n_heads
+    dh = di // nh
+    up = dense(p["up"], u)
+    a, gate = jnp.split(up, 2, axis=-1)
+    ilog = dense(p["w_i"], u).astype(jnp.float32)  # (b, L, nh)
+    flog = jax.nn.log_sigmoid(dense(p["w_f"], u).astype(jnp.float32))
+    new_cache = None
+    if cache is None:
+        c = jax.nn.silu(causal_conv1d(a, p["conv_w"], p["conv_b"]))
+        q = dense(p["wq"], c).reshape(b, L, nh, dh)
+        k = dense(p["wk"], c).reshape(b, L, nh, dh)
+        v = dense(p["wv"], a).reshape(b, L, nh, dh)
+        y, _ = _mlstm_chunked(q, k, v, ilog, flog, chunk=min(chunk, L))
+    else:
+        conv_state, c_t = conv_step(cache["conv"], a[:, 0], p["conv_w"], p["conv_b"])
+        c_t = jax.nn.silu(c_t)
+        q = (dense(p["wq"], c_t).reshape(b, nh, dh) / math.sqrt(dh)).astype(jnp.float32)
+        k = dense(p["wk"], c_t).reshape(b, nh, dh).astype(jnp.float32)
+        v = dense(p["wv"], a[:, 0]).reshape(b, nh, dh).astype(jnp.float32)
+        i_t, f_t = ilog[:, 0], flog[:, 0]  # (b, nh)
+        m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+        m_new = jnp.maximum(f_t + m_prev, i_t)
+        fp = jnp.exp(f_t + m_prev - m_new)
+        ip = jnp.exp(i_t - m_new)
+        C_new = C_prev * fp[:, :, None, None] + ip[:, :, None, None] * (
+            k[:, :, :, None] * v[:, :, None, :]
+        )
+        n_new = n_prev * fp[:, :, None] + ip[:, :, None] * k
+        num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+        den = jnp.einsum("bhd,bhd->bh", q, n_new)
+        y = (num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None])[:, None]
+        new_cache = {"conv": conv_state, "C": C_new, "n": n_new, "m": m_new}
+    y = y.reshape(b, L, di).astype(u.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.rms_eps) * jax.nn.silu(gate)
+    return dense(p["down"], y), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    di, nh = cfg.d_inner, cfg.n_heads
+    dh = di // nh
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), DTYPE),
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# ===================================================================== #
+# sLSTM (xLSTM): scalar memory, per-head block-diagonal recurrence
+# ===================================================================== #
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 7)
+    scale = 1.0 / math.sqrt(d)
+    ffw = int(round(4 * d / 3 / 64)) * 64
+    return {
+        "wx": init_dense(ks[0], d, 4 * d, bias=True),  # z,i,f,o input paths
+        "r": (jax.random.normal(ks[1], (4, nh, hd, hd), jnp.float32) * scale).astype(DTYPE),
+        "out_norm": jnp.ones((d,), DTYPE),
+        "ffn_up": init_dense(ks[2], d, ffw),
+        "ffn_down": init_dense(ks[3], ffw, d),
+    }
+
+
+def _slstm_cell(carry, gx, r):
+    """One sLSTM step. carry: (c, n, h, m) each (b, nh, hd) / m: (b, nh, hd).
+    gx: (b, 4, nh, hd) precomputed input contributions; r: (4, nh, hd, hd)."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (b, 4, nh, hd)
+    z_r, i_r, f_r, o_r = [(gx[:, g] + rec[:, g]).astype(jnp.float32) for g in range(4)]
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    m_new = jnp.maximum(f_r + m, i_r)
+    ip = jnp.exp(i_r - m_new)
+    fp = jnp.exp(f_r + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(
+    p: Params, cfg: ModelConfig, u: jnp.ndarray,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, L, d = u.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    gx = dense(p["wx"], u).reshape(b, L, 4, nh, hd)
+    r = p["r"].astype(jnp.float32)
+    if cache is None:
+        zero = jnp.zeros((b, nh, hd), jnp.float32)
+        carry0 = (zero, zero, zero, jnp.full((b, nh, hd), -1e30, jnp.float32))
+
+        def step(carry, gx_t):
+            new = _slstm_cell(carry, gx_t, r)
+            return new, new[2]
+
+        _, hs = jax.lax.scan(step, carry0, gx.transpose(1, 0, 2, 3, 4))
+        y = hs.transpose(1, 0, 2, 3).reshape(b, L, d)
+        new_cache = None
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        new = _slstm_cell(carry, gx[:, 0], r)
+        y = new[2].reshape(b, 1, d)
+        new_cache = {"c": new[0], "n": new[1], "h": new[2], "m": new[3]}
+    y = rms_norm(y.astype(u.dtype), p["out_norm"], cfg.rms_eps)
+    y = dense(p["ffn_down"], jax.nn.gelu(dense(p["ffn_up"], y)))
+    return y, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    zero = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero, "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}

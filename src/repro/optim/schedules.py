@@ -1,0 +1,23 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        return peak_lr * jnp.minimum(1.0, step / max(1, warmup_steps))
+
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * jnp.minimum(1.0, step / max(1, warmup_steps))
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,12 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    FaultTolerantRunner,
+    RunnerConfig,
+    StepTimeoutError,
+)
+from repro.runtime.compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    error_feedback_update,
+    make_compressed_allreduce,
+)
+from repro.runtime.elastic import plan_mesh  # noqa: F401

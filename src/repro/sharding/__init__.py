@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    ShardingRules,
+    param_specs,
+    batch_specs,
+    cache_specs,
+    state_specs,
+)

@@ -1,0 +1,89 @@
+"""Activation-sharding hints (with_sharding_constraint) for model code.
+
+Model code is mesh-agnostic; the launcher installs a hint context
+(dp axes / tp axis / sp axis + mesh axis sizes) and the model calls
+``shard_hint(x, "dp", None, "tp")`` at the few places where GSPMD's
+propagation would otherwise replicate something large (logits, MoE
+dispatch buffers, long activations). Outside a mesh context (CPU smoke
+tests) hints are no-ops. Divisibility-guarded per dim.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"enabled": False, "dp": None, "tp": None, "sp": None, "sizes": {}}
+
+
+def set_hints(dp=None, tp=None, sp=None, sizes: Optional[Dict[str, int]] = None) -> None:
+    _STATE.update(enabled=True, dp=dp, tp=tp, sp=sp, sizes=dict(sizes or {}))
+
+
+def clear_hints() -> None:
+    _STATE.update(enabled=False, dp=None, tp=None, sp=None, sizes={})
+
+
+@contextlib.contextmanager
+def hints(dp=None, tp=None, sp=None, sizes: Optional[Dict[str, int]] = None):
+    old = dict(_STATE)
+    set_hints(dp, tp, sp, sizes)
+    try:
+        yield
+    finally:
+        _STATE.clear()
+        _STATE.update(old)
+
+
+def hints_from_mesh(mesh, rules=None) -> None:
+    """Install hints matching a mesh + ShardingRules."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fsdp_only = rules is not None and getattr(rules, "fsdp_only", False)
+    pool = ("pod", "data", "model") if fsdp_only else ("pod", "data")
+    dp = tuple(a for a in pool if a in sizes)
+    tp = "model" if ("model" in sizes and not fsdp_only) else None
+    sp = tp if (rules is not None and getattr(rules, "seq_shard_activations", False)) else None
+    _STATE["mesh"] = mesh
+    _STATE["ep_shardmap"] = bool(rules is not None and getattr(rules, "ep_shardmap", False))
+    set_hints(dp=dp if dp else None, tp=tp, sp=sp, sizes=sizes)
+
+
+def _resolve(token):
+    if token is None:
+        return None
+    if isinstance(token, str) and token in ("dp", "tp", "sp"):
+        return _STATE[token]
+    return token  # literal axis name or tuple
+
+
+def shard_hint(x, *pattern):
+    """pattern entries: 'dp' | 'tp' | 'sp' | None | literal axis name."""
+    if not _STATE["enabled"]:
+        return x
+    sizes = _STATE["sizes"]
+    spec_entries = []
+    used: set = set()
+    for dim, token in zip(x.shape, pattern):
+        ax = _resolve(token)
+        if ax is None:
+            spec_entries.append(None)
+            continue
+        axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,)) if a not in used)
+        if not axes:
+            spec_entries.append(None)
+            continue
+        n = math.prod(sizes.get(a, 1) for a in axes)
+        if n > 0 and dim % n == 0:
+            used.update(axes)
+            spec_entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec_entries.append(None)
+    spec_entries += [None] * (x.ndim - len(spec_entries))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec_entries))
+    except Exception:
+        return x

@@ -1,0 +1,104 @@
+"""Cost-model invariants (Timeloop-like, MAESTRO-like, energy model)."""
+
+import math
+
+import pytest
+
+from repro.core.architecture import (
+    chiplet_accelerator,
+    cloud_accelerator,
+    edge_accelerator,
+    tpu_chip,
+    tpu_v5e_pod,
+)
+from repro.core.cost import MaestroLikeModel, TimeloopLikeModel
+from repro.core.mapping import Mapping
+from repro.core.optimizer import union_opt
+from repro.core.problem import Problem
+
+
+def test_compute_lower_bound():
+    """Latency can never beat macs / peak_macs_per_cycle."""
+    p = Problem.gemm(64, 64, 64, word_bytes=1)
+    arch = edge_accelerator()
+    sol = union_opt(p, arch, mapper="heuristic", cost_model="timeloop", metric="latency")
+    assert sol.cost.latency_cycles >= p.macs / arch.peak_macs_per_cycle - 1e-6
+
+
+def test_trivial_mapping_latency_is_serial():
+    p = Problem.gemm(16, 16, 16, word_bytes=1)
+    arch = edge_accelerator()
+    c = TimeloopLikeModel().evaluate(p, Mapping.trivial(p, arch), arch)
+    assert c.latency_cycles >= p.macs  # one PE, one MAC/cycle
+
+
+def test_more_pes_helps():
+    p = Problem.gemm(128, 128, 128, word_bytes=1)
+    edge = union_opt(p, edge_accelerator(), mapper="heuristic", cost_model="timeloop",
+                     metric="latency")
+    cloud = union_opt(p, cloud_accelerator(), mapper="heuristic", cost_model="timeloop",
+                      metric="latency")
+    assert cloud.cost.latency_cycles < edge.cost.latency_cycles
+
+
+def test_fill_bandwidth_monotonicity_fig11_property():
+    """The paper's Fig. 11 shape: EDP non-increasing in chiplet fill bw,
+    saturating once compute-bound."""
+    p = Problem.gemm(512, 512, 512, word_bytes=1)
+    edps = []
+    for bw in [1e9, 2e9, 4e9, 8e9, 16e9, 32e9]:
+        arch = chiplet_accelerator(fill_bandwidth=bw)
+        sol = union_opt(p, arch, mapper="heuristic", cost_model="timeloop", metric="edp")
+        edps.append(sol.cost.edp)
+    for a, b in zip(edps, edps[1:]):
+        assert b <= a * 1.05  # non-increasing (5% search noise)
+    assert edps[-1] < edps[0]  # the sweep actually matters at the low end
+
+
+def test_maestro_like_operation_gate():
+    p = Problem.gemm(32, 32, 32, word_bytes=1)
+    cm = MaestroLikeModel()
+    assert cm.conformable(p)
+    p_noop = Problem.from_einsum("x", "ab,bc->ac", {"a": 4, "b": 4, "c": 4})
+    p_noop.operation = None
+    assert not cm.conformable(p_noop)
+
+
+def test_timeloop_unit_op_gate():
+    mttkrp = Problem.mttkrp(8, 8, 8, 8)
+    assert not TimeloopLikeModel(unit_op="mac2").conformable(mttkrp)
+    assert TimeloopLikeModel(unit_op="mac3").conformable(mttkrp)
+    with pytest.raises(ValueError):
+        union_opt(mttkrp, edge_accelerator(), mapper="random", cost_model="timeloop")
+
+
+def test_both_models_agree_on_direction():
+    """Models differ in absolute numbers but must agree that a high-
+    utilization mapping beats the trivial serial one."""
+    p = Problem.gemm(64, 64, 64, word_bytes=1)
+    arch = edge_accelerator()
+    triv = Mapping.trivial(p, arch)
+    for cm in (TimeloopLikeModel(), MaestroLikeModel()):
+        sol = union_opt(p, arch, mapper="heuristic", cost_model=cm, metric="edp")
+        assert sol.cost.edp < cm.evaluate(p, triv, arch).edp
+
+
+def test_tpu_presets():
+    chip = tpu_chip()
+    assert chip.clusters[-1].macs_per_cycle == 128 * 128 * 4
+    # peak flops calibration: 2 * macs/cycle * freq == 197 TF
+    assert math.isclose(
+        2 * chip.peak_macs_per_cycle * chip.frequency_hz, 197e12, rel_tol=1e-6
+    )
+    pod = tpu_v5e_pod(pods=2)
+    assert pod.num_pes == 2 * 16 * 16
+    names = [c.dimension for c in pod.clusters]
+    assert "pod" in names and "data" in names and "model" in names
+
+
+def test_energy_breakdown_positive():
+    p = Problem.gemm(32, 32, 32, word_bytes=1)
+    arch = edge_accelerator()
+    sol = union_opt(p, arch, mapper="heuristic", cost_model="timeloop", metric="energy")
+    assert sol.cost.breakdown["energy_mac_pj"] > 0
+    assert sol.cost.energy_pj >= sol.cost.breakdown["energy_mac_pj"]

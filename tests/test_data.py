@@ -1,0 +1,44 @@
+"""Data pipeline: determinism, resume semantics, file-backed source."""
+
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM, TokenFileDataset, make_pipeline
+
+
+def test_synthetic_deterministic():
+    a = SyntheticLM(vocab=100, seed=7).batch(3, 4, 16)["tokens"]
+    b = SyntheticLM(vocab=100, seed=7).batch(3, 4, 16)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = SyntheticLM(vocab=100, seed=8).batch(3, 4, 16)["tokens"]
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_synthetic_is_learnable_structure():
+    """80% of transitions follow the fixed successor table."""
+    src = SyntheticLM(vocab=50, seed=0)
+    b = src.batch(0, 64, 128)["tokens"]
+    follows = (src._succ[b[:, :-1]] == b[:, 1:]).mean()
+    assert 0.7 < follows < 0.95
+
+
+def test_pipeline_resume_replays_identically():
+    src = SyntheticLM(vocab=100, seed=0)
+    p1 = make_pipeline(src, 2, 8, start_step=0, data_cfg=DataConfig(prefetch=1))
+    run1 = [np.asarray(next(p1)["tokens"]) for _ in range(5)]
+    p2 = make_pipeline(src, 2, 8, start_step=3, data_cfg=DataConfig(prefetch=1))
+    run2 = [np.asarray(next(p2)["tokens"]) for _ in range(2)]
+    np.testing.assert_array_equal(run1[3], run2[0])
+    np.testing.assert_array_equal(run1[4], run2[1])
+
+
+def test_token_file_dataset(tmp_path):
+    toks = np.arange(10000, dtype=np.int32) % 97
+    f = tmp_path / "toks.bin"
+    toks.tofile(f)
+    ds = TokenFileDataset(f, vocab=97, seed=0)
+    a = ds.batch(0, 4, 32)["tokens"]
+    b = ds.batch(0, 4, 32)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 32)
+    assert a.max() < 97

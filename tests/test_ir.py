@@ -1,0 +1,131 @@
+"""IR lowering pipeline, conformability passes, TTGT algorithm exploration."""
+
+import math
+
+import pytest
+
+from repro.core.architecture import cloud_accelerator
+from repro.core.cost import MaestroLikeModel, TimeloopLikeModel
+from repro.core.ir.conformability import conformable_models
+from repro.core.ir.dialects import LayerOp, TensorType
+from repro.core.ir.lowering import (
+    affine_to_problem,
+    generic_to_affine,
+    layer_to_generic,
+    lower_layer_to_problem,
+)
+from repro.core.ir.ttgt import best_ttgt_plan, enumerate_ttgt_plans
+from repro.core.optimizer import union_opt
+from repro.core.problem import Problem
+
+
+def test_linear_lowering():
+    op = LayerOp(
+        "ffn_up", "linear",
+        {"x": TensorType((128, 64)), "w": TensorType((64, 256))},
+        {"y": TensorType((128, 256))},
+    )
+    p = lower_layer_to_problem(op)
+    assert p.operation == "GEMM"
+    assert p.dims == {"b": 128, "i": 64, "o": 256}
+    assert p.macs == 128 * 64 * 256
+
+
+def test_conv_lowering_preserves_stride():
+    op = LayerOp(
+        "conv1", "conv2d", {}, {},
+        params=dict(N=1, K=8, C=4, X=16, Y=16, R=3, S=3, stride=2),
+    )
+    p = lower_layer_to_problem(op)
+    assert p.operation == "CONV2D"
+    assert p.attrs["stride"] == 2
+    ia = p.data_space("Inputs")
+    assert any(len(e.terms) == 2 for e in ia.projection)  # x*stride + r
+
+
+def test_attention_ops_lower():
+    qk = LayerOp("qk", "attention_qk", {}, {},
+                 params=dict(B=2, H=4, Q=128, KV=128, D=64))
+    p = lower_layer_to_problem(qk)
+    assert p.operation == "ATTN_QK"
+    assert p.macs == 2 * 4 * 128 * 128 * 64
+
+
+def test_affine_render():
+    op = LayerOp(
+        "mm", "linear",
+        {"x": TensorType((4, 8)), "w": TensorType((8, 16))},
+        {"y": TensorType((4, 16))},
+    )
+    nest = generic_to_affine(layer_to_generic(op))
+    txt = nest.render()
+    assert "affine.for" in txt and "+=" in txt
+
+
+def test_gather_rejected_by_loop_level():
+    emb = LayerOp(
+        "embed", "embedding_gather",
+        {"ids": TensorType((32,), "i32"), "table": TensorType((1000, 64))},
+        {"y": TensorType((32, 64))},
+    )
+    p = lower_layer_to_problem(emb)
+    rep = conformable_models(p, [TimeloopLikeModel(), MaestroLikeModel()])
+    assert not rep.ok("timeloop_like")  # gather is not affine
+
+
+def test_conformability_report_mttkrp():
+    p = Problem.mttkrp(8, 8, 8, 8)
+    rep = conformable_models(p, [TimeloopLikeModel(), MaestroLikeModel(),
+                                 TimeloopLikeModel(unit_op="mac3")])
+    assert not rep.ok("timeloop_like") or TimeloopLikeModel(unit_op="mac3").conformable(p)
+    assert "REJECT" in rep.render() or "OK" in rep.render()
+
+
+# ------------------------------------------------------------------ #
+# TTGT (paper Table III: the GEMM dims for each TCCG problem)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize(
+    "mk,tds,M,N,K",
+    [
+        (Problem.tc_intensli2, 64, 262144, 64, 64),
+        (Problem.tc_intensli2, 16, 4096, 16, 16),
+        (Problem.tc_ccsd7, 64, 4096, 64, 4096),
+        (Problem.tc_ccsd7, 16, 256, 16, 256),
+        (Problem.tc_ccsd_t4, 32, 32768, 32768, 32),
+        (Problem.tc_ccsd_t4, 16, 4096, 4096, 16),
+    ],
+)
+def test_ttgt_gemm_dims_match_paper_table3(mk, tds, M, N, K):
+    p = mk(tds)
+    plan = best_ttgt_plan(p)
+    assert (plan.M, plan.N, plan.K) == (M, N, K)
+    # flattening preserves work: GEMM macs == TC macs
+    assert plan.M * plan.N * plan.K == p.macs
+
+
+def test_ttgt_plans_cover_index_partition():
+    p = Problem.tc_ccsd7(16)
+    plans = enumerate_ttgt_plans(p)
+    assert plans
+    for pl in plans:
+        groups = set(pl.m_group) | set(pl.n_group) | set(pl.k_group)
+        assert groups == set(p.dims)
+
+
+def test_ttgt_beats_native_when_underutilized():
+    """Paper Fig. 8 claim: for TDS=16 on the 32x64 cloud accelerator,
+    TTGT wins because native TC under-utilizes the PEs."""
+    arch = cloud_accelerator()
+    p = Problem.tc_intensli2(16, word_bytes=1)
+    nat = union_opt(p, arch, mapper="heuristic", cost_model="timeloop", metric="edp")
+    plan = best_ttgt_plan(p)
+    g = plan.gemm_problem(word_bytes=1)
+    ttgt = union_opt(g, arch, mapper="heuristic", cost_model="timeloop", metric="edp")
+    assert ttgt.cost.edp < nat.cost.edp
+    # NOTE: the paper explains the win via PE under-utilization of native
+    # mappings (Fig. 9a uses 256/2048 PEs). Union's cluster-target map-space
+    # is strictly richer -- several 16-sized dims can be distributed
+    # CONCURRENTLY at one level, so native also reaches full utilization
+    # here; the EDP gap persists through latency (recorded in
+    # EXPERIMENTS.md as a beyond-paper observation).
+    assert ttgt.cost.utilization >= nat.cost.utilization

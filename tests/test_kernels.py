@@ -1,0 +1,208 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret=True)
+against its pure-jnp ref.py oracle, plus the Union tile-planner contracts."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.architecture import tpu_chip
+from repro.core.problem import Problem
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import plan_blocks
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul import matmul, plan_tiles, tiles_from_mapping
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.ssd_scan import ssd_chunked
+from repro.kernels.ssd_scan.ops import plan_chunk
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_recurrent_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ #
+# matmul
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,n,k", [(128, 128, 128), (256, 128, 384), (300, 200, 100), (64, 512, 256), (1, 257, 33)]
+)
+def test_matmul_sweep(m, n, k, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32).astype(dtype)
+    y = jax.random.normal(ks[1], (k, n), jnp.float32).astype(dtype)
+    got = matmul(x, y, interpret=True)
+    ref = matmul_ref(x, y)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_batched_lead_dims():
+    x = jax.random.normal(KEY, (2, 3, 64, 32))
+    y = jax.random.normal(jax.random.PRNGKey(1), (32, 48))
+    got = matmul(x, y, interpret=True)
+    np.testing.assert_allclose(got, x @ y, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_grad_matches():
+    x = jax.random.normal(KEY, (128, 64))
+    y = jax.random.normal(jax.random.PRNGKey(1), (64, 128))
+    gx, gy = jax.grad(lambda a, b: matmul(a, b, interpret=True).sum(), (0, 1))(x, y)
+    rx, ry = jax.grad(lambda a, b: (a @ b).sum(), (0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(gy, ry, rtol=2e-5, atol=2e-5)
+
+
+def test_plan_tiles_fit_vmem_and_align():
+    """The Union mapping legality (rule R3) IS the BlockSpec validity."""
+    for (M, N, K) in [(4096, 4096, 4096), (8192, 1024, 512), (128, 128, 128)]:
+        bm, bn, bk = plan_tiles(M, N, K)
+        assert M % bm == 0 and N % bn == 0 and K % bk == 0
+        ws = 2 * (bm * bk + bk * bn) + 4 * bm * bn  # bf16 in, f32 acc
+        assert ws <= 2 * tpu_chip().clusters[-1].memory_bytes  # double-buffer budget
+        for b in (bm, bn, bk):
+            assert b % 128 == 0 or b in (M, N, K)
+
+
+def test_tiles_from_mapping_reads_leaf_level():
+    from repro.core.optimizer import union_opt
+    from repro.core.constraints import mxu_aligned
+
+    p = Problem.gemm(1024, 1024, 1024)
+    sol = union_opt(p, tpu_chip(), mapper="heuristic", cost_model="timeloop",
+                    metric="latency", constraints=mxu_aligned(["m", "n", "k"]))
+    bm, bn, bk = tiles_from_mapping(sol.mapping, p)
+    assert bm == sol.mapping.levels[-1].tt("m")
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d,causal",
+    [
+        (2, 128, 128, 4, 4, 64, True),
+        (2, 128, 128, 8, 2, 64, True),    # GQA 4:1
+        (1, 256, 256, 4, 1, 32, True),    # MQA
+        (2, 64, 192, 4, 2, 64, False),    # bidirectional, cross-length
+        (1, 100, 100, 2, 2, 16, True),    # non-divisible -> padded
+    ],
+)
+def test_flash_attention_sweep(b, sq, skv, hq, hkv, d, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, blocks=(64, 64), interpret=True)
+    ref = jnp.swapaxes(
+        attention_ref(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            causal=causal, scale=1.0 / math.sqrt(d),
+        ), 1, 2,
+    )
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_decode_kv_len_mask():
+    """Decode: 1 query over a 512-slot cache with only 300 valid entries."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 8, 64))
+    k = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v = jax.random.normal(ks[2], (2, 512, 2, 64))
+    got = flash_attention(q, k, v, causal=False, q_offset=299,
+                          kv_len=jnp.int32(300), blocks=(8, 128), interpret=True)
+    ref = jnp.swapaxes(
+        attention_ref(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            causal=False, scale=1.0 / math.sqrt(64),
+            q_offset=299, kv_len=jnp.int32(300),
+        ), 1, 2,
+    )
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+    # changing masked-out cache slots must not change the output
+    k2 = k.at[:, 300:].set(99.0)
+    got2 = flash_attention(q, k2, v, causal=False, q_offset=299,
+                           kv_len=jnp.int32(300), blocks=(8, 128), interpret=True)
+    np.testing.assert_allclose(got, got2, rtol=1e-6, atol=1e-6)
+
+
+def test_flash_matches_model_mha():
+    from repro.models.layers import mha
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    ref = mha(q, k, v, causal=True, q_chunk=64)
+    got = flash_attention(q, k, v, causal=True, blocks=(64, 64), interpret=True)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_plan_blocks_contract():
+    bq, bk = plan_blocks(4096, 4096, 128)
+    assert 4096 % bq == 0 and 4096 % bk == 0
+    assert bq >= 128 and bk >= 128
+    # f32 score block within the 8MB budget handed to the planner
+    assert 4 * bq * bk <= 8 * (1 << 20)
+
+
+# ------------------------------------------------------------------ #
+# SSD scan
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize(
+    "b,l,nh,hp,n,chunk",
+    [(2, 128, 3, 16, 8, 32), (1, 64, 2, 8, 4, 64), (2, 96, 1, 32, 16, 16)],
+)
+def test_ssd_sweep(b, l, nh, hp, n, chunk):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, l, nh, hp)) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (b, l, nh)))
+    B = jax.random.normal(ks[2], (b, l, nh, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, nh, n)) * 0.5
+    y_k, S_k = ssd_chunked(x, dA, B, C, chunk=chunk, interpret=True)
+    y_r, S_r = ssd_recurrent_ref(x, dA, B, C)
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(S_k, S_r, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is a pure performance knob -- results identical."""
+    ks = jax.random.split(KEY, 4)
+    b, l, nh, hp, n = 1, 128, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, l, nh, hp)) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (b, l, nh)))
+    B = jax.random.normal(ks[2], (b, l, nh, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, nh, n)) * 0.5
+    y16, _ = ssd_chunked(x, dA, B, C, chunk=16, interpret=True)
+    y64, _ = ssd_chunked(x, dA, B, C, chunk=64, interpret=True)
+    np.testing.assert_allclose(y16, y64, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_grads_match_ref():
+    ks = jax.random.split(KEY, 4)
+    b, l, nh, hp, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, l, nh, hp)) * 0.5
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (b, l, nh)))
+    B = jax.random.normal(ks[2], (b, l, nh, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, l, nh, n)) * 0.5
+    gk = jax.grad(lambda *a: ssd_chunked(*a, chunk=32, interpret=True)[0].sum(),
+                  (0, 1, 2, 3))(x, dA, B, C)
+    gr = jax.grad(lambda *a: ssd_chunked_ref(*a, chunk=32)[0].sum(),
+                  (0, 1, 2, 3))(x, dA, B, C)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_chunk_vmem_bound():
+    for hp, n in [(64, 128), (64, 64), (256, 64)]:
+        cl = plan_chunk(hp, n)
+        assert 4 * (2 * cl * cl + cl * (hp + 2 * n + 2) + n * hp) <= 8 * (1 << 20)
+        assert cl >= 64

@@ -1,0 +1,135 @@
+"""Union mapping abstraction + the paper's four legality rules (Sec. IV-D)."""
+
+import pytest
+
+from repro.core.architecture import edge_accelerator, tpu_chip
+from repro.core.mapping import LevelMapping, Mapping
+from repro.core.problem import Problem
+
+
+def small_gemm():
+    return Problem.gemm(32, 16, 8)
+
+
+def edge():
+    return edge_accelerator()  # DRAM / L2 / V2(16@Y) / PE(16@X)
+
+
+def mk(problem, arch, chain, orders=None):
+    return Mapping.from_tiles(problem, arch, chain, orders)
+
+
+def legal_mapping(problem, arch):
+    """Hand-built legal mapping: parallelize m over V2's 16, n over PE's 16."""
+    full = dict(problem.dims)
+    return mk(
+        problem, arch,
+        [
+            full, full,                                   # DRAM: stream whole
+            full, dict(full, m=full["m"] // 16),          # L2 -> V2: m spatial x16
+            dict(full, m=full["m"] // 16),                # V2 temporal
+            dict(full, m=full["m"] // 16, n=full["n"] // 16),  # V2 -> PE: n x16
+            dict(m=1, n=1, k=1), dict(m=1, n=1, k=1),     # PE: elementwise
+        ],
+    )
+
+
+def test_legal_mapping_is_legal():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    assert m.violations(p, a) == []
+    assert m.total_parallelism(p) == 256
+    assert m.utilization(p, a) == 1.0
+
+
+def test_trivial_mapping_legal_and_serial():
+    p, a = small_gemm(), edge()
+    m = Mapping.trivial(p, a)
+    assert m.is_legal(p, a)
+    assert m.total_parallelism(p) == 1
+
+
+def test_rule_r2_fanout_violation():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    # demand x32 parallelism at the V2 level (fanout is 16)
+    m.levels[1].spatial_tile_sizes["m"] = 1  # TT=32, ST=1 -> par 32
+    errs = m.violations(p, a)
+    assert any("R2" in e for e in errs)
+
+
+def test_rule_r1_inner_tile_exceeds_spatial():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    # inner temporal tile bigger than this level's spatial tile
+    m.levels[2].temporal_tile_sizes["m"] = 32
+    errs = m.violations(p, a)
+    assert any("R1" in e for e in errs)
+
+
+def test_rule_r3_memory_violation():
+    p = Problem.gemm(4096, 4096, 4096)
+    a = edge()  # L2 = 100 KB
+    full = dict(p.dims)
+    m = mk(p, a, [full, full, full, full, full, full,
+                  dict(m=1, n=1, k=1), dict(m=1, n=1, k=1)])
+    errs = m.violations(p, a)
+    assert any("R3" in e for e in errs)  # 3 x 16M won't fit 100KB L2
+
+
+def test_rule_r4_divisibility():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    m.levels[1].temporal_tile_sizes["m"] = 5  # 32 % 5 != 0
+    errs = m.violations(p, a)
+    assert any("R4" in e for e in errs)
+
+
+def test_innermost_cannot_parallelize():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    m.levels[-1].temporal_tile_sizes["m"] = 2  # TT != ST at leaf
+    errs = m.violations(p, a)
+    assert any("innermost" in e for e in errs)
+
+
+def test_concurrent_spatial_dims_same_level():
+    """The paper's key expressiveness claim: distribute M and N at the SAME
+    cluster level concurrently (memory-target abstractions cannot)."""
+    p, a = small_gemm(), edge()
+    full = dict(p.dims)
+    m = mk(
+        p, a,
+        [
+            full, full,
+            full, dict(full, m=full["m"] // 4, n=full["n"] // 4),  # m AND n at V2
+            dict(full, m=full["m"] // 4, n=full["n"] // 4),
+            dict(full, m=full["m"] // 4, n=full["n"] // 4),
+            dict(m=1, n=1, k=1), dict(m=1, n=1, k=1),
+        ],
+    )
+    # V2 level distributes both dims: fanout 4*4 = 16 == child fanout
+    assert m.parallelism(1, p) == 16
+    assert m.is_legal(p, a)
+    nest = m.loop_nest_str(p)
+    assert "spatial_for" in nest and "concurrent" in nest
+
+
+def test_serialization_roundtrip():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    m2 = Mapping.from_json(m.to_json())
+    assert m2.to_dict() == m.to_dict()
+    assert m2.is_legal(p, a)
+
+
+def test_steps_times_parallelism_covers_iteration_space():
+    p, a = small_gemm(), edge()
+    m = legal_mapping(p, a)
+    total = 1
+    for i in range(len(m.levels)):
+        total *= m.steps(i, p) * m.parallelism(i, p)
+    leaf_tile = 1
+    for d in p.dims:
+        leaf_tile *= m.levels[-1].st(d)
+    assert total * leaf_tile == p.iteration_space

@@ -1,0 +1,71 @@
+"""Map-space enumeration / sampling / mutation legality."""
+
+import random
+
+from repro.core.architecture import edge_accelerator
+from repro.core.constraints import Constraints, nvdla_style
+from repro.core.mapspace import MapSpace, divisors
+from repro.core.problem import Problem
+
+
+def space(m=16, n=8, k=4, cons=None):
+    return MapSpace(Problem.gemm(m, n, k), edge_accelerator(), cons)
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert divisors(1) == [1]
+    assert divisors(7) == [1, 7]
+
+
+def test_enumerate_all_legal_and_unique():
+    sp = space()
+    seen = set()
+    for m in sp.enumerate_tilings(max_mappings=200):
+        assert m.is_legal(sp.problem, sp.arch)
+        key = m.to_json()
+        assert key not in seen
+        seen.add(key)
+    assert len(seen) > 10
+
+
+def test_random_mappings_legal():
+    sp = space(32, 32, 32)
+    rng = random.Random(0)
+    for _ in range(25):
+        m = sp.random_mapping(rng)
+        assert m.is_legal(sp.problem, sp.arch)
+
+
+def test_mutate_preserves_legality():
+    sp = space(32, 32, 32)
+    rng = random.Random(1)
+    m = sp.random_mapping(rng)
+    for _ in range(20):
+        m = sp.mutate(m, rng)
+        assert m.is_legal(sp.problem, sp.arch)
+
+
+def test_crossover_preserves_legality():
+    sp = space(32, 32, 32)
+    rng = random.Random(2)
+    a, b = sp.random_mapping(rng), sp.random_mapping(rng)
+    for _ in range(10):
+        c = sp.crossover(a, b, rng)
+        assert c.is_legal(sp.problem, sp.arch)
+
+
+def test_constraints_prune_spatial_dims():
+    # NVDLA-style: only c/k (here: only k/n) may be spatial
+    cons = Constraints(name="t", allowed_spatial_dims={"*": {"n", "k"}})
+    sp = space(16, 16, 16, cons)
+    rng = random.Random(0)
+    for _ in range(10):
+        m = sp.random_mapping(rng)
+        for i in range(len(m.levels)):
+            fan = m.spatial_fanout(i, sp.problem)
+            assert fan.get("m", 1) == 1  # m never parallelized
+
+
+def test_size_log10_positive():
+    assert space(64, 64, 64).size_log10() > 2

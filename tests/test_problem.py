@@ -1,0 +1,73 @@
+"""Union problem abstraction (paper Sec. IV-B)."""
+
+import math
+
+import pytest
+
+from repro.core.problem import AffineExpr, DataSpace, Problem
+
+
+def test_gemm_dims_and_macs():
+    p = Problem.gemm(64, 32, 16)
+    assert p.dims == {"m": 64, "k": 16, "n": 32}
+    assert p.macs == 64 * 32 * 16
+    assert p.flops == 2 * p.macs
+    assert p.operation == "GEMM"
+    assert p.reduction_dims() == ("k",)
+
+
+def test_gemm_footprints():
+    p = Problem.gemm(64, 32, 16)
+    a = p.data_space("In0")
+    b = p.data_space("In1")
+    c = p.data_space("Out")
+    assert a.footprint(p.dims) == 64 * 16
+    assert b.footprint(p.dims) == 16 * 32
+    assert c.footprint(p.dims) == 64 * 32
+    assert c.is_output
+    tile = {"m": 8, "n": 4, "k": 2}
+    assert a.footprint(tile) == 16
+    assert c.footprint_bytes(tile) == 8 * 4 * 2  # bf16
+
+
+def test_conv2d_strided_window_footprint():
+    # paper Algorithm 1: IA[x*stride + r]
+    p = Problem.conv2d(N=1, K=4, C=3, X=8, Y=8, R=3, S=3, stride=2)
+    ia = p.data_space("Inputs")
+    # input rows touched by x-tile t, r-tile 3, stride 2: 2*(t-1) + 3
+    tile = dict(n=1, c=1, x=4, y=1, r=3, s=1)
+    xy_expr = ia.projection[2]
+    assert xy_expr.extent(tile) == 2 * 3 + 3
+    assert p.reduction_dims() == ("c", "r", "s")
+
+
+def test_tc_ccsd_t4_matches_paper_algorithm2():
+    p = Problem.tc_ccsd_t4(16)
+    assert set(p.dims) == set("abcdefg")
+    assert p.reduction_dims() == ("g",)
+    out = p.outputs()[0]
+    assert len(out.projection) == 6  # 6D output
+    assert p.macs == 16 ** 7
+
+
+def test_mttkrp_unit_op():
+    p = Problem.mttkrp(4, 5, 6, 7)
+    assert p.unit_op == "mac3"
+
+
+def test_validate_rejects_unknown_dim():
+    ds = DataSpace("X", (AffineExpr.of("z"),))
+    with pytest.raises(ValueError):
+        Problem("bad", {"m": 4}, (ds,)).validate()
+
+
+def test_validate_requires_output():
+    ds = DataSpace("X", (AffineExpr.of("m"),), is_output=False)
+    with pytest.raises(ValueError):
+        Problem("bad", {"m": 4}, (ds,)).validate()
+
+
+def test_from_einsum_attrs():
+    p = Problem.from_einsum("bmm", "bmk,bkn->bmn", {"b": 2, "m": 4, "k": 8, "n": 16})
+    assert p.attrs["einsum"] == "bmk,bkn->bmn"
+    assert p.iteration_space == 2 * 4 * 8 * 16

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.architecture import edge_accelerator
+from repro.core.cost import TimeloopLikeModel
+from repro.core.ir.ttgt import best_ttgt_plan
+from repro.core.mapspace import MapSpace, divisors
+from repro.core.problem import AffineExpr, Problem
+from repro.runtime.compression import compress_int8, decompress_int8
+
+SIZES = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32])
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_divisors_correct(n):
+    ds = divisors(n)
+    assert ds == sorted(ds)
+    assert all(n % d == 0 for d in ds)
+    assert ds[0] == 1 and ds[-1] == n
+    assert len(ds) == sum(1 for i in range(1, n + 1) if n % i == 0)
+
+
+@given(SIZES, SIZES, SIZES, st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_random_mappings_always_legal_and_cover(m, n, k, seed):
+    """Any sampled mapping is legal, and steps x parallelism over all levels
+    covers the iteration space exactly (paper rule R4)."""
+    p = Problem.gemm(m, n, k)
+    sp = MapSpace(p, edge_accelerator())
+    mp = sp.random_mapping(random.Random(seed))
+    assert mp.is_legal(p, sp.arch)
+    total = 1
+    for i in range(len(mp.levels)):
+        total *= mp.steps(i, p) * mp.parallelism(i, p)
+    # the innermost temporal tile is what one PE computes per visit
+    leaf_tile = 1
+    for d in p.dims:
+        leaf_tile *= mp.levels[-1].st(d)
+    assert total * leaf_tile == p.iteration_space
+
+
+@given(SIZES, SIZES, SIZES, st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_cost_respects_compute_bound(m, n, k, seed):
+    p = Problem.gemm(m, n, k, word_bytes=1)
+    arch = edge_accelerator()
+    sp = MapSpace(p, arch)
+    mp = sp.random_mapping(random.Random(seed))
+    c = TimeloopLikeModel().evaluate(p, mp, arch)
+    assert c.latency_cycles >= p.macs / arch.peak_macs_per_cycle - 1e-9
+    assert c.energy_pj >= p.macs * arch.clusters[-1].mac_energy - 1e-9
+    assert 0 < c.utilization <= 1.0
+
+
+@given(
+    st.lists(st.integers(1, 6), min_size=1, max_size=3),
+    st.integers(1, 4),
+)
+@settings(max_examples=30, deadline=None)
+def test_affine_extent_monotone_in_tile(coeffs, tile):
+    """Footprint extent is monotone non-decreasing in every tile size."""
+    expr = AffineExpr.of(*[(c, f"d{i}") for i, c in enumerate(coeffs)])
+    t1 = {f"d{i}": tile for i in range(len(coeffs))}
+    t2 = {f"d{i}": tile + 1 for i in range(len(coeffs))}
+    assert expr.extent(t2) >= expr.extent(t1)
+    assert expr.extent({f"d{i}": 1 for i in range(len(coeffs))}) == 1
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(2, 5))
+@settings(max_examples=20, deadline=None)
+def test_ttgt_work_preserving(a, b, c):
+    """TTGT flattening never changes the MAC count for any TC."""
+    p = Problem.from_einsum(
+        "tc", "xz,zy->xy", {"x": a, "z": b, "y": c}, "TC"
+    )
+    plan = best_ttgt_plan(p)
+    assert plan.M * plan.N * plan.K == p.macs
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+@settings(max_examples=25, deadline=None)
+def test_int8_compression_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (128,)) * scale
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_segsum_stability(seed):
+    """models.ssm._segsum: finite below diagonal, -inf above, telescoping."""
+    from repro.models.ssm import _segsum
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (6,)).astype(jnp.float32)
+    out = np.asarray(_segsum(x))
+    for i in range(6):
+        assert out[i, i] == 0.0
+        for j in range(6):
+            if j > i:
+                assert out[i, j] == -np.inf
+            elif j < i:
+                np.testing.assert_allclose(
+                    out[i, j], float(jnp.sum(x[j + 1 : i + 1])), rtol=1e-5, atol=1e-5
+                )

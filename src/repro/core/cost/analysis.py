@@ -15,29 +15,35 @@ reuse rules (Timeloop/Interstellar style):
     fills are always counted).
   * Output data spaces additionally pay read-modify-write traffic when
     reduction loops enclose their residency.
+
+The analysis is the hot path of every mapper search, so it is organised
+around :class:`AnalysisContext`: all (problem, arch)-dependent metadata is
+computed once and reused across the thousands of mappings a search
+evaluates, and the per-mapping pass runs on the canonical signature (flat
+int tuples in problem-dim order) with prefix products -- all-integer, so
+results are exactly the ones the naive nested-loop formulation produces.
 """
 
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.architecture import Architecture
-from repro.core.mapping import Mapping
+from repro.core.mapping import Mapping, mapping_signature
 from repro.core.problem import DataSpace, Problem
 
 
-@dataclass(frozen=True)
-class Loop:
+class Loop(NamedTuple):
     level: int  # mapping/cluster level index (0 = outermost)
     kind: str  # "temporal" | "spatial"
     dim: str
     trips: int
 
 
-@dataclass
-class LevelTraffic:
+class LevelTraffic(NamedTuple):
     """Per-buffer-level traffic for ONE data space (elements, not bytes)."""
 
     fills_per_instance: int = 0  # elements read into one instance from parent
@@ -61,6 +67,9 @@ class AccessProfile:
     parallelism: int = 1
     utilization: float = 0.0
     l1_reads: Dict[str, int] = field(default_factory=dict)  # innermost accesses per ds
+    # convenience lookups the cost models would otherwise re-derive per level:
+    instances_at: List[int] = field(default_factory=list)  # spatial instances above each level
+    real_parent: List[Optional[int]] = field(default_factory=list)  # nearest non-virtual level above
 
 
 def expand_loops(problem: Problem, mapping: Mapping) -> List[Loop]:
@@ -86,89 +95,627 @@ def _real_parent(arch: Architecture, i: int) -> Optional[int]:
     return None
 
 
-def analyze(problem: Problem, mapping: Mapping, arch: Architecture) -> AccessProfile:
-    loops = expand_loops(problem, mapping)
-    prof = AccessProfile(loops=loops)
+class AnalysisContext:
+    """Precomputed (Problem, Architecture) metadata for fast repeated analysis.
 
-    n_levels = arch.n_levels
-    # compute totals
-    total_trips = 1
-    for lp in loops:
-        if lp.kind == "temporal":
-            total_trips *= lp.trips
-    par = mapping.total_parallelism(problem)
-    leaf = arch.clusters[-1]
-    leaf_tile = {d: mapping.levels[-1].tt(d) for d in problem.dims}
-    leaf_macs = math.prod(leaf_tile.values())
-    prof.leaf_tile_macs = leaf_macs
-    prof.total_temporal_trips = total_trips
-    prof.parallelism = par
-    prof.utilization = par / max(1, arch.num_pes)
-    prof.compute_cycles = total_trips * math.ceil(leaf_macs / max(1, leaf.macs_per_cycle))
+    One context is built per (problem, arch) pair and amortised over every
+    mapping a search evaluates. ``analyze`` on a context produces results
+    identical to evaluating the classic formulation loop by loop (the
+    module-level :func:`analyze` delegates here).
+    """
 
-    reduction = set(problem.reduction_dims())
+    def __init__(self, problem: Problem, arch: Architecture) -> None:
+        self.problem = problem
+        self.arch = arch
+        self.dims: List[str] = list(problem.dims.keys())
+        self.dim_sizes: Dict[str, int] = dict(problem.dims)
+        self.n_levels = arch.n_levels
+        self.virtual: List[bool] = [cl.virtual for cl in arch.clusters]
+        self.real_levels: List[int] = [
+            i for i in range(self.n_levels) if not self.virtual[i]
+        ]
+        self.real_parent: List[Optional[int]] = [
+            _real_parent(arch, i) for i in range(self.n_levels)
+        ]
+        self.macs_per_cycle = max(1, arch.clusters[-1].macs_per_cycle)
+        self.num_pes = max(1, arch.num_pes)
+        self.total_macs = problem.macs
+        self._dims_t: Tuple[str, ...] = tuple(self.dims)
+        self._dim_index = {d: j for j, d in enumerate(self.dims)}
+        # order tuple -> dim-index tuple memo (orders repeat heavily)
+        self._order_idx: Dict[Tuple[str, ...], Tuple[int, ...]] = {}
+        self._size_tuple: Tuple[int, ...] = tuple(problem.dims[d] for d in self.dims)
+        # per data space: relevance (names + dim indices) + innermost accesses
+        self.ds_rel: List[Tuple[DataSpace, frozenset]] = [
+            (ds, frozenset(ds.dims)) for ds in problem.data_spaces
+        ]
+        self._ds_rel_idx: List[Tuple[int, ...]] = [
+            tuple(sorted(self._dim_index[d] for d in ds.dims))
+            for ds in problem.data_spaces
+        ]
+        self._ds_rel_sets: List[set] = [set(t) for t in self._ds_rel_idx]
+        self.l1_reads: Dict[str, int] = {
+            ds.name: (2 * self.total_macs if ds.is_output else self.total_macs)
+            for ds in problem.data_spaces
+        }
+        # footprint memo: (ds index, level tile tuple) -> elements. Level
+        # tiles recur heavily across candidates (elites, crossover reuse
+        # whole per-dim chains), so this short-circuits most extent math.
+        self._foot_cache: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+        # --- signature-based lower-bound machinery (engine hot path) ---- #
+        freq = arch.frequency_hz
+        self._lb_bw_levels: List[Tuple[int, float]] = [
+            (i, freq / arch.clusters[i].fill_bandwidth)
+            for i in self.real_levels
+            if i > 0 and not math.isinf(arch.clusters[i].fill_bandwidth)
+        ]
+        self._ds_axes_idx: List[Tuple[int, List[List[Tuple[int, int]]], Tuple[int, ...]]] = [
+            (
+                ds.word_bytes,
+                [
+                    [(abs(t.coeff), self._dim_index[t.dim]) for t in expr.terms]
+                    for expr in ds.projection
+                ],
+                self._ds_rel_idx[k],
+            )
+            for k, ds in enumerate(problem.data_spaces)
+        ]
+        leaf = arch.clusters[-1]
+        self._lb_energy_base: float = problem.macs * leaf.mac_energy + sum(
+            self.l1_reads[ds.name] * ds.word_bytes * leaf.read_energy
+            for ds in problem.data_spaces
+        )
+        # The first real level whose parent is the (real) outermost level:
+        # its parent_reads/parent_writes energy terms can be reproduced
+        # exactly in the lower bound (n_parent == 1 there). When the
+        # architecture has no such level the energy floor degrades to the
+        # base (MAC + innermost) term.
+        self._lb_dram_child: Optional[int] = None
+        self._top_read_e = 0.0
+        self._top_write_e = 0.0
+        if len(self.real_levels) >= 2 and self.real_levels[0] == 0:
+            self._lb_dram_child = self.real_levels[1]
+            self._top_read_e = arch.clusters[0].read_energy
+            self._top_write_e = arch.clusters[0].write_energy
 
-    for ds in problem.data_spaces:
-        rel = set(ds.dims)
-        for i in range(n_levels):
-            if arch.clusters[i].virtual:
-                continue
-            # loops above the residency at level i: all loops of levels < i,
-            # plus temporal loops of level i itself.
-            above = [
-                lp for lp in loops
-                if lp.level < i or (lp.level == i and lp.kind == "temporal")
-            ]
-            # tile changes: relevant temporal loops, or irrelevant temporal
-            # loops enclosing a deeper relevant temporal loop.
-            changes = 1
-            unique = 1
-            for p, lp in enumerate(above):
-                if lp.kind != "temporal":
-                    continue
-                if lp.dim in rel:
-                    changes *= lp.trips
-                    unique *= lp.trips
+    # ------------------------------------------------------------------ #
+    def analyze(self, mapping: Mapping) -> AccessProfile:
+        # the engine / Genome stash the already-computed signature on the
+        # mapping object; mappings are treated as immutable once evaluated
+        cached = mapping.__dict__.get("_sig_cache")
+        if cached is not None and cached[0] == self._dims_t:
+            return self.analyze_signature(cached[1])
+        return self.analyze_signature(mapping_signature(mapping, self.dims))
+
+    def signature_traffic(self, sig):
+        """The reuse core, off the canonical signature, as plain arrays.
+
+        ``sig`` is ``mapping_signature(mapping, self.dims)``: per level the
+        (effective order, TT tuple, ST tuple) in problem-dim order.
+
+        Returns ``(compute_cycles, par, inst_at, tloops, sloops, rows)``:
+        ``rows[ds_idx]`` lists, per entry of ``self.real_levels``, the tuple
+        ``(fills, drains, parent_reads, parent_writes, instances, foot)``.
+        Both :meth:`analyze_signature` (object form) and the cost models'
+        fused ``evaluate_signature`` paths consume THIS single core, so the
+        reuse rules live in exactly one place.
+        """
+        dims = self.dims
+        dim_index = self._dim_index
+        D = len(dims)
+        n = self.n_levels
+
+        # ---- loop nest expansion (identical to expand_loops) ----------- #
+        order_idx = self._order_idx
+        tloops: List[Tuple[int, int, int]] = []  # (level, dim_idx, trips)
+        sloops: List[Tuple[int, int, int]] = []
+        outer = self._size_tuple
+        for i in range(n):
+            order, tt, st = sig[i]
+            trips = [0] * D
+            for j in range(D):
+                trips[j] = max(1, outer[j] // max(1, tt[j]))
+            oidx = order_idx.get(order)
+            if oidx is None:
+                oidx = tuple(dim_index[d] for d in order)
+                order_idx[order] = oidx
+            for j in oidx:
+                q = trips[j]
+                if q > 1:
+                    tloops.append((i, j, q))
+            for j in range(D):
+                f = max(1, tt[j]) // max(1, st[j])
+                if f > 1:
+                    sloops.append((i, j, f))
+            outer = st
+
+        # ---- totals ---------------------------------------------------- #
+        total_trips = 1
+        for _lv, _j, q in tloops:
+            total_trips *= q
+        par = 1
+        for _lv, _j, f in sloops:
+            par *= f
+        leaf_macs = 1
+        for t in sig[-1][1]:
+            leaf_macs *= t
+        compute_cycles = total_trips * math.ceil(leaf_macs / self.macs_per_cycle)
+
+        # ---- per-level shared precomputation --------------------------- #
+        # tloops/sloops are ordered by level, so the loops "above" a level's
+        # residency are a PREFIX of each list:
+        #   temporal prefix at level i = tloops with level <= i
+        #   spatial  prefix at level i = sloops with level <  i
+        t_prefix = [0] * n
+        s_prefix = [0] * n
+        k = 0
+        for i in range(n):
+            while k < len(tloops) and tloops[k][0] <= i:
+                k += 1
+            t_prefix[i] = k
+        c = 0
+        for i in range(n):
+            while c < len(sloops) and sloops[c][0] < i:
+                c += 1
+            s_prefix[i] = c
+        # product of ALL spatial trips in each prefix (= instances)
+        sall = [1] * (len(sloops) + 1)
+        for j, (_lv, _dj, f) in enumerate(sloops):
+            sall[j + 1] = sall[j] * f
+        inst_at = [sall[s_prefix[i]] for i in range(n)]
+
+        foot_cache = self._foot_cache
+        if len(foot_cache) > (1 << 17):
+            foot_cache.clear()
+        tiles_dicts: List[Optional[Dict[str, int]]] = [None] * n
+        real_levels = self.real_levels
+        real_parent = self.real_parent
+
+        # ---- per data space -------------------------------------------- #
+        rows: List[List[Tuple[int, int, int, int, int, int]]] = []
+        for ds_idx, (ds, _rel) in enumerate(self.ds_rel):
+            rel_set = self._ds_rel_sets[ds_idx]
+            # temporal prefix products:
+            #   relprod[j] = prod of RELEVANT trips among first j temporal loops
+            #   chgprod[j] = relprod[j] * (irrelevant trips enclosing a deeper
+            #                relevant loop) -- i.e. irrelevant loops positioned
+            #                before the LAST relevant loop in the prefix.
+            T = len(tloops)
+            relprod = [1] * (T + 1)
+            chgprod = [1] * (T + 1)
+            rp = 1
+            ip = 1  # running product of irrelevant trips seen so far
+            lastrel_ip = 1  # irrelevant product at the most recent relevant loop
+            for j, (_lv, dj, q) in enumerate(tloops):
+                if dj in rel_set:
+                    rp *= q
+                    lastrel_ip = ip
                 else:
-                    deeper_relevant = any(
-                        q.kind == "temporal" and q.dim in rel for q in above[p + 1 :]
+                    ip *= q
+                relprod[j + 1] = rp
+                chgprod[j + 1] = rp * lastrel_ip
+            # spatial prefix products restricted to relevant dims
+            srel = [1] * (len(sloops) + 1)
+            for j, (_lv, dj, f) in enumerate(sloops):
+                srel[j + 1] = srel[j] * (f if dj in rel_set else 1)
+
+            is_out = ds.is_output
+            ds_rows: List[Tuple[int, int, int, int, int, int]] = []
+            for i in real_levels:
+                kT = t_prefix[i]
+                changes = chgprod[kT]
+                unique = relprod[kT]
+                tt = sig[i][1]
+                fkey = (ds_idx, tt)
+                foot = foot_cache.get(fkey)
+                if foot is None:
+                    tile = tiles_dicts[i]
+                    if tile is None:
+                        tile = {dims[j]: tt[j] for j in range(D)}
+                        tiles_dicts[i] = tile
+                    foot = ds.footprint(tile)
+                    foot_cache[fkey] = foot
+                cS = s_prefix[i]
+                inst = sall[cS]
+                pr = real_parent[i]
+                if pr is None:
+                    rel_spatial = 1
+                else:
+                    rel_spatial = srel[cS] // srel[s_prefix[pr]]
+
+                cf = changes * foot
+                if not is_out:
+                    # one parent instance serves the instances between parent
+                    # and i; ideal multicast: only RELEVANT spatial splits are
+                    # distinct.
+                    ds_rows.append((cf, 0, cf * rel_spatial, 0, inst, foot))
+                else:
+                    rmw = max(0, changes - unique) * foot  # RMW refills
+                    ds_rows.append(
+                        (rmw, cf, rmw * rel_spatial, cf * rel_spatial, inst, foot)
                     )
-                    if deeper_relevant:
-                        changes *= lp.trips
-            tile = {d: mapping.levels[i].tt(d) for d in problem.dims}
-            foot = ds.footprint(tile)
-            # spatial multipliers between the real parent and this level
-            pr = _real_parent(arch, i)
-            rel_spatial = 1
-            all_spatial_above = 1
-            inst = 1
-            for lp in loops:
-                if lp.kind != "spatial":
-                    continue
-                if lp.level < i:
-                    inst *= lp.trips
-                if pr is not None and pr <= lp.level < i:
-                    all_spatial_above *= lp.trips
-                    if lp.dim in rel:
-                        rel_spatial *= lp.trips
+            rows.append(ds_rows)
+        return compute_cycles, par, inst_at, tloops, sloops, rows
 
-            lt = LevelTraffic(instances=inst, tile_elems=foot)
-            if not ds.is_output:
-                lt.fills_per_instance = changes * foot
-                # one parent instance serves (instances between parent and i);
-                # ideal multicast: only RELEVANT spatial splits are distinct.
-                lt.parent_reads = changes * foot * rel_spatial
-            else:
-                lt.drains_per_instance = changes * foot
-                lt.fills_per_instance = max(0, changes - unique) * foot  # RMW refills
-                lt.parent_writes = changes * foot * rel_spatial
-                lt.parent_reads = max(0, changes - unique) * foot * rel_spatial
-            prof.traffic[(ds.name, i)] = lt
+    def analyze_signature(self, sig) -> AccessProfile:
+        """Object form of :meth:`signature_traffic` (AccessProfile API)."""
+        dims = self.dims
+        compute_cycles, par, inst_at, tloops, sloops, rows = self.signature_traffic(sig)
+        # rebuild the interleaved loop list (temporal then spatial per level)
+        loops: List[Loop] = []
+        ti = si = 0
+        for i in range(self.n_levels):
+            while ti < len(tloops) and tloops[ti][0] == i:
+                _lv, j, q = tloops[ti]
+                loops.append(Loop(i, "temporal", dims[j], q))
+                ti += 1
+            while si < len(sloops) and sloops[si][0] == i:
+                _lv, j, f = sloops[si]
+                loops.append(Loop(i, "spatial", dims[j], f))
+                si += 1
+        prof = AccessProfile(loops=loops)
+        total_trips = 1
+        for _lv, _j, q in tloops:
+            total_trips *= q
+        leaf_macs = 1
+        for t in sig[-1][1]:
+            leaf_macs *= t
+        prof.leaf_tile_macs = leaf_macs
+        prof.total_temporal_trips = total_trips
+        prof.parallelism = par
+        prof.utilization = par / self.num_pes
+        prof.compute_cycles = compute_cycles
+        prof.l1_reads = dict(self.l1_reads)
+        prof.instances_at = inst_at
+        prof.real_parent = self.real_parent
+        for ds_idx, (ds, _rel) in enumerate(self.ds_rel):
+            ds_rows = rows[ds_idx]
+            for pos, i in enumerate(self.real_levels):
+                prof.traffic[(ds.name, i)] = LevelTraffic(*ds_rows[pos])
+        return prof
 
-        # innermost (register/MAC) accesses: one operand access per MAC
-        total_macs = problem.macs
-        prof.l1_reads[ds.name] = 2 * total_macs if ds.is_output else total_macs
-    return prof
+    # ------------------------------------------------------------------ #
+    # Cheap chain-only bounds (no reuse analysis). Used by the evaluation
+    # engine's admission filter: every quantity here is a LOWER bound on
+    # the corresponding quantity of the full analysis. All operate on the
+    # canonical signature, so the engine reuses the tuple it already
+    # computed for the cache probe.
+    # ------------------------------------------------------------------ #
+    def signature_compute_cycles(self, sig) -> float:
+        """Exactly ``AccessProfile.compute_cycles``, without the analysis."""
+        outer = self._size_tuple
+        D = len(outer)
+        total_trips = 1
+        for _order, tt, st in sig:
+            for j in range(D):
+                q = outer[j] // (tt[j] or 1)
+                if q > 1:
+                    total_trips *= q
+            outer = st
+        leaf_macs = 1
+        for t in sig[-1][1]:
+            leaf_macs *= max(1, t)
+        return total_trips * math.ceil(leaf_macs / self.macs_per_cycle)
+
+    def signature_min_boundary_bytes(self, sig, level: int) -> float:
+        """Lower bound on fill+drain bytes into one instance of ``level``
+        from compulsory traffic alone (one tile footprint per data space)."""
+        tt = sig[level][1]
+        total = 0.0
+        for wb, axes, _rel in self._ds_axes_idx:
+            foot = 1
+            for ax in axes:
+                span = 1
+                for coeff, j in ax:
+                    span += coeff * (max(1, tt[j]) - 1)
+                foot *= span
+            total += foot * wb
+        return total
+
+    def signature_lower_bound(self, sig) -> Tuple[float, float]:
+        """(cycles, energy_pj) lower bounds for the hierarchical models.
+
+        cycles: max of the exact compute cycles and, per bandwidth-limited
+        level, a fill-time floor of ``unique x footprint`` bytes per data
+        space -- ``unique`` (the product of relevant temporal trips above
+        the residency) never exceeds ``changes``, and both fills (inputs)
+        and drains (outputs) scale with ``changes``, so this stays a true
+        lower bound while discriminating much harder against reuse-poor
+        tilings than compulsory traffic alone.
+
+        energy: MAC + innermost-operand terms plus the EXACT outermost-
+        memory access term (parent reads/writes of the level right below
+        the top real memory, where ``n_parent == 1``); remaining buffer and
+        NoC terms are non-negative, so the sum stays a true lower bound.
+        At that same level the fill-cycle floor uses the exact ``changes``
+        too.
+        """
+        outer = self._size_tuple
+        D = len(outer)
+        total_trips = 1
+        trips_rows: List[List[int]] = []
+        for _order, tt, st in sig:
+            row = [1] * D
+            for j in range(D):
+                q = outer[j] // (tt[j] or 1)
+                if q > 1:
+                    row[j] = q
+                    total_trips *= q
+            trips_rows.append(row)
+            outer = st
+        leaf_macs = 1
+        for t in sig[-1][1]:
+            leaf_macs *= max(1, t)
+        cycles = total_trips * math.ceil(leaf_macs / self.macs_per_cycle)
+
+        energy = self._lb_energy_base
+        dc = self._lb_dram_child
+        dc_boundary = 0.0
+        if dc is not None:
+            # temporal loops of levels <= dc in effective emission order and
+            # spatial fans of levels < dc: enough to reproduce the model's
+            # changes/unique/rel_spatial at the dram-child level exactly.
+            order_idx = self._order_idx
+            dim_index = self._dim_index
+            tl: List[Tuple[int, int]] = []
+            for i in range(dc + 1):
+                row = trips_rows[i]
+                order = sig[i][0]
+                oidx = order_idx.get(order)
+                if oidx is None:
+                    oidx = tuple(dim_index[d] for d in order)
+                    order_idx[order] = oidx
+                for j in oidx:
+                    q = row[j]
+                    if q > 1:
+                        tl.append((j, q))
+            fans: List[Tuple[int, int]] = []
+            for i in range(dc):
+                _o, tt_i, st_i = sig[i]
+                for j in range(D):
+                    f = max(1, tt_i[j]) // max(1, st_i[j])
+                    if f > 1:
+                        fans.append((j, f))
+            tt_dc = sig[dc][1]
+            tre = self._top_read_e
+            twe = self._top_write_e
+            for ds_idx, (ds, _r) in enumerate(self.ds_rel):
+                rel_set = self._ds_rel_sets[ds_idx]
+                rp = 1
+                ip = 1
+                lastrel = 1
+                for j, q in tl:
+                    if j in rel_set:
+                        rp *= q
+                        lastrel = ip
+                    else:
+                        ip *= q
+                changes = rp * lastrel
+                unique = rp
+                wb, axes, _rel = self._ds_axes_idx[ds_idx]
+                foot = 1
+                for ax in axes:
+                    span = 1
+                    for coeff, j in ax:
+                        span += coeff * (max(1, tt_dc[j]) - 1)
+                    foot *= span
+                rel_sp = 1
+                for j, f in fans:
+                    if j in rel_set:
+                        rel_sp *= f
+                cf = changes * foot
+                if ds.is_output:
+                    rmw = max(0, changes - unique) * foot
+                    energy += cf * rel_sp * wb * twe + rmw * rel_sp * wb * tre
+                    dc_boundary += (cf + rmw) * wb
+                else:
+                    energy += cf * rel_sp * wb * tre
+                    dc_boundary += cf * wb
+
+        for level, cyc_per_byte in self._lb_bw_levels:
+            if level == dc:
+                cyc = dc_boundary * cyc_per_byte  # exact fill bytes there
+                if cyc > cycles:
+                    cycles = cyc
+                continue
+            b = 0
+            tt = sig[level][1]
+            for wb, axes, rel in self._ds_axes_idx:
+                unique = 1
+                for r in range(level + 1):
+                    row = trips_rows[r]
+                    for j in rel:
+                        unique *= row[j]
+                foot = 1
+                for ax in axes:
+                    span = 1
+                    for coeff, j in ax:
+                        span += coeff * (max(1, tt[j]) - 1)
+                    foot *= span
+                b += unique * foot * wb
+            cyc = b * cyc_per_byte
+            if cyc > cycles:
+                cycles = cyc
+        return cycles, energy
+
+    def chains_lower_bound(
+        self, chain_list, orders, incumbent: float = math.inf, scalarize=None
+    ) -> Tuple[float, float]:
+        """``signature_lower_bound`` computed directly off per-dim divisor
+        chains (in problem-dim order) + per-level orders -- the genome fast
+        path, skipping signature construction for candidates that will be
+        pruned. Returns exactly what ``signature_lower_bound`` returns for
+        the equivalent signature, EXCEPT when the caller provides
+        ``(incumbent, scalarize)`` and the compute-cycles term alone already
+        proves domination: then the boundary/energy refinements are skipped
+        and a smaller (still valid) energy floor is returned.
+        """
+        sizes = self._size_tuple
+        D = len(sizes)
+        n = self.n_levels
+        trips_rows: List[List[int]] = [[1] * D for _ in range(n)]
+        total_trips = 1
+        leaf_macs = 1
+        last = 2 * n - 2
+        for j in range(D):
+            ch = chain_list[j]
+            prev = sizes[j]
+            for i in range(n):
+                q = prev // (ch[2 * i] or 1)
+                if q > 1:
+                    trips_rows[i][j] = q
+                    total_trips *= q
+                prev = ch[2 * i + 1]
+            leaf_macs *= max(1, ch[last])
+        cycles = total_trips * math.ceil(leaf_macs / self.macs_per_cycle)
+
+        energy = self._lb_energy_base
+        if scalarize is not None and scalarize(cycles, energy) >= incumbent:
+            # already dominated by the cheap floor -- skip the refinements
+            return cycles, energy
+        dc = self._lb_dram_child
+        dc_boundary = 0.0
+        if dc is not None:
+            order_idx = self._order_idx
+            dim_index = self._dim_index
+            tl: List[Tuple[int, int]] = []
+            for i in range(dc + 1):
+                row = trips_rows[i]
+                order = orders[i]
+                oidx = order_idx.get(order)
+                if oidx is None:
+                    oidx = tuple(dim_index[d] for d in order)
+                    order_idx[order] = oidx
+                for j in oidx:
+                    q = row[j]
+                    if q > 1:
+                        tl.append((j, q))
+            fans: List[Tuple[int, int]] = []
+            for i in range(dc):
+                k = 2 * i
+                for j in range(D):
+                    ch = chain_list[j]
+                    f = max(1, ch[k]) // max(1, ch[k + 1])
+                    if f > 1:
+                        fans.append((j, f))
+            kdc = 2 * dc
+            tre = self._top_read_e
+            twe = self._top_write_e
+            for ds_idx, (ds, _r) in enumerate(self.ds_rel):
+                rel_set = self._ds_rel_sets[ds_idx]
+                rp = 1
+                ip = 1
+                lastrel = 1
+                for j, q in tl:
+                    if j in rel_set:
+                        rp *= q
+                        lastrel = ip
+                    else:
+                        ip *= q
+                changes = rp * lastrel
+                unique = rp
+                wb, axes, _rel = self._ds_axes_idx[ds_idx]
+                foot = 1
+                for ax in axes:
+                    span = 1
+                    for coeff, j in ax:
+                        span += coeff * (max(1, chain_list[j][kdc]) - 1)
+                    foot *= span
+                rel_sp = 1
+                for j, f in fans:
+                    if j in rel_set:
+                        rel_sp *= f
+                cf = changes * foot
+                if ds.is_output:
+                    rmw = max(0, changes - unique) * foot
+                    energy += cf * rel_sp * wb * twe + rmw * rel_sp * wb * tre
+                    dc_boundary += (cf + rmw) * wb
+                else:
+                    energy += cf * rel_sp * wb * tre
+                    dc_boundary += cf * wb
+
+        for level, cyc_per_byte in self._lb_bw_levels:
+            if level == dc:
+                cyc = dc_boundary * cyc_per_byte  # exact fill bytes there
+                if cyc > cycles:
+                    cycles = cyc
+                continue
+            kl = 2 * level
+            b = 0
+            for wb, axes, rel in self._ds_axes_idx:
+                unique = 1
+                for r in range(level + 1):
+                    row = trips_rows[r]
+                    for j in rel:
+                        unique *= row[j]
+                foot = 1
+                for ax in axes:
+                    span = 1
+                    for coeff, j in ax:
+                        span += coeff * (max(1, chain_list[j][kl]) - 1)
+                    foot *= span
+                b += unique * foot * wb
+            cyc = b * cyc_per_byte
+            if cyc > cycles:
+                cycles = cyc
+        return cycles, energy
+
+    # Mapping-object conveniences (tests / non-engine callers)
+    def cheap_compute_cycles(self, mapping: Mapping) -> float:
+        return self.signature_compute_cycles(mapping_signature(mapping, self.dims))
+
+    def min_boundary_bytes(self, mapping: Mapping, level: int) -> float:
+        return self.signature_min_boundary_bytes(
+            mapping_signature(mapping, self.dims), level
+        )
+
+
+# ---------------------------------------------------------------------- #
+# Bounded identity-keyed context cache. Contexts hold strong references to
+# their (problem, arch), so an id() key can never alias a dead object while
+# its entry is resident; the identity check makes the lookup sound.
+# ---------------------------------------------------------------------- #
+_CTX_CACHE: "OrderedDict[Tuple[int, int], AnalysisContext]" = OrderedDict()
+_CTX_CACHE_SIZE = 64
+
+
+def get_context(problem: Problem, arch: Architecture) -> AnalysisContext:
+    key = (id(problem), id(arch))
+    ctx = _CTX_CACHE.get(key)
+    if ctx is not None and ctx.problem is problem and ctx.arch is arch:
+        _CTX_CACHE.move_to_end(key)
+        return ctx
+    ctx = AnalysisContext(problem, arch)
+    _CTX_CACHE[key] = ctx
+    while len(_CTX_CACHE) > _CTX_CACHE_SIZE:
+        _CTX_CACHE.popitem(last=False)
+    return ctx
+
+
+def analyze(problem: Problem, mapping: Mapping, arch: Architecture) -> AccessProfile:
+    return get_context(problem, arch).analyze(mapping)
+
+
+def hierarchical_lower_bound(
+    problem: Problem, mapping: Optional[Mapping], arch: Architecture, sig=None
+) -> Tuple[float, float]:
+    """(cycles, energy_pj) lower bounds for the hierarchical models.
+
+    Valid for both the Timeloop-like and MAESTRO-like models:
+
+      * cycles: both take max(compute, per-level fill time) or add
+        non-negative terms on top, and per-level fill bytes are bounded
+        below by ``unique x tile footprint`` per data space;
+      * energy: both include the innermost operand movement and MAC energy
+        exactly, plus non-negative buffer/NoC terms.
+
+    ``sig`` short-circuits signature extraction when the caller (the
+    evaluation engine) already computed it for the cache probe.
+    """
+    ctx = get_context(problem, arch)
+    if sig is None:
+        sig = mapping_signature(mapping, ctx.dims)
+    return ctx.signature_lower_bound(sig)
 
 
 def boundary_bytes_per_instance(

@@ -52,13 +52,55 @@ class Cost:
 
 
 class CostModel(abc.ABC):
-    """Every cost model: conformability check + evaluate."""
+    """Every cost model: conformability check + evaluate (+ lower bound)."""
 
     name: str = "base"
 
     @abc.abstractmethod
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         ...
+
+    def lower_bound(
+        self,
+        problem: Problem,
+        mapping: Optional[Mapping],
+        arch: Architecture,
+        sig=None,
+    ) -> "tuple[float, float]":
+        """Cheap ``(latency_cycles, energy_pj)`` lower bounds for a mapping.
+
+        Must be computable from the tile chain alone (no reuse analysis)
+        and must never exceed the corresponding ``evaluate`` results -- the
+        evaluation engine uses it as an incumbent-aware admission filter.
+        ``sig`` is the engine's canonical signature when already available
+        (implementations may consume it instead of ``mapping``). The
+        default declines to bound (never prunes).
+        """
+        return 0.0, 0.0
+
+    def lower_bound_fn(self, problem: Problem, arch: Architecture):
+        """Bound ``lower_bound`` to (problem, arch) once; the evaluation
+        engine calls the returned ``sig -> (cycles, energy_pj)`` closure per
+        candidate. Models with precomputed per-problem state override this
+        to skip the per-call dispatch."""
+        return lambda sig: self.lower_bound(problem, None, arch, sig=sig)
+
+    def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
+        """Optional chain-level variant: a ``(chain_list, orders) ->
+        (cycles, energy_pj)`` closure matching ``lower_bound_fn`` on the
+        equivalent signature, letting the engine bound genome candidates
+        without building their signature. None when unsupported."""
+        return None
+
+    def evaluate_signature(
+        self, problem: Problem, arch: Architecture, sig
+    ) -> Optional[Cost]:
+        """Fused fast path: produce the same Cost ``evaluate`` would for a
+        mapping with canonical signature ``sig``, without materializing the
+        Mapping object. Return None when unsupported (the engine falls back
+        to ``evaluate``). Implementations MUST be bit-identical to
+        ``evaluate``."""
+        return None
 
     def conformable(self, problem: Problem) -> bool:
         """Whether this model can evaluate the problem at all.

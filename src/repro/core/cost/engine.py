@@ -1,0 +1,329 @@
+"""Batched, cached, bound-pruned mapping-evaluation engine.
+
+Every mapper's inner loop is "score this candidate mapping with that cost
+model". The paper's plug-and-play matrix (any mapper x any model) lives or
+dies on the throughput of that loop, so this module centralizes it:
+
+  * **Canonical signatures** -- ``mapping_signature`` collapses a Mapping to
+    the (effective loop order, TT, ST) tuple per level that the analytical
+    models actually consume. Two mappings with the same signature have
+    byte-identical costs, so genetic/heuristic searches stop re-analyzing
+    the neighborhoods they revisit (an LRU memo keyed on the signature).
+  * **Lower-bound admission** -- a chain-only bound (compute cycles +
+    compulsory boundary bytes; see ``CostModel.lower_bound``) rejects
+    candidates that provably cannot beat the incumbent BEFORE the expensive
+    reuse analysis runs. The bound never exceeds the true metric, so
+    pruning never discards a candidate better than the incumbent.
+  * **Batching** -- ``evaluate_batch`` deduplicates, prunes, and evaluates a
+    population at once, optionally fanning the cache misses out to a
+    process pool (``workers > 0``).
+
+The engine is the single evaluation path for all mappers (see
+``repro.core.mappers``) and reports evaluated / cache-hit / pruned counters
+through ``SearchResult`` so speedups stay observable.
+"""
+
+from __future__ import annotations
+
+import math
+import pickle
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.architecture import Architecture
+from repro.core.cost.analysis import get_context
+from repro.core.cost.base import Cost, CostModel
+from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-export)
+from repro.core.problem import Problem
+
+Signature = Tuple[Tuple[Tuple[str, ...], Tuple[int, ...], Tuple[int, ...]], ...]
+
+# Candidates are either Mapping objects or chain-level genomes
+# (``repro.core.mapspace.Genome``): anything with .signature(dims) and
+# .to_mapping(). Genomes let the samplers defer Mapping materialization to
+# actual cache misses.
+
+
+@dataclass
+class EngineStats:
+    """Counters for one engine lifetime (one search, in practice)."""
+
+    evaluated: int = 0  # full cost-model analyses (cache misses)
+    cache_hits: int = 0
+    pruned: int = 0  # candidates rejected by the lower-bound filter
+    batches: int = 0
+
+    def snapshot(self) -> "EngineStats":
+        return replace(self)
+
+    @property
+    def candidates(self) -> int:
+        return self.evaluated + self.cache_hits + self.pruned
+
+    @property
+    def cache_hit_rate(self) -> float:
+        seen = self.evaluated + self.cache_hits
+        return self.cache_hits / seen if seen else 0.0
+
+
+# ------------------------------------------------------------------ #
+# Process-pool plumbing. Workers hold the (cost model, problem, arch)
+# triple in module state (shipped once via the initializer) and receive
+# only mapping dicts per task.
+# ------------------------------------------------------------------ #
+_POOL_STATE: Optional[Tuple[CostModel, Problem, Architecture]] = None
+
+
+def _pool_init(payload: bytes) -> None:
+    global _POOL_STATE
+    _POOL_STATE = pickle.loads(payload)
+
+
+def _pool_eval(mapping_dicts: List[dict]) -> List[Cost]:
+    cm, problem, arch = _POOL_STATE  # type: ignore[misc]
+    return [cm.evaluate(problem, Mapping.from_dict(d), arch) for d in mapping_dicts]
+
+
+class EvaluationEngine:
+    """Single evaluation path for (one cost model, one problem, one arch).
+
+    Parameters
+    ----------
+    metric:      the search objective; used to scalarize lower bounds.
+    cache_size:  LRU memo capacity (signatures -> Cost).
+    prune:       enable the lower-bound admission filter.
+    workers:     >0 fans cache misses of ``evaluate_batch`` out to a
+                 process pool (beneficial for expensive models / large
+                 batches; 0 keeps everything in-process).
+    """
+
+    def __init__(
+        self,
+        cost_model: CostModel,
+        problem: Problem,
+        arch: Architecture,
+        metric: str = "edp",
+        cache_size: int = 1 << 16,
+        prune: bool = True,
+        workers: int = 0,
+    ) -> None:
+        self.cost_model = cost_model
+        self.problem = problem
+        self.arch = arch
+        self.metric = metric
+        self.cache_size = cache_size
+        self.prune = prune
+        self.workers = max(0, int(workers))
+        self.stats = EngineStats()
+        self._dims: Tuple[str, ...] = tuple(problem.dims.keys())
+        self._cache: "OrderedDict[Signature, Cost]" = OrderedDict()
+        self._ctx = get_context(problem, arch)
+        self._freq = arch.frequency_hz
+        self._lb_fn = cost_model.lower_bound_fn(problem, arch)
+        self._lb_chains_fn = cost_model.lower_bound_chains_fn(problem, arch)
+        self._pool = None
+        self._pool_failed = False
+
+    # -------------------------------------------------------------- #
+    def signature(self, cand) -> Signature:
+        if isinstance(cand, Mapping):
+            cached = cand.__dict__.get("_sig_cache")
+            if cached is not None and cached[0] == self._dims:
+                return cached[1]
+            sig = mapping_signature(cand, self._dims)
+            # mappings are treated as immutable once they reach the engine
+            cand._sig_cache = (self._dims, sig)
+            return sig
+        return cand.signature(self._dims)
+
+    @staticmethod
+    def _materialize(cand) -> Mapping:
+        return cand if isinstance(cand, Mapping) else cand.to_mapping()
+
+    def _key_of(self, cand):
+        """Memo-cache key. Mappings use the canonical signature; genomes
+        use their (orders, chains) tuple, which determines the signature
+        1:1 but is much cheaper to build."""
+        if isinstance(cand, Mapping):
+            return self.signature(cand)
+        return cand.cache_key(self._dims)
+
+    def _scalarize(self, lb_cycles: float, lb_energy: float) -> float:
+        if self.metric == "latency":
+            return lb_cycles
+        if self.metric == "energy":
+            return lb_energy
+        if self.metric == "edp":
+            # same association as Cost.edp so lb==true components can never
+            # round above the true metric
+            return (lb_energy * 1e-12) * (lb_cycles / self._freq)
+        return 0.0
+
+    def _should_prune(self, cand, incumbent: float) -> bool:
+        if self._lb_chains_fn is not None and not isinstance(cand, Mapping):
+            lc, le = self._lb_chains_fn(
+                cand.chain_list, cand.orders, incumbent, self._scalarize
+            )
+        else:
+            lc, le = self._lb_fn(self.signature(cand))
+        return self._scalarize(lc, le) >= incumbent
+
+    def lower_bound(self, cand, sig: Optional[Signature] = None) -> float:
+        """Metric lower bound from the chain alone (no reuse analysis).
+
+        Guaranteed <= ``evaluate(cand).metric(self.metric)``; 0.0 when
+        the cost model declines to provide a bound.
+        """
+        if sig is None:
+            sig = self.signature(cand)
+        return self._scalarize(*self._lb_fn(sig))
+
+    # -------------------------------------------------------------- #
+    def _cache_get(self, sig: Signature) -> Optional[Cost]:
+        c = self._cache.get(sig)
+        if c is not None:
+            self._cache.move_to_end(sig)
+            self.stats.cache_hits += 1
+        return c
+
+    def _cache_put(self, sig: Signature, cost: Cost) -> None:
+        self._cache[sig] = cost
+        if len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def _evaluate_one(self, cand) -> Cost:
+        c = self.cost_model.evaluate_signature(
+            self.problem, self.arch, self.signature(cand)
+        )
+        if c is None:
+            c = self.cost_model.evaluate(self.problem, self._materialize(cand), self.arch)
+        return c
+
+    # -------------------------------------------------------------- #
+    def evaluate(self, cand) -> Cost:
+        """Memoized single evaluation (always admits)."""
+        key = self._key_of(cand)
+        c = self._cache_get(key)
+        if c is not None:
+            return c
+        c = self._evaluate_one(cand)
+        self.stats.evaluated += 1
+        self._cache_put(key, c)
+        return c
+
+    def evaluate_admit(self, cand, incumbent: float) -> Optional[Cost]:
+        """Evaluate unless the lower bound proves the candidate cannot beat
+        ``incumbent`` (returns None in that case). Cached candidates are
+        returned directly -- a hit is cheaper than the bound."""
+        key = self._key_of(cand)
+        c = self._cache_get(key)
+        if c is not None:
+            return c
+        if (
+            self.prune
+            and incumbent != math.inf
+            and self._should_prune(cand, incumbent)
+        ):
+            self.stats.pruned += 1
+            return None
+        c = self._evaluate_one(cand)
+        self.stats.evaluated += 1
+        self._cache_put(key, c)
+        return c
+
+    def evaluate_batch(
+        self,
+        candidates: Sequence,
+        incumbent: float = math.inf,
+    ) -> List[Optional[Cost]]:
+        """Evaluate a population: dedup within the batch, serve cache hits,
+        reject bound-dominated candidates (entries come back ``None``), and
+        evaluate the misses -- in-process, or on the worker pool.
+
+        ``incumbent=inf`` disables pruning for this batch (population
+        mappers that need a true fitness for every member use this).
+        """
+        self.stats.batches += 1
+        results: List[Optional[Cost]] = [None] * len(candidates)
+        pending: Dict = {}
+        misses: List[Tuple[object, object]] = []  # (key, candidate)
+        do_prune = self.prune and incumbent != math.inf
+        for idx, cand in enumerate(candidates):
+            key = self._key_of(cand)
+            c = self._cache_get(key)
+            if c is not None:
+                results[idx] = c
+                continue
+            dup = pending.get(key)
+            if dup is not None:
+                dup.append(idx)
+                continue
+            if do_prune and self._should_prune(cand, incumbent):
+                self.stats.pruned += 1
+                continue
+            pending[key] = [idx]
+            misses.append((key, cand))
+
+        if misses:
+            costs = self._evaluate_misses(misses)
+            for (key, _cand), c in zip(misses, costs):
+                self.stats.evaluated += 1
+                self._cache_put(key, c)
+                for idx in pending[key]:
+                    results[idx] = c
+        return results
+
+    # -------------------------------------------------------------- #
+    def _evaluate_misses(self, misses: List[Tuple[object, object]]) -> List[Cost]:
+        pool = self._get_pool() if (self.workers and len(misses) >= 8) else None
+        if pool is None:
+            return [self._evaluate_one(cand) for _key, cand in misses]
+        mappings = [self._materialize(cand) for _key, cand in misses]
+        nchunks = min(len(mappings), self.workers * 4)
+        step = math.ceil(len(mappings) / nchunks)
+        chunks = [mappings[i : i + step] for i in range(0, len(mappings), step)]
+        futs = [pool.submit(_pool_eval, [m.to_dict() for m in ch]) for ch in chunks]
+        out: List[Cost] = []
+        for f in futs:
+            out.extend(f.result())
+        return out
+
+    def _get_pool(self):
+        if self._pool is not None or self._pool_failed:
+            return self._pool
+        try:
+            import multiprocessing
+            from concurrent.futures import ProcessPoolExecutor
+
+            payload = pickle.dumps((self.cost_model, self.problem, self.arch))
+            # spawn, not fork: the parent typically has JAX's threads
+            # running, and forking a multithreaded process can deadlock
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.workers,
+                mp_context=multiprocessing.get_context("spawn"),
+                initializer=_pool_init,
+                initargs=(payload,),
+            )
+        except Exception:
+            # unpicklable model / restricted environment: degrade to serial
+            self._pool_failed = True
+            self._pool = None
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    def __enter__(self) -> "EvaluationEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # pragma: no cover - best effort
+        try:
+            self.close()
+        except Exception:
+            pass

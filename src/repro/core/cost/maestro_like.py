@@ -23,7 +23,12 @@ import math
 from typing import Optional
 
 from repro.core.architecture import Architecture
-from repro.core.cost.analysis import analyze, boundary_bytes_per_instance
+from repro.core.cost.analysis import (
+    analyze,
+    boundary_bytes_per_instance,
+    get_context,
+    hierarchical_lower_bound,
+)
 from repro.core.cost.base import Cost, CostModel
 from repro.core.cost.energy import ACCEL_45NM_UINT8, EnergyTable
 from repro.core.mapping import Mapping
@@ -40,6 +45,92 @@ class MaestroLikeModel(CostModel):
 
     def conformable(self, problem: Problem) -> bool:
         return problem.operation in _SUPPORTED_OPS and problem.unit_op == "mac2"
+
+    def lower_bound(self, problem: Problem, mapping, arch: Architecture, sig=None):
+        return hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+
+    def lower_bound_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).signature_lower_bound
+
+    def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).chains_lower_bound
+
+    def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
+        """Fused signature->Cost path: identical math (and float-operation
+        order, so bit-identical results) to ``evaluate``, skipping the
+        AccessProfile object assembly."""
+        if not self.conformable(problem):
+            raise ValueError(
+                f"{self.name} only supports operations {_SUPPORTED_OPS}, "
+                f"got {problem.operation!r} (unit op {problem.unit_op!r})"
+            )
+        ctx = get_context(problem, arch)
+        compute_cycles, par, inst_at, _tl, _sl, rows = ctx.signature_traffic(sig)
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        real_parent = ctx.real_parent
+        spaces = problem.data_spaces
+        leaf = clusters[-1]
+
+        latency = float(compute_cycles)
+        breakdown = {"compute_cycles": float(compute_cycles)}
+        startup = 0.0
+        for pos, i in enumerate(real_levels):
+            if i == 0:
+                continue
+            cl = clusters[i]
+            if math.isinf(cl.fill_bandwidth):
+                continue
+            total_fill = 0.0
+            tile_bytes = 0
+            for ds_idx, ds in enumerate(spaces):
+                r = rows[ds_idx][pos]
+                total_fill += (r[0] + r[1]) * ds.word_bytes
+                tile_bytes += r[5] * ds.word_bytes
+            if total_fill <= 0:
+                continue
+            fill_cycles = total_fill * freq / cl.fill_bandwidth
+            startup += tile_bytes * freq / cl.fill_bandwidth
+            breakdown[f"fill_cycles_{cl.name}"] = fill_cycles
+            latency = max(latency, fill_cycles)
+        latency += startup
+        breakdown["startup_cycles"] = startup
+
+        energy = 0.0
+        noc_energy = 0.0
+        hop = self.etab.noc_hop_pj_byte
+        for ds_idx, ds in enumerate(spaces):
+            wb = ds.word_bytes
+            dsr = rows[ds_idx]
+            for pos, i in enumerate(real_levels):
+                cl = clusters[i]
+                fills, drains, preads, pwrites, inst, _foot = dsr[pos]
+                energy += fills * inst * wb * cl.write_energy
+                energy += drains * inst * wb * cl.read_energy
+                parent_idx = real_parent[i]
+                if parent_idx is not None:
+                    parent = clusters[parent_idx]
+                    n_parent = inst_at[parent_idx]
+                    # source reads once per distinct datum (multicast-aware)
+                    energy += preads * n_parent * wb * parent.read_energy
+                    energy += pwrites * n_parent * wb * parent.write_energy
+                    # but every DELIVERED copy pays a NoC hop
+                    delivered = (fills + drains) * inst
+                    noc_energy += delivered * wb * hop
+            energy += ctx.l1_reads[ds.name] * wb * leaf.read_energy
+        energy += problem.macs * leaf.mac_energy
+        energy += noc_energy
+        breakdown["noc_energy_pj"] = noc_energy
+
+        return Cost(
+            latency_cycles=latency,
+            energy_pj=energy,
+            utilization=par / ctx.num_pes,
+            macs=problem.macs,
+            frequency_hz=freq,
+            breakdown=breakdown,
+        )
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):
@@ -86,19 +177,12 @@ class MaestroLikeModel(CostModel):
                 lt = prof.traffic.get((ds.name, i))
                 if lt is None:
                     continue
-                parent_idx = None
-                for j in range(i - 1, -1, -1):
-                    if not arch.clusters[j].virtual:
-                        parent_idx = j
-                        break
+                parent_idx = prof.real_parent[i]
                 energy += lt.fills_per_instance * lt.instances * wb * cl.write_energy
                 energy += lt.drains_per_instance * lt.instances * wb * cl.read_energy
                 if parent_idx is not None:
                     parent = arch.clusters[parent_idx]
-                    n_parent = 1
-                    for lp in prof.loops:
-                        if lp.kind == "spatial" and lp.level < parent_idx:
-                            n_parent *= lp.trips
+                    n_parent = prof.instances_at[parent_idx]
                     # source reads once per distinct datum (multicast-aware)
                     energy += lt.parent_reads * n_parent * wb * parent.read_energy
                     energy += lt.parent_writes * n_parent * wb * parent.write_energy

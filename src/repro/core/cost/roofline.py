@@ -26,7 +26,11 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 from repro.core.architecture import Architecture, TPU_V5E
-from repro.core.cost.analysis import analyze, boundary_bytes_per_instance
+from repro.core.cost.analysis import (
+    analyze,
+    boundary_bytes_per_instance,
+    get_context,
+)
 from repro.core.cost.base import Cost, CostModel
 from repro.core.mapping import Mapping
 from repro.core.problem import Problem
@@ -126,6 +130,29 @@ class TPURooflineModel(CostModel):
     """Analytic three-term roofline over (Problem, Mapping) on a TPU arch."""
 
     name = "tpu_roofline"
+
+    def lower_bound(self, problem: Problem, mapping, arch: Architecture, sig=None):
+        """(cycles, energy_pj) floor: perfect chip scaling + compulsory VMEM
+        traffic; energy floor is the MAC term alone."""
+        from repro.core.mapping import mapping_signature
+
+        ctx = get_context(problem, arch)
+        if sig is None:
+            sig = mapping_signature(mapping, ctx.dims)
+        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
+        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
+        chips = 1
+        for cl in arch.clusters:
+            if cl.dimension in MESH_AXES and cl.fanout > 1:
+                chips *= cl.fanout
+        compute_s = 2.0 * problem.macs / max(1, chips) / peak
+        vmem_level = arch.n_levels - 1
+        memory_s = 0.0
+        if vmem_level in ctx.real_levels:
+            memory_s = ctx.signature_min_boundary_bytes(sig, vmem_level) / hbm_bw
+        cycles = max(compute_s, memory_s) * arch.frequency_hz
+        energy = problem.macs * arch.clusters[-1].mac_energy
+        return cycles, energy
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         prof = analyze(problem, mapping, arch)

@@ -15,7 +15,12 @@ import math
 from typing import Optional
 
 from repro.core.architecture import Architecture
-from repro.core.cost.analysis import analyze, boundary_bytes_per_instance
+from repro.core.cost.analysis import (
+    analyze,
+    boundary_bytes_per_instance,
+    get_context,
+    hierarchical_lower_bound,
+)
 from repro.core.cost.base import Cost, CostModel
 from repro.core.mapping import Mapping
 from repro.core.problem import Problem
@@ -32,6 +37,78 @@ class TimeloopLikeModel(CostModel):
         # operation matches the energy model configuration (paper: MTTKRP is
         # rejected under a mac2-configured model but fine under mac3).
         return problem.unit_op == self.unit_op
+
+    def lower_bound(self, problem: Problem, mapping, arch: Architecture, sig=None):
+        return hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+
+    def lower_bound_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).signature_lower_bound
+
+    def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).chains_lower_bound
+
+    def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
+        """Fused signature->Cost path: identical math (and float-operation
+        order, so bit-identical results) to ``evaluate``, skipping the
+        AccessProfile object assembly."""
+        if not self.conformable(problem):
+            raise ValueError(
+                f"{self.name} configured with unit op {self.unit_op!r} cannot "
+                f"evaluate problem with unit op {problem.unit_op!r}"
+            )
+        ctx = get_context(problem, arch)
+        compute_cycles, par, inst_at, _tl, _sl, rows = ctx.signature_traffic(sig)
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        real_parent = ctx.real_parent
+        spaces = problem.data_spaces
+
+        worst_bw_cycles = 0.0
+        breakdown = {"compute_cycles": compute_cycles}
+        for pos, i in enumerate(real_levels):
+            if i == 0:
+                continue
+            cl = clusters[i]
+            bts = 0.0
+            for ds_idx, ds in enumerate(spaces):
+                r = rows[ds_idx][pos]
+                bts += (r[0] + r[1]) * ds.word_bytes
+            if bts <= 0 or math.isinf(cl.fill_bandwidth):
+                continue
+            cyc = bts * freq / cl.fill_bandwidth
+            breakdown[f"bw_cycles_{cl.name}"] = cyc
+            worst_bw_cycles = max(worst_bw_cycles, cyc)
+        latency = max(compute_cycles, worst_bw_cycles)
+
+        energy = 0.0
+        leaf = clusters[-1]
+        for ds_idx, ds in enumerate(spaces):
+            wb = ds.word_bytes
+            dsr = rows[ds_idx]
+            for pos, i in enumerate(real_levels):
+                cl = clusters[i]
+                fills, drains, preads, pwrites, inst, _foot = dsr[pos]
+                energy += fills * inst * wb * cl.write_energy
+                energy += drains * inst * wb * cl.read_energy
+                parent_idx = real_parent[i]
+                if parent_idx is not None:
+                    parent = clusters[parent_idx]
+                    n_parent = inst_at[parent_idx]
+                    energy += preads * n_parent * wb * parent.read_energy
+                    energy += pwrites * n_parent * wb * parent.write_energy
+            energy += ctx.l1_reads[ds.name] * wb * leaf.read_energy
+        energy += problem.macs * leaf.mac_energy
+        breakdown["energy_mac_pj"] = problem.macs * leaf.mac_energy
+
+        return Cost(
+            latency_cycles=latency,
+            energy_pj=energy,
+            utilization=par / ctx.num_pes,
+            macs=problem.macs,
+            frequency_hz=freq,
+            breakdown=breakdown,
+        )
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):
@@ -64,18 +141,14 @@ class TimeloopLikeModel(CostModel):
                 lt = prof.traffic.get((ds.name, i))
                 if lt is None:
                     continue
-                parent_idx = None
-                for j in range(i - 1, -1, -1):
-                    if not arch.clusters[j].virtual:
-                        parent_idx = j
-                        break
+                parent_idx = prof.real_parent[i]
                 wb = ds.word_bytes
                 # writes into this buffer + reads back out of it on drain
                 energy += lt.fills_per_instance * lt.instances * wb * cl.write_energy
                 energy += lt.drains_per_instance * lt.instances * wb * cl.read_energy
                 if parent_idx is not None:
                     parent = arch.clusters[parent_idx]
-                    n_parent = _instances_at(prof, parent_idx)
+                    n_parent = prof.instances_at[parent_idx]
                     # parent_reads/writes are per-parent-instance counts with
                     # ideal multicast (irrelevant spatial splits read once)
                     energy += lt.parent_reads * n_parent * wb * parent.read_energy
@@ -94,11 +167,3 @@ class TimeloopLikeModel(CostModel):
             frequency_hz=freq,
             breakdown=breakdown,
         )
-
-
-def _instances_at(prof, level: int) -> int:
-    inst = 1
-    for lp in prof.loops:
-        if lp.kind == "spatial" and lp.level < level:
-            inst *= lp.trips
-    return inst

@@ -1,14 +1,23 @@
-"""Mapper interface and search bookkeeping."""
+"""Mapper interface and search bookkeeping.
+
+All mappers score candidates through one :class:`EvaluationEngine`
+(``repro.core.cost.engine``): a signature-keyed memo cache, a lower-bound
+admission filter, and a batch API. ``SearchResult`` surfaces the engine's
+cache-hit / pruned counters next to the classic evaluated count so search
+throughput stays observable.
+"""
 
 from __future__ import annotations
 
 import abc
+import math
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 from repro.core.architecture import Architecture
 from repro.core.cost.base import Cost, CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mapping import Mapping
 from repro.core.mapspace import MapSpace
 from repro.core.problem import Problem
@@ -22,10 +31,23 @@ class SearchResult:
     evaluated: int
     elapsed_s: float
     trajectory: List[Tuple[int, float]] = field(default_factory=list)  # (eval#, best metric)
+    # engine counters (0 when a mapper bypasses the engine)
+    cache_hits: int = 0
+    pruned: int = 0
+    analyzed: int = 0  # full cost-model analyses (cache misses)
 
     @property
     def best_metric(self) -> float:
         return self.best_cost.metric(self.metric) if self.best_cost else float("inf")
+
+    @property
+    def candidates(self) -> int:
+        """Candidates the search considered: scored + bound-pruned."""
+        return self.evaluated + self.pruned
+
+    @property
+    def evals_per_s(self) -> float:
+        return self.candidates / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
 
 class Mapper(abc.ABC):
@@ -37,39 +59,64 @@ class Mapper(abc.ABC):
         space: MapSpace,
         cost_model: CostModel,
         metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
     ) -> SearchResult:
         ...
 
-    def _mk_result(self, metric: str) -> "_Tracker":
-        return _Tracker(metric)
+    def _mk_engine(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str,
+        engine: Optional[EvaluationEngine],
+    ) -> EvaluationEngine:
+        if engine is not None:
+            return engine
+        return EvaluationEngine(cost_model, space.problem, space.arch, metric=metric)
+
+    def _mk_result(
+        self, metric: str, engine: Optional[EvaluationEngine] = None
+    ) -> "_Tracker":
+        return _Tracker(metric, engine)
 
 
 class _Tracker:
     """Shared incumbent tracking for all mappers."""
 
-    def __init__(self, metric: str) -> None:
+    def __init__(self, metric: str, engine: Optional[EvaluationEngine] = None) -> None:
         self.metric = metric
+        self.engine = engine
         self.best_mapping: Optional[Mapping] = None
         self.best_cost: Optional[Cost] = None
+        self.best_metric_value: float = math.inf
         self.evaluated = 0
         self.t0 = time.time()
         self.trajectory: List[Tuple[int, float]] = []
 
     def offer(self, mapping: Mapping, cost: Cost) -> bool:
         self.evaluated += 1
-        if self.best_cost is None or cost.metric(self.metric) < self.best_cost.metric(self.metric):
+        score = cost.metric(self.metric)
+        if self.best_cost is None or score < self.best_metric_value:
             self.best_mapping = mapping
             self.best_cost = cost
-            self.trajectory.append((self.evaluated, cost.metric(self.metric)))
+            self.best_metric_value = score
+            self.trajectory.append((self.evaluated, score))
             return True
         return False
 
     def result(self) -> SearchResult:
+        stats = self.engine.stats if self.engine is not None else None
+        best = self.best_mapping
+        if best is not None and not isinstance(best, Mapping):
+            best = best.to_mapping()  # chain-level genome -> Mapping
         return SearchResult(
-            best_mapping=self.best_mapping,
+            best_mapping=best,
             best_cost=self.best_cost,
             metric=self.metric,
             evaluated=self.evaluated,
             elapsed_s=time.time() - self.t0,
             trajectory=self.trajectory,
+            cache_hits=stats.cache_hits if stats else 0,
+            pruned=stats.pruned if stats else 0,
+            analyzed=stats.evaluated if stats else 0,
         )

@@ -9,10 +9,11 @@ from __future__ import annotations
 
 import math
 import random
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost.analysis import analyze
 from repro.core.cost.base import CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapping import Mapping
 from repro.core.mapspace import MapSpace
@@ -52,7 +53,7 @@ class DecoupledMapper(Mapper):
         self, space: MapSpace, base: Mapping, rng: random.Random, split_level: int
     ) -> Mapping:
         """Keep levels [0, split_level) of `base`, resample the rest."""
-        m = Mapping.from_dict(base.to_dict())
+        m = base.clone()
         for d in space.dims:
             cur = m.levels[split_level - 1].st(d) if split_level > 0 else space.problem.dims[d]
             for i in range(split_level, space.n_levels):
@@ -75,9 +76,16 @@ class DecoupledMapper(Mapper):
             m.levels[i].temporal_order = tuple(order)
         return m
 
-    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
+    ) -> SearchResult:
+        engine = self._mk_engine(space, cost_model, metric, engine)
         rng = random.Random(self.seed)
-        tr = self._mk_result(metric)
+        tr = self._mk_result(metric, engine)
         # the off-chip boundary: everything above the first level with fanout>1
         split = next(
             (i for i, f in enumerate(space.child_fanout) if f > 1),
@@ -103,9 +111,12 @@ class DecoupledMapper(Mapper):
                 prefixes.append(m)
             if len(prefixes) >= self.top_k:
                 break
-        # Phase 2: on-chip search conditioned on each prefix
+        # Phase 2: on-chip search conditioned on each prefix. Candidates are
+        # generated (RNG-only) and legality-filtered first, then the batch is
+        # admitted against the incumbent and evaluated through the engine.
         per_prefix = max(1, self.onchip_samples // max(1, len(prefixes)))
         for base in prefixes:
+            batch: List[Mapping] = []
             for _ in range(per_prefix):
                 m = self._resample_inner(space, base, rng, split)
                 if not m.is_legal(space.problem, space.arch):
@@ -114,9 +125,12 @@ class DecoupledMapper(Mapper):
                     m, space.problem, space.arch
                 ):
                     continue
-                cost = cost_model.evaluate(space.problem, m, space.arch)
-                tr.offer(m, cost)
+                batch.append(m)
+            costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)
+            for m, cost in zip(batch, costs):
+                if cost is not None:
+                    tr.offer(m, cost)
         if tr.best_mapping is None:  # fall back to the best phase-1 candidate
             m = cands[0][1]
-            tr.offer(m, cost_model.evaluate(space.problem, m, space.arch))
+            tr.offer(m, engine.evaluate(m))
         return tr.result()

@@ -1,10 +1,19 @@
-"""Exhaustive (capped) map-space search."""
+"""Exhaustive (capped) map-space search.
+
+Tilings stream out of ``MapSpace.enumerate_tilings`` in chunks; each chunk
+is admitted against the current incumbent (a bound-dominated tiling can
+never become the running minimum) and the survivors are batch-evaluated.
+The argmin over the stream -- and the reported best mapping -- is exactly
+the one serial evaluation finds.
+"""
 
 from __future__ import annotations
 
+import itertools
 from typing import Optional
 
 from repro.core.cost.base import CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapspace import MapSpace
 
@@ -12,13 +21,32 @@ from repro.core.mapspace import MapSpace
 class ExhaustiveMapper(Mapper):
     name = "exhaustive"
 
-    def __init__(self, max_mappings: Optional[int] = 50_000, orders: str = "canonical") -> None:
+    def __init__(
+        self,
+        max_mappings: Optional[int] = 50_000,
+        orders: str = "canonical",
+        batch_size: int = 256,
+    ) -> None:
         self.max_mappings = max_mappings
         self.orders = orders
+        self.batch_size = batch_size
 
-    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
-        tr = self._mk_result(metric)
-        for m in space.enumerate_tilings(max_mappings=self.max_mappings, orders=self.orders):
-            cost = cost_model.evaluate(space.problem, m, space.arch)
-            tr.offer(m, cost)
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
+    ) -> SearchResult:
+        engine = self._mk_engine(space, cost_model, metric, engine)
+        tr = self._mk_result(metric, engine)
+        stream = space.enumerate_genomes(max_mappings=self.max_mappings, orders=self.orders)
+        while True:
+            chunk = list(itertools.islice(stream, self.batch_size))
+            if not chunk:
+                break
+            costs = engine.evaluate_batch(chunk, incumbent=tr.best_metric_value)
+            for m, c in zip(chunk, costs):
+                if c is not None:
+                    tr.offer(m, c)
         return tr.result()

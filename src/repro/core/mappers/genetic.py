@@ -4,17 +4,26 @@ Standard GA over the unified mapping genome (per-dim divisor chains +
 per-level loop orders): tournament selection, chain crossover, tile/order
 mutation, elitism. Works with ANY cost model -- in the paper's framing
 this is the previously-impossible "GAMMA driving Timeloop" combination.
+
+Fitness is computed through the evaluation engine: each generation's
+children are generated first (only the RNG advances) and then scored as
+one batch, so the signature cache absorbs the heavy candidate re-visiting
+of mutate/crossover (typically ~half of all evaluations) and pool fan-out
+applies when enabled. Selection needs a true fitness for every member, so
+the lower-bound filter is NOT applied here -- population dynamics, and
+therefore results for fixed seeds, are identical to serial evaluation.
 """
 
 from __future__ import annotations
 
 import random
-from typing import List, Tuple
+from operator import itemgetter
+from typing import List, Optional, Tuple
 
-from repro.core.cost.base import Cost, CostModel
+from repro.core.cost.base import CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mappers.base import Mapper, SearchResult
-from repro.core.mapping import Mapping
-from repro.core.mapspace import MapSpace
+from repro.core.mapspace import MapSpace, fast_sample
 
 
 class GeneticMapper(Mapper):
@@ -36,32 +45,43 @@ class GeneticMapper(Mapper):
         self.mutation_rate = mutation_rate
         self.seed = seed
 
-    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
+    ) -> SearchResult:
+        engine = self._mk_engine(space, cost_model, metric, engine)
         rng = random.Random(self.seed)
-        tr = self._mk_result(metric)
+        tr = self._mk_result(metric, engine)
 
-        def score(m: Mapping) -> Cost:
-            c = cost_model.evaluate(space.problem, m, space.arch)
+        seeds = [space.random_genome(rng) for _ in range(self.population)]
+        costs = engine.evaluate_batch(seeds)
+        pop: List[Tuple[float, object]] = []
+        for m, c in zip(seeds, costs):
             tr.offer(m, c)
-            return c
+            pop.append((c.metric(metric), m))
 
-        pop: List[Tuple[float, Mapping]] = []
-        for _ in range(self.population):
-            m = space.random_mapping(rng)
-            pop.append((score(m).metric(metric), m))
-
+        fitness = itemgetter(0)
+        tournament = min(self.tournament, self.population)
         for _gen in range(self.generations):
-            pop.sort(key=lambda t: t[0])
-            nxt: List[Tuple[float, Mapping]] = pop[: self.elite]
-            while len(nxt) < self.population:
-                # tournament selection
-                def pick() -> Mapping:
-                    contenders = rng.sample(pop, min(self.tournament, len(pop)))
-                    return min(contenders, key=lambda t: t[0])[1]
+            pop.sort(key=fitness)
+            nxt: List[Tuple[float, object]] = pop[: self.elite]
 
-                child = space.crossover(pick(), pick(), rng)
+            def pick():
+                contenders = fast_sample(rng, pop, min(tournament, len(pop)))
+                return min(contenders, key=fitness)[1]
+
+            children = []
+            while len(nxt) + len(children) < self.population:
+                child = space.crossover_genome(pick(), pick(), rng)
                 if rng.random() < self.mutation_rate:
-                    child = space.mutate(child, rng)
-                nxt.append((score(child).metric(metric), child))
+                    child = space.mutate_genome(child, rng)
+                children.append(child)
+            ccosts = engine.evaluate_batch(children)
+            for m, c in zip(children, ccosts):
+                tr.offer(m, c)
+                nxt.append((c.metric(metric), m))
             pop = nxt
         return tr.result()

@@ -11,9 +11,10 @@ from __future__ import annotations
 
 import math
 import random
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.cost.base import CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapping import LevelMapping, Mapping
 from repro.core.mapspace import MapSpace
@@ -103,21 +104,36 @@ class HeuristicMapper(Mapper):
             return m
         return space.random_mapping(rng)
 
-    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
+    ) -> SearchResult:
+        engine = self._mk_engine(space, cost_model, metric, engine)
         rng = random.Random(self.seed)
-        tr = self._mk_result(metric)
+        tr = self._mk_result(metric, engine)
         for r in range(self.restarts):
             m = self._greedy_seed(space, rng) if r == 0 else space.random_mapping(rng)
             if space.constraints is not None and not space.constraints.ok(
                 m, space.problem, space.arch
             ):
                 m = space.random_mapping(rng)
-            best = cost_model.evaluate(space.problem, m, space.arch)
+            best = engine.evaluate(m)
             tr.offer(m, best)
+            best_s = best.metric(metric)
             for _ in range(self.climb_steps // self.restarts):
                 cand = space.mutate(m, rng)
-                c = cost_model.evaluate(space.problem, cand, space.arch)
+                # prune against the LOCAL incumbent: a candidate whose bound
+                # is >= the climb's best can neither be an accepted move nor
+                # improve the global best (global <= local), so the walk is
+                # unchanged vs. evaluating everything.
+                c = engine.evaluate_admit(cand, incumbent=best_s)
+                if c is None:
+                    continue
                 tr.offer(cand, c)
-                if c.metric(metric) < best.metric(metric):
-                    m, best = cand, c
+                s = c.metric(metric)
+                if s < best_s:
+                    m, best, best_s = cand, c, s
         return tr.result()

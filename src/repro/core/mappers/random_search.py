@@ -1,10 +1,20 @@
-"""Random-sampling mapper (Timeloop's default search [11])."""
+"""Random-sampling mapper (Timeloop's default search [11]).
+
+Samples are drawn in chunks and scored through the evaluation engine:
+bound-dominated candidates are pruned before the reuse analysis, the rest
+are batch-evaluated (pool fan-out when the engine has workers). Candidate
+generation touches only the RNG, so chunking preserves the exact sample
+stream -- and a pruned candidate provably cannot improve the incumbent --
+which keeps results identical to one-at-a-time evaluation for fixed seeds.
+"""
 
 from __future__ import annotations
 
 import random
+from typing import Optional
 
 from repro.core.cost.base import CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapspace import MapSpace
 
@@ -12,25 +22,48 @@ from repro.core.mapspace import MapSpace
 class RandomMapper(Mapper):
     name = "random"
 
-    def __init__(self, samples: int = 2000, seed: int = 0, patience: int = 0) -> None:
+    def __init__(
+        self,
+        samples: int = 2000,
+        seed: int = 0,
+        patience: int = 0,
+        batch_size: int = 128,
+    ) -> None:
         """``patience``: stop after this many consecutive non-improving
         samples (0 = never early-stop), mirroring Timeloop's victory
         condition."""
         self.samples = samples
         self.seed = seed
         self.patience = patience
+        self.batch_size = batch_size
 
-    def search(self, space: MapSpace, cost_model: CostModel, metric: str = "edp") -> SearchResult:
+    def search(
+        self,
+        space: MapSpace,
+        cost_model: CostModel,
+        metric: str = "edp",
+        engine: Optional[EvaluationEngine] = None,
+    ) -> SearchResult:
+        engine = self._mk_engine(space, cost_model, metric, engine)
         rng = random.Random(self.seed)
-        tr = self._mk_result(metric)
+        tr = self._mk_result(metric, engine)
         stale = 0
-        for _ in range(self.samples):
-            m = space.random_mapping(rng)
-            cost = cost_model.evaluate(space.problem, m, space.arch)
-            if tr.offer(m, cost):
-                stale = 0
-            else:
-                stale += 1
-                if self.patience and stale >= self.patience:
-                    break
+        remaining = self.samples
+        while remaining > 0:
+            k = min(self.batch_size, remaining)
+            remaining -= k
+            batch = [space.random_genome(rng) for _ in range(k)]
+            costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)
+            stop = False
+            for m, c in zip(batch, costs):
+                if c is not None and tr.offer(m, c):
+                    stale = 0
+                else:
+                    # pruned candidates are provably non-improving
+                    stale += 1
+                    if self.patience and stale >= self.patience:
+                        stop = True
+                        break
+            if stop:
+                break
         return tr.result()

@@ -44,6 +44,31 @@ def _prod(xs) -> int:
     return math.prod(xs) if xs else 1
 
 
+def mapping_signature(mapping: "Mapping", dims: Sequence[str]):
+    """Canonical hashable identity of a mapping's cost-relevant content.
+
+    Per level: (effective temporal order, TT per dim, ST per dim), with the
+    order normalized the way the reuse analysis normalizes it (declared
+    order first, then missing dims in problem order). Mappings that differ
+    only in how they *store* an equivalent order hash identically; equal
+    signatures imply byte-identical analytical costs.
+    """
+    sig = []
+    for lm in mapping.levels:
+        declared = tuple(lm.temporal_order)
+        order = declared + tuple(d for d in dims if d not in declared)
+        tts = lm.temporal_tile_sizes
+        sts = lm.spatial_tile_sizes
+        sig.append(
+            (
+                order,
+                tuple(int(tts.get(d, 1)) for d in dims),
+                tuple(int(sts.get(d, 1)) for d in dims),
+            )
+        )
+    return tuple(sig)
+
+
 @dataclass
 class LevelMapping:
     """Tiling directives targeting one cluster level (paper Fig. 5(d))."""
@@ -165,7 +190,68 @@ class Mapping:
         return errs
 
     def is_legal(self, problem: Problem, arch: Architecture) -> bool:
-        return not self.violations(problem, arch)
+        """Early-exit legality predicate.
+
+        Checks exactly the conditions ``violations`` reports, but returns on
+        the first failure without building diagnostic strings -- this is on
+        the hot path of every map-space sampler and neighborhood operator.
+        Use ``violations`` when you need to know WHY a mapping is illegal.
+        """
+        n = len(self.levels)
+        if n != arch.n_levels:
+            return False
+        dims = tuple(problem.dims.keys())
+        dimset = set(dims)
+        outer: TMapping[str, int] = problem.dims
+        for i, lm in enumerate(self.levels):
+            tts = lm.temporal_tile_sizes
+            sts = lm.spatial_tile_sizes
+            inner = self.levels[i + 1].temporal_tile_sizes if i + 1 < n else None
+            par = 1
+            for d in dims:
+                tt = int(tts.get(d, 1))
+                st = int(sts.get(d, 1))
+                if tt < 1 or st < 1:
+                    return False
+                if outer[d] % tt or tt % st:
+                    return False
+                par *= tt // st
+                if inner is not None:
+                    itt = int(inner.get(d, 1))
+                    if st < itt or st % max(1, itt):
+                        return False
+            child_fanout = arch.clusters[i + 1].fanout if i + 1 < n else 1
+            if par > child_fanout:
+                return False
+            cl = arch.clusters[i]
+            if not cl.virtual and cl.memory_bytes is not None and i > 0:
+                tile = {d: int(tts.get(d, 1)) for d in dims}
+                need = sum(ds.footprint_bytes(tile) for ds in problem.data_spaces)
+                if need > cl.memory_bytes:
+                    return False
+            if not set(lm.temporal_order) <= dimset:
+                return False
+            outer = {d: int(sts.get(d, 1)) for d in dims}
+        last = self.levels[-1]
+        for d in dims:
+            if last.tt(d) != last.st(d):
+                return False
+        return True
+
+    def clone(self) -> "Mapping":
+        """Fast deep copy (cheaper than a to_dict/from_dict round trip)."""
+        return Mapping(
+            [
+                LevelMapping(
+                    lm.cluster,
+                    lm.temporal_order,
+                    dict(lm.temporal_tile_sizes),
+                    dict(lm.spatial_tile_sizes),
+                )
+                for lm in self.levels
+            ],
+            self.problem_name,
+        )
 
     # ------------------------------------------------------------------ #
     # Rendering (paper Fig. 5(e)/Fig. 7 loop-nest form) + serialization

@@ -23,6 +23,7 @@ from repro.core.architecture import Architecture
 from repro.core.constraints import Constraints
 from repro.core.cost import MaestroLikeModel, TimeloopLikeModel, TPURooflineModel
 from repro.core.cost.base import Cost, CostModel
+from repro.core.cost.engine import EvaluationEngine
 from repro.core.ir.conformability import conformable_models
 from repro.core.ir.dialects import LayerOp
 from repro.core.ir.lowering import lower_layer_to_problem
@@ -60,8 +61,17 @@ def union_opt(
     cost_model: TUnion[str, CostModel] = "timeloop",
     metric: str = "edp",
     constraints: Optional[Constraints] = None,
+    engine_workers: int = 0,
+    engine_cache: int = 1 << 16,
+    engine_prune: bool = True,
     **mapper_kw,
 ) -> UnionSolution:
+    """Run one end-to-end mapping search.
+
+    ``engine_workers`` / ``engine_cache`` / ``engine_prune`` configure the
+    shared :class:`EvaluationEngine` all mappers score candidates through
+    (process-pool fan-out, memo-cache capacity, lower-bound admission).
+    """
     problem = (
         lower_layer_to_problem(workload) if isinstance(workload, LayerOp) else workload
     )
@@ -77,7 +87,19 @@ def union_opt(
         )
     mp = MAPPER_REGISTRY[mapper](**mapper_kw) if isinstance(mapper, str) else mapper
     space = MapSpace(problem, arch, constraints)
-    res = mp.search(space, cm, metric)
+    engine = EvaluationEngine(
+        cm,
+        problem,
+        arch,
+        metric=metric,
+        cache_size=engine_cache,
+        prune=engine_prune,
+        workers=engine_workers,
+    )
+    try:
+        res = mp.search(space, cm, metric, engine=engine)
+    finally:
+        engine.close()
     if res.best_mapping is None:
         raise RuntimeError(f"mapper {mp.name} found no legal mapping for {problem.name}")
     return UnionSolution(

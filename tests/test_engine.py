@@ -1,0 +1,185 @@
+"""EvaluationEngine correctness: cache/bound/batch paths must be exactly
+the direct cost-model evaluation, and pruning must never discard a
+candidate better than the incumbent."""
+
+import random
+
+import pytest
+
+from repro.core.architecture import cloud_accelerator, edge_accelerator
+from repro.core.cost import (
+    EvaluationEngine,
+    MaestroLikeModel,
+    TimeloopLikeModel,
+    TPURooflineModel,
+    mapping_signature,
+)
+from repro.core.cost.analysis import get_context
+from repro.core.mapspace import MapSpace
+from repro.core.optimizer import union_opt
+from repro.core.problem import Problem
+
+GEMM = Problem.gemm(64, 32, 16, word_bytes=1)
+CONV = Problem.conv2d(2, 8, 8, 7, 7, 3, 3, stride=2, name="conv_t", word_bytes=1)
+MODELS = [TimeloopLikeModel, MaestroLikeModel, TPURooflineModel]
+
+
+def _costs_equal(a, b):
+    return (
+        a.latency_cycles == b.latency_cycles
+        and a.energy_pj == b.energy_pj
+        and a.utilization == b.utilization
+        and a.macs == b.macs
+        and a.frequency_hz == b.frequency_hz
+        and a.breakdown == b.breakdown
+    )
+
+
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_engine_bitwise_identical_to_direct_evaluate(problem, model_cls):
+    """Engine-cached results == direct cost_model.evaluate, bit for bit,
+    for all three cost models on GEMM and CONV."""
+    arch = edge_accelerator()
+    cm = model_cls()
+    space = MapSpace(problem, arch)
+    rng = random.Random(0)
+    eng = EvaluationEngine(cm, problem, arch, metric="edp")
+    mappings = [space.random_mapping(rng) for _ in range(30)]
+    genomes = [space.random_genome(rng) for _ in range(30)]
+    for m in mappings:
+        assert _costs_equal(eng.evaluate(m), cm.evaluate(problem, m, arch))
+    # second pass: served from cache, still identical
+    hits_before = eng.stats.cache_hits
+    for m in mappings:
+        assert _costs_equal(eng.evaluate(m), cm.evaluate(problem, m, arch))
+    assert eng.stats.cache_hits >= hits_before + len(mappings)
+    # genome candidates and the batch path agree too
+    costs = eng.evaluate_batch(genomes)
+    for g, c in zip(genomes, costs):
+        assert _costs_equal(c, cm.evaluate(problem, g.to_mapping(), arch))
+
+
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_lower_bound_never_exceeds_true_cost(problem, model_cls):
+    """Seeded property test: the admission bound is a true lower bound, so
+    pruning can never discard a candidate better than the incumbent."""
+    arch = cloud_accelerator()
+    cm = model_cls()
+    space = MapSpace(problem, arch)
+    ctx = get_context(problem, arch)
+    rng = random.Random(1234)
+    for metric in ("edp", "latency", "energy"):
+        eng = EvaluationEngine(cm, problem, arch, metric=metric)
+        for _ in range(120):
+            g = space.random_genome(rng)
+            m = g.to_mapping()
+            true = cm.evaluate(problem, m, arch).metric(metric)
+            lb = eng.lower_bound(m)
+            assert lb <= true + 1e-12 * max(1.0, abs(true)), (
+                model_cls.__name__,
+                metric,
+            )
+            # chain-level bound (genome fast path) matches the sig bound
+            fn = cm.lower_bound_chains_fn(problem, arch)
+            if fn is not None:
+                assert fn(g.chain_list, g.orders) == cm.lower_bound_fn(
+                    problem, arch
+                )(g.signature(ctx.dims))
+
+
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", [TimeloopLikeModel, MaestroLikeModel])
+def test_pruned_candidates_cannot_beat_incumbent(problem, model_cls):
+    arch = cloud_accelerator()
+    cm = model_cls()
+    space = MapSpace(problem, arch)
+    rng = random.Random(7)
+    eng = EvaluationEngine(cm, problem, arch, metric="edp")
+    incumbent = cm.evaluate(problem, space.random_mapping(rng), arch).metric("edp")
+    pruned_seen = 0
+    for _ in range(200):
+        g = space.random_genome(rng)
+        c = eng.evaluate_admit(g, incumbent)
+        true = cm.evaluate(problem, g.to_mapping(), arch).metric("edp")
+        if c is None:
+            pruned_seen += 1
+            assert true >= incumbent  # never prunes an improver
+        else:
+            assert c.metric("edp") == true
+    assert pruned_seen > 0  # the filter actually engages on this workload
+    assert eng.stats.pruned == pruned_seen
+
+
+def test_bound_pruned_search_identical_to_unpruned():
+    """Search with cache+bound on == search with both off: same best cost."""
+    arch = cloud_accelerator()
+    for mapper in ("random", "genetic", "heuristic", "exhaustive"):
+        kw = {"max_mappings": 400} if mapper == "exhaustive" else {}
+        on = union_opt(GEMM, arch, mapper=mapper, cost_model="timeloop", **kw)
+        off = union_opt(
+            GEMM, arch, mapper=mapper, cost_model="timeloop",
+            engine_prune=False, engine_cache=1, **kw,
+        )
+        assert on.cost.edp == off.cost.edp, mapper
+        assert on.mapping.to_dict() == off.mapping.to_dict(), mapper
+
+
+def test_signature_canonicalizes_equivalent_orders():
+    arch = edge_accelerator()
+    space = MapSpace(GEMM, arch)
+    m = space.random_mapping(random.Random(5))
+    dims = tuple(GEMM.dims)
+    for lm in m.levels:  # declared order = problem order at every level
+        lm.temporal_order = dims
+    sig1 = mapping_signature(m, dims)
+    m2 = m.clone()
+    # an empty declared order normalizes to problem order: same signature
+    m2.levels[0].temporal_order = ()
+    assert mapping_signature(m2, dims) == sig1
+
+
+def test_search_counters_reported():
+    arch = cloud_accelerator()
+    sol = union_opt(
+        dnn := Problem.gemm(128, 64, 64, word_bytes=1), arch,
+        mapper="random", cost_model="timeloop", samples=600,
+    )
+    res = sol.search
+    assert res.pruned > 0
+    assert res.analyzed > 0
+    assert res.candidates == res.evaluated + res.pruned
+    assert res.evals_per_s > 0
+    gen = union_opt(dnn, arch, mapper="genetic", cost_model="timeloop")
+    assert gen.search.cache_hits > 0
+
+
+def test_engine_batch_dedups_within_batch():
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+    g = space.random_genome(random.Random(3))
+    eng = EvaluationEngine(cm, GEMM, arch)
+    costs = eng.evaluate_batch([g, g, g])
+    assert eng.stats.evaluated == 1
+    assert all(c is costs[0] for c in costs)
+
+
+def test_engine_worker_pool_matches_serial():
+    """Optional process-pool fan-out returns the same costs (skipped
+    gracefully if the sandbox forbids subprocesses)."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(9)
+    ms = [space.random_mapping(rng) for _ in range(16)]
+    serial = EvaluationEngine(cm, GEMM, arch)
+    pooled = EvaluationEngine(cm, GEMM, arch, workers=2)
+    try:
+        got = pooled.evaluate_batch(ms)
+        want = serial.evaluate_batch(ms)
+        for a, b in zip(got, want):
+            assert _costs_equal(a, b)
+    finally:
+        pooled.close()

@@ -3,6 +3,10 @@
 import math
 import random
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

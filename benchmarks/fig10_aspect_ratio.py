@@ -35,6 +35,7 @@ def run() -> dict:
                                 cost_model="maestro", metric="edp")
                 row["x".join(map(str, aspect))] = {
                     "edp": sol.cost.edp, "util": sol.cost.utilization,
+                    "search": sol.search.stats_dict(),
                 }
             result[tag][wname] = row
             best = min(row, key=lambda k: row[k]["edp"])

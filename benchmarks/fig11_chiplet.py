@@ -24,17 +24,23 @@ def run() -> dict:
     result = {"figure": "fig11", "bandwidths_gbps": [b / 1e9 for b in BWS], "rows": {}}
     for wname, problem in layers.items():
         edps = []
+        searches = []
         for bw in BWS:
             arch = chiplet_accelerator(fill_bandwidth=bw)
             sol = union_opt(problem, arch, mapper="heuristic",
                             cost_model="timeloop", metric="edp")
             edps.append(sol.cost.edp)
+            searches.append(sol.search.stats_dict())
         # saturation point: first bw within 5% of the best (highest-bw) EDP
         sat = next(
             (BWS[i] for i in range(len(BWS)) if edps[i] <= edps[-1] * 1.05),
             BWS[-1],
         )
-        result["rows"][wname] = {"edp": edps, "saturation_bw_gbps": sat / 1e9}
+        result["rows"][wname] = {
+            "edp": edps,
+            "saturation_bw_gbps": sat / 1e9,
+            "search": searches,
+        }
         print(f"[fig11] {wname:10s} EDP x{edps[0]/edps[-1]:7.1f} drop over sweep; "
               f"saturates at ~{sat/1e9:g} GB/s")
     OUT.mkdir(parents=True, exist_ok=True)

@@ -7,6 +7,7 @@ latency / EDP spread, and show the best mapping Union-opt finds.
 
 from __future__ import annotations
 
+import argparse
 import json
 import random
 from pathlib import Path
@@ -47,6 +48,7 @@ def run(samples: int = 300, seed: int = 0) -> dict:
         "best_sampled_edp": rows[0]["edp"],
         "union_opt_edp": best.cost.edp,
         "union_opt_util": best.cost.utilization,
+        "search": best.search.stats_dict(),
         "normalized": [
             {"energy": r["energy"] / e_min, "latency": r["latency"] / l_min}
             for r in rows[:: max(1, samples // 50)]
@@ -62,4 +64,9 @@ def run(samples: int = 300, seed: int = 0) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=300,
+                    help="sampled mappings (CI smoke uses a reduced count)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(samples=args.samples, seed=args.seed)

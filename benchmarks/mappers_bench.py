@@ -48,11 +48,12 @@ SEED_EVALS_PER_S = {
 }
 
 
-def run(smoke: bool = False, repeats: int = 5, workers: int = 0) -> dict:
+def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
+        backend: str = "numpy") -> dict:
     problem = dnn_layers()["BERT-2"]
     arch = cloud_accelerator()
     cost_models = COST_MODELS[:1] if smoke else COST_MODELS
-    mappers = ["random", "genetic"] if smoke else MAPPERS
+    mappers = ["random", "exhaustive", "genetic"] if smoke else MAPPERS
     rows = []
     for cm in cost_models:
         for mp in mappers:
@@ -64,13 +65,15 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0) -> dict:
                     kw["samples"] = 800
                 if mp == "genetic":
                     kw["generations"] = 8
+                if mp == "exhaustive":
+                    kw["max_mappings"] = 1500
             best_s = float("inf")
             sol = None
             for _ in range(max(1, repeats)):
                 t0 = time.time()
                 sol = union_opt(
                     problem, arch, mapper=mp, cost_model=cm, metric="edp",
-                    engine_workers=workers, **kw,
+                    engine_workers=workers, engine_backend=backend, **kw,
                 )
                 best_s = min(best_s, time.time() - t0)
             res = sol.search
@@ -106,6 +109,7 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0) -> dict:
         "problem": "BERT-2",
         "smoke": smoke,
         "engine_workers": workers,
+        "engine_backend": backend,
         "rows": rows,
     }
     OUT.mkdir(parents=True, exist_ok=True)
@@ -113,6 +117,7 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0) -> dict:
     summary = {
         "problem": "BERT-2",
         "smoke": smoke,
+        "engine_backend": backend,
         "evals_per_s": {f"{r['cost_model']}/{r['mapper']}": round(r["evals_per_s"]) for r in rows},
         "cache_hit_rate": {f"{r['cost_model']}/{r['mapper']}": round(r["cache_hit_rate"], 3) for r in rows},
         "pruned": {f"{r['cost_model']}/{r['mapper']}": r["pruned"] for r in rows},
@@ -131,5 +136,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true", help="reduced CI matrix")
     ap.add_argument("--repeats", type=int, default=5, help="take best-of-N per row")
     ap.add_argument("--workers", type=int, default=0, help="engine process-pool size")
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax", "none"],
+                    help="vectorized miss-batch backend (none = scalar path)")
     args = ap.parse_args()
-    run(smoke=args.smoke, repeats=args.repeats, workers=args.workers)
+    run(smoke=args.smoke, repeats=args.repeats, workers=args.workers,
+        backend=args.backend)

@@ -31,9 +31,54 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
+import numpy as np
+
 from repro.core.architecture import Architecture
 from repro.core.mapping import Mapping, mapping_signature
 from repro.core.problem import DataSpace, Problem
+
+# Exactness headroom for the vectorized (float64) batch path: every
+# integer-valued product the scalar analysis computes exactly (arbitrary-
+# precision Python ints) must stay below 2**53 for the float pipeline to be
+# bit-identical. Models reject the batch result (falling back to the scalar
+# path) when any guarded quantity reaches this threshold; the extra factor
+# of 2 absorbs rounding drift in the guard computation itself.
+BATCH_EXACT_LIMIT = float(1 << 52)
+
+
+class DsTrafficBatch(NamedTuple):
+    """Per-data-space traffic arrays over a signature batch.
+
+    Every array is float64 of shape ``[B, L]`` where ``L`` indexes
+    ``AnalysisContext.real_levels``. Values are exact integers as long as
+    they stay below :data:`BATCH_EXACT_LIMIT` (the models enforce this).
+    """
+
+    fills: np.ndarray
+    drains: np.ndarray
+    parent_reads: np.ndarray
+    parent_writes: np.ndarray
+    foot: np.ndarray
+
+
+class BatchTraffic(NamedTuple):
+    """Stacked result of :meth:`AnalysisContext.signature_traffic_batch`.
+
+    The float arrays mirror the tuples :meth:`signature_traffic` returns
+    per candidate; ``tt``/``st``/``fans`` are the clamped int64 tile
+    matrices (``[B, n_levels, D]``) so model-specific terms (e.g. the
+    roofline collective model) can derive further quantities without
+    re-stacking the signatures.
+    """
+
+    compute_cycles: np.ndarray  # [B] float64
+    total_trips: np.ndarray  # [B] float64
+    par: np.ndarray  # [B] float64
+    inst_at: np.ndarray  # [B, n_levels] float64 (instances above each level)
+    tt: np.ndarray  # [B, n_levels, D] int64
+    st: np.ndarray  # [B, n_levels, D] int64
+    fans: np.ndarray  # [B, n_levels, D] int64
+    rows: Tuple[DsTrafficBatch, ...]  # one entry per data space
 
 
 class Loop(NamedTuple):
@@ -177,6 +222,11 @@ class AnalysisContext:
             self._lb_dram_child = self.real_levels[1]
             self._top_read_e = arch.clusters[0].read_energy
             self._top_write_e = arch.clusters[0].write_energy
+        # --- vectorized batch-analysis state (built lazily) ------------- #
+        self._np_batch_core = None
+        self._jax_batch_core = None
+        self._jax = None
+        self._jax_failed = False
 
     # ------------------------------------------------------------------ #
     def analyze(self, mapping: Mapping) -> AccessProfile:
@@ -373,6 +423,236 @@ class AnalysisContext:
             for pos, i in enumerate(self.real_levels):
                 prof.traffic[(ds.name, i)] = LevelTraffic(*ds_rows[pos])
         return prof
+
+    # ------------------------------------------------------------------ #
+    # Vectorized batch analysis: a whole miss-batch of signatures scored
+    # as one array program. ``signature_traffic_batch`` stacks the batch
+    # into dense [B, n_levels, D] tile/order matrices and runs the same
+    # reuse rules as ``signature_traffic`` over all candidates at once --
+    # numpy by default, optionally a jitted JAX program for device
+    # sweeps. All quantities are integer-valued and computed in float64;
+    # they are exact (bit-identical to the scalar path) as long as they
+    # stay below BATCH_EXACT_LIMIT, which the cost models enforce before
+    # trusting a batch result.
+    # ------------------------------------------------------------------ #
+    def stack_signatures(self, sigs):
+        """Dense (tt, st, perm) int64 matrices ``[B, n_levels, D]`` for a
+        batch of canonical signatures. ``perm[b, i, p]`` is the dim index
+        at position ``p`` of level ``i``'s effective temporal order."""
+        n = self.n_levels
+        order_idx = self._order_idx
+        dim_index = self._dim_index
+        B = len(sigs)
+        D = len(self.dims)
+        count = B * n * D
+        tt = np.fromiter(
+            (v for sig in sigs for lvl in sig for v in lvl[1]),
+            dtype=np.int64,
+            count=count,
+        ).reshape(B, n, D)
+        st = np.fromiter(
+            (v for sig in sigs for lvl in sig for v in lvl[2]),
+            dtype=np.int64,
+            count=count,
+        ).reshape(B, n, D)
+
+        def idx_of(order):
+            oidx = order_idx.get(order)
+            if oidx is None:
+                oidx = tuple(dim_index[d] for d in order)
+                order_idx[order] = oidx
+            return oidx
+
+        perm = np.fromiter(
+            (j for sig in sigs for lvl in sig for j in idx_of(lvl[0])),
+            dtype=np.int64,
+            count=count,
+        ).reshape(B, n, D)
+        return tt, st, perm
+
+    def _make_batch_core(self, xp, lax=None):
+        """Build the (tt, st, perm) -> stacked-traffic array program.
+
+        ``xp`` is numpy or jax.numpy; ``lax`` supplies ``cummax`` on the
+        JAX path. The program is the exact vectorization of
+        :meth:`signature_traffic`: same trip/fan derivation, same
+        relevant/irrelevant prefix products (the order-dependent
+        ``changes`` term uses a cummax over the last relevant loop
+        position), same footprint spans.
+        """
+        sizes_row = np.asarray(self._size_tuple, dtype=np.int64)[None, None, :]
+        n = self.n_levels
+        D = len(self.dims)
+        real_levels = list(self.real_levels)
+        L = len(real_levels)
+        real_parent = self.real_parent
+        mpc = self.macs_per_cycle
+        K = len(self._ds_rel_sets)
+        # [K, D] relevance mask, stacked over data spaces: the reuse
+        # cumprods below run for ALL data spaces in one array op.
+        rel_stack = np.array(
+            [[j in rset for j in range(D)] for rset in self._ds_rel_sets], dtype=bool
+        )
+        ds_axes = [axes for _wb, axes, _rel in self._ds_axes_idx]
+        ds_out = [ds.is_output for ds, _rel in self.ds_rel]
+        ends = np.asarray([(i + 1) * D - 1 for i in real_levels])
+        real_arr = np.asarray(real_levels)
+        # parent gather indices for rel_spatial (parentless levels divide by
+        # themselves -> ratio 1.0 exactly)
+        parent_arr = np.asarray(
+            [real_parent[i] if real_parent[i] is not None else i for i in real_levels]
+        )
+        pos_seq = np.arange(n * D)
+
+        def core(tt, st, perm):
+            B = tt.shape[0]
+            tt = xp.maximum(tt, 1)
+            st = xp.maximum(st, 1)
+            outer = xp.concatenate(
+                [xp.broadcast_to(xp.asarray(sizes_row), (B, 1, D)), st[:, :-1, :]],
+                axis=1,
+            )
+            trips = xp.maximum(outer // tt, 1)
+            fans = xp.maximum(tt // st, 1)
+            tripsf = trips.astype(xp.float64)
+            fansf = fans.astype(xp.float64)
+            total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
+            leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
+            compute_cycles = total_trips * xp.ceil(leaf_macs / mpc)
+            par = xp.prod(fansf.reshape(B, n * D), axis=1)
+            lvl_all = xp.prod(fansf, axis=2)  # [B, n]
+            cp_all = xp.cumprod(lvl_all, axis=1)
+            inst_at = xp.concatenate(
+                [xp.ones((B, 1), dtype=xp.float64), cp_all[:, :-1]], axis=1
+            )
+            # temporal loop sequence in emission order (order-major per level)
+            perm_flat = perm.reshape(B, n * D)
+            tseqf = xp.take_along_axis(trips, perm, axis=2).reshape(B, n * D).astype(
+                xp.float64
+            )
+            # ---- all data spaces at once: [K, B, S] ---------------------- #
+            rel_seq = xp.asarray(rel_stack)[:, perm_flat]  # [K, B, S]
+            present = (tseqf > 1.0)[None, :, :]
+            relm = rel_seq & present
+            irrm = (~rel_seq) & present
+            tseq_b = xp.broadcast_to(tseqf[None, :, :], (K, B, n * D))
+            relprod = xp.cumprod(xp.where(relm, tseq_b, 1.0), axis=2)
+            irrprod = xp.cumprod(xp.where(irrm, tseq_b, 1.0), axis=2)
+            # irrelevant-trip product at the LAST relevant loop <= s: gather
+            # the (exclusive == inclusive, s is relevant) irrprod at that
+            # position, 1.0 when no relevant loop yet.
+            idx = xp.where(relm, pos_seq[None, None, :], -1)
+            if lax is None:
+                lastrel = np.maximum.accumulate(idx, axis=2)
+            else:
+                lastrel = lax.cummax(idx, axis=2)
+            gathered = xp.take_along_axis(irrprod, xp.maximum(lastrel, 0), axis=2)
+            ip = xp.where(lastrel >= 0, gathered, 1.0)
+            unique = relprod[:, :, ends]  # [K, B, L]
+            changes = unique * ip[:, :, ends]
+            # spatial: relevant-fan products per level, exclusive cumprod
+            lvl_rel = xp.prod(
+                xp.where(xp.asarray(rel_stack)[:, None, None, :], fansf[None], 1.0),
+                axis=3,
+            )  # [K, B, n]
+            cp_rel = xp.cumprod(lvl_rel, axis=2)
+            srel_excl = xp.concatenate(
+                [xp.ones((K, B, 1), dtype=xp.float64), cp_rel[:, :, :-1]], axis=2
+            )
+            # exact: srel_excl at the parent divides srel_excl at the level
+            rel_sp = srel_excl[:, :, real_arr] / srel_excl[:, :, parent_arr]
+            # footprints per data space (projections differ per ds)
+            ttf_real = tt[:, real_arr, :].astype(xp.float64)  # [B, L, D]
+            rows = []
+            for k in range(K):
+                foot = xp.ones((B, L), dtype=xp.float64)
+                for ax in ds_axes[k]:
+                    span = xp.ones((B, L), dtype=xp.float64)
+                    for coeff, j in ax:
+                        span = span + coeff * (ttf_real[:, :, j] - 1.0)
+                    foot = foot * span
+                cf = changes[k] * foot
+                if ds_out[k]:
+                    rmw = xp.maximum(changes[k] - unique[k], 0.0) * foot
+                    rows.append((rmw, cf, rmw * rel_sp[k], cf * rel_sp[k], foot))
+                else:
+                    z = xp.zeros_like(cf)
+                    rows.append((cf, z, cf * rel_sp[k], z, foot))
+            return compute_cycles, total_trips, par, inst_at, tt, st, fans, tuple(rows)
+
+        return core
+
+    def _run_jax_core(self, tt, st, perm):
+        """JAX-jitted batch core: pads the batch to a power of two (bounding
+        retraces), runs in float64 under ``enable_x64``, returns numpy
+        arrays of the UNPADDED batch -- or None so the caller falls back to
+        numpy (missing jax, trace failure, restricted platform)."""
+        if self._jax_failed:
+            return None
+        try:
+            if self._jax_batch_core is None:
+                import jax
+                from jax import lax
+                import jax.numpy as jnp
+
+                self._jax = jax
+                self._jax_batch_core = jax.jit(self._make_batch_core(jnp, lax))
+            B = tt.shape[0]
+            B2 = 1 << max(0, (B - 1).bit_length())
+            if B2 != B:
+                padn = B2 - B
+                n, D = tt.shape[1], tt.shape[2]
+                ones = np.ones((padn, n, D), dtype=np.int64)
+                tt = np.concatenate([tt, ones])
+                st = np.concatenate([st, ones])
+                perm = np.concatenate(
+                    [perm, np.broadcast_to(np.arange(D, dtype=np.int64), (padn, n, D))]
+                )
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                out = self._jax_batch_core(tt, st, perm)
+            out = self._jax.tree_util.tree_map(np.asarray, out)
+            if out[0].dtype != np.float64:
+                # x64 unavailable on this build: results are float32 and
+                # cannot honour the bit-identity contract
+                self._jax_failed = True
+                return None
+            if B2 != B:
+                out = _tree_slice(out, B)
+            return out
+        except Exception:
+            self._jax_failed = True
+            return None
+
+    def signature_traffic_batch(self, sigs, backend: str = "numpy") -> Optional[BatchTraffic]:
+        """Stacked :meth:`signature_traffic` over a batch of signatures.
+
+        ``backend`` selects the array program: ``"numpy"`` (default) or
+        ``"jax"`` (jitted, falls back to numpy when JAX cannot deliver
+        float64). Returns None for an empty batch.
+        """
+        if not sigs:
+            return None
+        tt, st, perm = self.stack_signatures(sigs)
+        out = None
+        if backend == "jax":
+            out = self._run_jax_core(tt, st, perm)
+        if out is None:
+            if self._np_batch_core is None:
+                self._np_batch_core = self._make_batch_core(np)
+            out = self._np_batch_core(tt, st, perm)
+        compute_cycles, total_trips, par, inst_at, tt_c, st_c, fans, rows = out
+        return BatchTraffic(
+            compute_cycles=np.asarray(compute_cycles),
+            total_trips=np.asarray(total_trips),
+            par=np.asarray(par),
+            inst_at=np.asarray(inst_at),
+            tt=np.asarray(tt_c),
+            st=np.asarray(st_c),
+            fans=np.asarray(fans),
+            rows=tuple(DsTrafficBatch(*(np.asarray(a) for a in r)) for r in rows),
+        )
 
     # ------------------------------------------------------------------ #
     # Cheap chain-only bounds (no reuse analysis). Used by the evaluation
@@ -668,6 +948,22 @@ class AnalysisContext:
         return self.signature_min_boundary_bytes(
             mapping_signature(mapping, self.dims), level
         )
+
+
+def _tree_slice(out, B: int):
+    """Slice the leading (batch) axis of every array in the core's output
+    tuple to ``B`` entries (drops JAX padding)."""
+    compute_cycles, total_trips, par, inst_at, tt, st, fans, rows = out
+    return (
+        compute_cycles[:B],
+        total_trips[:B],
+        par[:B],
+        inst_at[:B],
+        tt[:B],
+        st[:B],
+        fans[:B],
+        tuple(tuple(a[:B] for a in r) for r in rows),
+    )
 
 
 # ---------------------------------------------------------------------- #

@@ -102,6 +102,21 @@ class CostModel(abc.ABC):
         ``evaluate``."""
         return None
 
+    def evaluate_signature_batch(
+        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+    ) -> Optional[List[Cost]]:
+        """Vectorized fast path: the Costs ``evaluate_signature`` (or
+        ``evaluate``) would produce for every signature in ``sigs``,
+        computed as one array program over the stacked batch.
+
+        ``backend`` selects the array stack (``"numpy"`` or ``"jax"``).
+        Return None when unsupported OR when exactness cannot be
+        guaranteed for this batch (values beyond the float64-exact integer
+        range) -- the engine then falls back to per-candidate evaluation.
+        Implementations MUST be bit-identical to the scalar path whenever
+        they return a result."""
+        return None
+
     def conformable(self, problem: Problem) -> bool:
         """Whether this model can evaluate the problem at all.
 

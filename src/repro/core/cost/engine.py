@@ -15,8 +15,11 @@ dies on the throughput of that loop, so this module centralizes it:
     reuse analysis runs. The bound never exceeds the true metric, so
     pruning never discards a candidate better than the incumbent.
   * **Batching** -- ``evaluate_batch`` deduplicates, prunes, and evaluates a
-    population at once, optionally fanning the cache misses out to a
-    process pool (``workers > 0``).
+    population at once. Cache misses are scored as ONE vectorized array
+    program (``CostModel.evaluate_signature_batch`` over the stacked
+    signature matrices; numpy by default, jitted JAX via ``backend="jax"``,
+    bit-identical to the scalar path either way), or optionally fanned out
+    to a process pool (``workers > 0``).
 
 The engine is the single evaluation path for all mappers (see
 ``repro.core.mappers``) and reports evaluated / cache-hit / pruned counters
@@ -38,6 +41,10 @@ from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-expo
 from repro.core.problem import Problem
 
 Signature = Tuple[Tuple[Tuple[str, ...], Tuple[int, ...], Tuple[int, ...]], ...]
+
+# Minimum miss-batch size worth routing through the vectorized array-program
+# path; below this the per-candidate fused scalar path is cheaper.
+_BATCH_MIN = 4
 
 # Candidates are either Mapping objects or chain-level genomes
 # (``repro.core.mapspace.Genome``): anything with .signature(dims) and
@@ -96,6 +103,9 @@ class EvaluationEngine:
     workers:     >0 fans cache misses of ``evaluate_batch`` out to a
                  process pool (beneficial for expensive models / large
                  batches; 0 keeps everything in-process).
+    backend:     array backend for the vectorized miss-batch analysis
+                 ("numpy" default, "jax" for the jitted path); any other
+                 value disables batching (per-candidate scalar path).
     """
 
     def __init__(
@@ -107,6 +117,7 @@ class EvaluationEngine:
         cache_size: int = 1 << 16,
         prune: bool = True,
         workers: int = 0,
+        backend: Optional[str] = "numpy",
     ) -> None:
         self.cost_model = cost_model
         self.problem = problem
@@ -115,6 +126,7 @@ class EvaluationEngine:
         self.cache_size = cache_size
         self.prune = prune
         self.workers = max(0, int(workers))
+        self.backend = backend if backend in ("numpy", "jax") else None
         self.stats = EngineStats()
         self._dims: Tuple[str, ...] = tuple(problem.dims.keys())
         self._cache: "OrderedDict[Signature, Cost]" = OrderedDict()
@@ -243,10 +255,16 @@ class EvaluationEngine:
 
         ``incumbent=inf`` disables pruning for this batch (population
         mappers that need a true fitness for every member use this).
+
+        In-batch duplicates of a PRUNED candidate are tracked the same way
+        duplicates of a miss are: the bound runs once and ``stats.pruned``
+        counts the candidate once per batch, mirroring the dedup semantics
+        of ``evaluated``.
         """
         self.stats.batches += 1
         results: List[Optional[Cost]] = [None] * len(candidates)
         pending: Dict = {}
+        pruned_keys = set()
         misses: List[Tuple[object, object]] = []  # (key, candidate)
         do_prune = self.prune and incumbent != math.inf
         for idx, cand in enumerate(candidates):
@@ -259,8 +277,11 @@ class EvaluationEngine:
             if dup is not None:
                 dup.append(idx)
                 continue
+            if key in pruned_keys:
+                continue
             if do_prune and self._should_prune(cand, incumbent):
                 self.stats.pruned += 1
+                pruned_keys.add(key)
                 continue
             pending[key] = [idx]
             misses.append((key, cand))
@@ -278,6 +299,13 @@ class EvaluationEngine:
     def _evaluate_misses(self, misses: List[Tuple[object, object]]) -> List[Cost]:
         pool = self._get_pool() if (self.workers and len(misses) >= 8) else None
         if pool is None:
+            if self.backend is not None and len(misses) >= _BATCH_MIN:
+                sigs = [self.signature(cand) for _key, cand in misses]
+                costs = self.cost_model.evaluate_signature_batch(
+                    self.problem, self.arch, sigs, backend=self.backend
+                )
+                if costs is not None:
+                    return list(costs)
             return [self._evaluate_one(cand) for _key, cand in misses]
         mappings = [self._materialize(cand) for _key, cand in misses]
         nchunks = min(len(mappings), self.workers * 4)

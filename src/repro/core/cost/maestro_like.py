@@ -22,8 +22,11 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+import numpy as np
+
 from repro.core.architecture import Architecture
 from repro.core.cost.analysis import (
+    BATCH_EXACT_LIMIT,
     analyze,
     boundary_bytes_per_instance,
     get_context,
@@ -131,6 +134,114 @@ class MaestroLikeModel(CostModel):
             frequency_hz=freq,
             breakdown=breakdown,
         )
+
+    def evaluate_signature_batch(
+        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+    ):
+        """Vectorized ``evaluate_signature`` over a whole miss-batch (same
+        float-operation order per candidate; bit-identical results, with a
+        BATCH_EXACT_LIMIT guard that falls back to the scalar path)."""
+        if not self.conformable(problem):
+            raise ValueError(
+                f"{self.name} only supports operations {_SUPPORTED_OPS}, "
+                f"got {problem.operation!r} (unit op {problem.unit_op!r})"
+            )
+        ctx = get_context(problem, arch)
+        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        if bt is None:
+            return None
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        real_parent = ctx.real_parent
+        spaces = problem.data_spaces
+        leaf = clusters[-1]
+        cc = bt.compute_cycles
+        B = cc.shape[0]
+        # par is guarded too: utilization must match the scalar path's
+        # exact-int parallelism bit for bit
+        mx = max(float(cc.max()), float(bt.total_trips.max()), float(bt.par.max()))
+
+        latency = cc.copy()
+        startup = np.zeros(B)
+        fill_levels = {}  # level -> (fill_cycles[B], valid[B])
+        for pos, i in enumerate(real_levels):
+            if i == 0:
+                continue
+            cl = clusters[i]
+            if math.isinf(cl.fill_bandwidth):
+                continue
+            total_fill = np.zeros(B)
+            tile_bytes = np.zeros(B)
+            for k, ds in enumerate(spaces):
+                r = bt.rows[k]
+                t = (r.fills[:, pos] + r.drains[:, pos]) * ds.word_bytes
+                mx = max(mx, float(t.max()))
+                total_fill = total_fill + t
+                tb = r.foot[:, pos] * ds.word_bytes
+                tile_bytes = tile_bytes + tb
+            mx = max(mx, float(tile_bytes.max()))
+            valid = total_fill > 0
+            fill_cycles = total_fill * freq / cl.fill_bandwidth
+            startup = startup + np.where(valid, tile_bytes * freq / cl.fill_bandwidth, 0.0)
+            fill_levels[i] = (fill_cycles, valid)
+            latency = np.where(valid, np.maximum(latency, fill_cycles), latency)
+        latency = latency + startup
+
+        energy = np.zeros(B)
+        noc_energy = np.zeros(B)
+        hop = self.etab.noc_hop_pj_byte
+        inst_at = bt.inst_at
+        for k, ds in enumerate(spaces):
+            wb = ds.word_bytes
+            r = bt.rows[k]
+            for pos, i in enumerate(real_levels):
+                cl = clusters[i]
+                t = r.fills[:, pos] * inst_at[:, i] * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * cl.write_energy
+                t = r.drains[:, pos] * inst_at[:, i] * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * cl.read_energy
+                parent_idx = real_parent[i]
+                if parent_idx is not None:
+                    parent = clusters[parent_idx]
+                    n_parent = inst_at[:, parent_idx]
+                    t = r.parent_reads[:, pos] * n_parent * wb
+                    mx = max(mx, float(t.max()))
+                    energy = energy + t * parent.read_energy
+                    t = r.parent_writes[:, pos] * n_parent * wb
+                    mx = max(mx, float(t.max()))
+                    energy = energy + t * parent.write_energy
+                    t = (r.fills[:, pos] + r.drains[:, pos]) * inst_at[:, i] * wb
+                    mx = max(mx, float(t.max()))
+                    noc_energy = noc_energy + t * hop
+            energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
+        energy = energy + problem.macs * leaf.mac_energy
+        energy = energy + noc_energy
+
+        if not (mx < BATCH_EXACT_LIMIT):
+            return None  # exactness not guaranteed: use the scalar path
+        util = bt.par / ctx.num_pes
+        out = []
+        for b in range(B):
+            breakdown = {"compute_cycles": float(cc[b])}
+            for i, (cyc, valid) in fill_levels.items():
+                if valid[b]:
+                    breakdown[f"fill_cycles_{clusters[i].name}"] = float(cyc[b])
+            breakdown["startup_cycles"] = float(startup[b])
+            breakdown["noc_energy_pj"] = float(noc_energy[b])
+            out.append(
+                Cost(
+                    latency_cycles=float(latency[b]),
+                    energy_pj=float(energy[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown=breakdown,
+                )
+            )
+        return out
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):

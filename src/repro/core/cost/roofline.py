@@ -25,8 +25,11 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core.architecture import Architecture, TPU_V5E
 from repro.core.cost.analysis import (
+    BATCH_EXACT_LIMIT,
     analyze,
     boundary_bytes_per_instance,
     get_context,
@@ -153,6 +156,118 @@ class TPURooflineModel(CostModel):
         cycles = max(compute_s, memory_s) * arch.frequency_hz
         energy = problem.macs * arch.clusters[-1].mac_energy
         return cycles, energy
+
+    def evaluate_signature_batch(
+        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+    ):
+        """Vectorized ``evaluate`` over a miss-batch of signatures: VMEM
+        boundary traffic from the shared batch analysis, chip utilization
+        and collective terms from the stacked fan/tile matrices. Same
+        float-operation order per candidate as ``evaluate`` (bit-identical;
+        BATCH_EXACT_LIMIT guard falls back to the scalar path)."""
+        ctx = get_context(problem, arch)
+        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        if bt is None:
+            return None
+        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
+        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
+        link_bw = float(arch.attrs.get("ici_link_bw", TPU_V5E["ici_link_bw"]))
+        B = bt.compute_cycles.shape[0]
+        # par is guarded too: utilization must match the scalar path's
+        # exact-int parallelism bit for bit
+        mx = max(float(bt.total_trips.max()), float(bt.par.max()))
+
+        chips = 1
+        mesh_levels = []
+        for i, cl in enumerate(arch.clusters):
+            if cl.dimension in MESH_AXES and cl.fanout > 1:
+                chips *= cl.fanout
+                mesh_levels.append(i)
+
+        fansf = bt.fans.astype(np.float64)
+        lvl_par = np.prod(fansf, axis=2)  # [B, n_levels]
+        used_chips = np.ones(B)
+        for i in mesh_levels:
+            if i > 0:
+                used_chips = used_chips * lvl_par[:, i - 1]
+        used_chips = np.maximum(1.0, np.minimum(float(chips), used_chips))
+        flops_per_chip = 2.0 * problem.macs / used_chips
+        compute_s = flops_per_chip / peak
+
+        vmem_level = arch.n_levels - 1
+        hbm_bytes = np.zeros(B)
+        if vmem_level in ctx.real_levels:
+            pos_v = ctx.real_levels.index(vmem_level)
+            for k, ds in enumerate(problem.data_spaces):
+                r = bt.rows[k]
+                t = (r.fills[:, pos_v] + r.drains[:, pos_v]) * ds.word_bytes
+                mx = max(mx, float(t.max()))
+                hbm_bytes = hbm_bytes + t
+        memory_s = hbm_bytes / hbm_bw
+
+        red = set(problem.reduction_dims())
+        red_idx = [j for j, d in enumerate(ctx.dims) if d in red]
+        coll_bytes = np.zeros(B)
+        for i in mesh_levels:
+            lvl = i - 1  # mapping level that distributes over this mesh axis
+            if lvl < 0:
+                continue
+            f = bt.fans[:, lvl, :]
+            n_arr = lvl_par[:, lvl]
+            has_split = n_arr > 1
+            split_red = (
+                (f[:, red_idx] > 1).any(axis=1) if red_idx else np.zeros(B, dtype=bool)
+            )
+            stf = bt.st[:, lvl, :].astype(np.float64)
+            for k, ds in enumerate(problem.data_spaces):
+                wb, axes, rel_idx = ctx._ds_axes_idx[k]
+                shard = np.ones(B)
+                for ax in axes:
+                    span = np.ones(B)
+                    for coeff, j in ax:
+                        span = span + coeff * (stf[:, j] - 1.0)
+                    shard = shard * span
+                mx = max(mx, float(shard.max()))
+                if ds.is_output:
+                    cond = has_split & split_red
+                    term = 2.0 * (n_arr - 1.0) / n_arr * shard * wb
+                else:
+                    split_rel = (
+                        (f[:, list(rel_idx)] > 1).any(axis=1)
+                        if rel_idx
+                        else np.zeros(B, dtype=bool)
+                    )
+                    cond = has_split & ~split_rel
+                    term = (n_arr - 1.0) / n_arr * shard * wb
+                coll_bytes = coll_bytes + np.where(cond, term, 0.0)
+        collective_s = coll_bytes / link_bw
+
+        if not (mx < BATCH_EXACT_LIMIT):
+            return None  # exactness not guaranteed: use the scalar path
+        latency_s = np.maximum(compute_s, np.maximum(memory_s, collective_s))
+        freq = arch.frequency_hz
+        mac_term = problem.macs * arch.clusters[-1].mac_energy
+        energy_pj = hbm_bytes * used_chips * 7.0 + coll_bytes * used_chips * 2.0 + mac_term
+        util = bt.par / max(1, arch.num_pes)
+        bound_idx = np.argmax(np.stack([compute_s, memory_s, collective_s]), axis=0)
+        out = []
+        for b in range(B):
+            out.append(
+                Cost(
+                    latency_cycles=float(latency_s[b] * freq),
+                    energy_pj=float(energy_pj[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown={
+                        "compute_s": float(compute_s[b]),
+                        "memory_s": float(memory_s[b]),
+                        "collective_s": float(collective_s[b]),
+                        "bound": float(bound_idx[b]),
+                    },
+                )
+            )
+        return out
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         prof = analyze(problem, mapping, arch)

@@ -14,8 +14,11 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+import numpy as np
+
 from repro.core.architecture import Architecture
 from repro.core.cost.analysis import (
+    BATCH_EXACT_LIMIT,
     analyze,
     boundary_bytes_per_instance,
     get_context,
@@ -109,6 +112,102 @@ class TimeloopLikeModel(CostModel):
             frequency_hz=freq,
             breakdown=breakdown,
         )
+
+    def evaluate_signature_batch(
+        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+    ):
+        """Vectorized ``evaluate_signature`` over a whole miss-batch: same
+        float-operation order per candidate, so results are bit-identical
+        whenever every integer-valued product stays float64-exact (checked
+        against BATCH_EXACT_LIMIT; returns None otherwise)."""
+        if not self.conformable(problem):
+            raise ValueError(
+                f"{self.name} configured with unit op {self.unit_op!r} cannot "
+                f"evaluate problem with unit op {problem.unit_op!r}"
+            )
+        ctx = get_context(problem, arch)
+        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        if bt is None:
+            return None
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        real_parent = ctx.real_parent
+        spaces = problem.data_spaces
+        cc = bt.compute_cycles
+        B = cc.shape[0]
+        # par is guarded too: utilization must match the scalar path's
+        # exact-int parallelism bit for bit
+        mx = max(float(cc.max()), float(bt.total_trips.max()), float(bt.par.max()))
+
+        worst = np.zeros(B)
+        bw_levels = {}  # level -> (cycles[B], bts[B])
+        for pos, i in enumerate(real_levels):
+            cl = clusters[i]
+            # the scalar path computes bts before skipping these levels but
+            # never uses it; skipping first is value-identical (the fills/
+            # drains factors are exactness-guarded in the energy loop below)
+            if i == 0 or math.isinf(cl.fill_bandwidth):
+                continue
+            bts = np.zeros(B)
+            for k, ds in enumerate(spaces):
+                t = (bt.rows[k].fills[:, pos] + bt.rows[k].drains[:, pos]) * ds.word_bytes
+                mx = max(mx, float(t.max()))
+                bts = bts + t
+            cyc = bts * freq / cl.fill_bandwidth
+            bw_levels[i] = (cyc, bts)
+            worst = np.maximum(worst, np.where(bts > 0, cyc, 0.0))
+        latency = np.maximum(cc, worst)
+
+        energy = np.zeros(B)
+        leaf = clusters[-1]
+        inst_at = bt.inst_at
+        for k, ds in enumerate(spaces):
+            wb = ds.word_bytes
+            r = bt.rows[k]
+            for pos, i in enumerate(real_levels):
+                cl = clusters[i]
+                t = r.fills[:, pos] * inst_at[:, i] * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * cl.write_energy
+                t = r.drains[:, pos] * inst_at[:, i] * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * cl.read_energy
+                parent_idx = real_parent[i]
+                if parent_idx is not None:
+                    parent = clusters[parent_idx]
+                    n_parent = inst_at[:, parent_idx]
+                    t = r.parent_reads[:, pos] * n_parent * wb
+                    mx = max(mx, float(t.max()))
+                    energy = energy + t * parent.read_energy
+                    t = r.parent_writes[:, pos] * n_parent * wb
+                    mx = max(mx, float(t.max()))
+                    energy = energy + t * parent.write_energy
+            energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
+        mac_term = problem.macs * leaf.mac_energy
+        energy = energy + mac_term
+
+        if not (mx < BATCH_EXACT_LIMIT):
+            return None  # exactness not guaranteed: use the scalar path
+        util = bt.par / ctx.num_pes
+        out = []
+        for b in range(B):
+            breakdown = {"compute_cycles": float(cc[b])}
+            for i, (cyc, bts) in bw_levels.items():
+                if bts[b] > 0:
+                    breakdown[f"bw_cycles_{clusters[i].name}"] = float(cyc[b])
+            breakdown["energy_mac_pj"] = mac_term
+            out.append(
+                Cost(
+                    latency_cycles=float(latency[b]),
+                    energy_pj=float(energy[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown=breakdown,
+                )
+            )
+        return out
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):

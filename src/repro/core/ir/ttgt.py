@@ -127,3 +127,38 @@ def enumerate_ttgt_plans(problem: Problem) -> List[TTGTPlan]:
 
 def best_ttgt_plan(problem: Problem) -> TTGTPlan:
     return enumerate_ttgt_plans(problem)[0]
+
+
+def transpose_cost(plan: TTGTPlan, arch, word_bytes: int = 1) -> Tuple[float, float]:
+    """``(cycles, energy_pj)`` of the plan's explicit transposes at the
+    outermost memory.
+
+    ``plan.transpose_elems`` already counts one read plus one write per
+    relaid-out element (the ``2x`` factor in :func:`enumerate_ttgt_plans`),
+    so the element count IS the number of outermost-level accesses:
+
+      * energy -- each access moves ``word_bytes`` at the outermost
+        (non-virtual) level; half are reads, half writes;
+      * cycles -- the relaid bytes stream through the boundary INTO the
+        first real level below the outermost memory, limited by that
+        level's fill bandwidth (0 when unbounded).
+
+    The Fig. 8 benchmark adds these to the TTGT GEMM's cost before
+    comparing EDP against the native contraction, as this module's header
+    documents (`--no-transpose-cost` reproduces the uncosted numbers).
+    """
+    if plan.transpose_elems <= 0:
+        return 0.0, 0.0
+    real = [i for i, cl in enumerate(arch.clusters) if not cl.virtual]
+    if not real:
+        return 0.0, 0.0
+    bytes_moved = plan.transpose_elems * word_bytes
+    top = arch.clusters[real[0]]
+    energy_pj = bytes_moved * (top.read_energy + top.write_energy) / 2.0
+    cycles = 0.0
+    for i in real[1:]:
+        bw = arch.clusters[i].fill_bandwidth
+        if not math.isinf(bw):
+            cycles = bytes_moved * arch.frequency_hz / bw
+            break
+    return cycles, energy_pj

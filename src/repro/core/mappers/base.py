@@ -49,6 +49,20 @@ class SearchResult:
     def evals_per_s(self) -> float:
         return self.candidates / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
+    def stats_dict(self) -> dict:
+        """JSON-ready engine-counter summary (figure benchmarks attach this
+        next to their metrics so cache-hit / pruned / throughput stay
+        observable per experiment)."""
+        return {
+            "evaluated": self.evaluated,
+            "analyzed": self.analyzed,
+            "cache_hits": self.cache_hits,
+            "pruned": self.pruned,
+            "candidates": self.candidates,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "evals_per_s": round(self.evals_per_s, 1),
+        }
+
 
 class Mapper(abc.ABC):
     name: str = "base"

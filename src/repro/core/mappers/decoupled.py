@@ -28,11 +28,18 @@ class DecoupledMapper(Mapper):
         onchip_samples: int = 400,
         top_k: int = 4,
         seed: int = 0,
+        probe: int = 8,
     ) -> None:
+        """``probe``: while the incumbent is still infinite, phase-2
+        batches are split so a small head establishes an incumbent before
+        the rest of the batch runs under the bound filter (0 disables).
+        Candidate order is unchanged and pruning is exact, so results are
+        identical for any ``probe``."""
         self.offchip_samples = offchip_samples
         self.onchip_samples = onchip_samples
         self.top_k = top_k
         self.seed = seed
+        self.probe = probe
 
     # ------------------------------------------------------------------ #
     def _dram_traffic(self, space: MapSpace, m: Mapping) -> float:
@@ -126,6 +133,11 @@ class DecoupledMapper(Mapper):
                 ):
                     continue
                 batch.append(m)
+            if self.probe and tr.best_metric_value == math.inf and len(batch) > self.probe:
+                head = batch[: self.probe]
+                batch = batch[self.probe :]
+                for m, cost in zip(head, engine.evaluate_batch(head)):
+                    tr.offer(m, cost)
             costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)
             for m, cost in zip(batch, costs):
                 if cost is not None:

@@ -10,6 +10,7 @@ the one serial evaluation finds.
 from __future__ import annotations
 
 import itertools
+import math
 from typing import Optional
 
 from repro.core.cost.base import CostModel
@@ -26,10 +27,16 @@ class ExhaustiveMapper(Mapper):
         max_mappings: Optional[int] = 50_000,
         orders: str = "canonical",
         batch_size: int = 256,
+        probe: int = 8,
     ) -> None:
+        """``probe`` caps chunk size while the incumbent is still infinite,
+        so a small warm-start chunk establishes an incumbent before
+        full-width chunks run under the bound filter (0 disables). The
+        enumeration stream and the argmin are unaffected."""
         self.max_mappings = max_mappings
         self.orders = orders
         self.batch_size = batch_size
+        self.probe = probe
 
     def search(
         self,
@@ -42,7 +49,10 @@ class ExhaustiveMapper(Mapper):
         tr = self._mk_result(metric, engine)
         stream = space.enumerate_genomes(max_mappings=self.max_mappings, orders=self.orders)
         while True:
-            chunk = list(itertools.islice(stream, self.batch_size))
+            k = self.batch_size
+            if self.probe and tr.best_metric_value == math.inf:
+                k = min(k, self.probe)
+            chunk = list(itertools.islice(stream, k))
             if not chunk:
                 break
             costs = engine.evaluate_batch(chunk, incumbent=tr.best_metric_value)

@@ -10,6 +10,7 @@ which keeps results identical to one-at-a-time evaluation for fixed seeds.
 
 from __future__ import annotations
 
+import math
 import random
 from typing import Optional
 
@@ -28,14 +29,22 @@ class RandomMapper(Mapper):
         seed: int = 0,
         patience: int = 0,
         batch_size: int = 128,
+        probe: int = 8,
     ) -> None:
         """``patience``: stop after this many consecutive non-improving
         samples (0 = never early-stop), mirroring Timeloop's victory
-        condition."""
+        condition. ``probe``: while the incumbent is still infinite (no
+        candidate scored yet) chunks are capped at this size, so a small
+        probe establishes an incumbent before full-width batches run --
+        full batches then get bound-pruned instead of being evaluated
+        unpruned (0 disables the warm-start). The sample stream is
+        independent of chunking and pruning is exact, so results are
+        identical for any ``probe``."""
         self.samples = samples
         self.seed = seed
         self.patience = patience
         self.batch_size = batch_size
+        self.probe = probe
 
     def search(
         self,
@@ -51,6 +60,8 @@ class RandomMapper(Mapper):
         remaining = self.samples
         while remaining > 0:
             k = min(self.batch_size, remaining)
+            if self.probe and tr.best_metric_value == math.inf:
+                k = min(k, self.probe)
             remaining -= k
             batch = [space.random_genome(rng) for _ in range(k)]
             costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)

@@ -64,13 +64,17 @@ def union_opt(
     engine_workers: int = 0,
     engine_cache: int = 1 << 16,
     engine_prune: bool = True,
+    engine_backend: Optional[str] = "numpy",
     **mapper_kw,
 ) -> UnionSolution:
     """Run one end-to-end mapping search.
 
-    ``engine_workers`` / ``engine_cache`` / ``engine_prune`` configure the
-    shared :class:`EvaluationEngine` all mappers score candidates through
-    (process-pool fan-out, memo-cache capacity, lower-bound admission).
+    ``engine_workers`` / ``engine_cache`` / ``engine_prune`` /
+    ``engine_backend`` configure the shared :class:`EvaluationEngine` all
+    mappers score candidates through (process-pool fan-out, memo-cache
+    capacity, lower-bound admission, and the vectorized miss-batch
+    backend: "numpy" default, "jax" for jitted device sweeps, anything
+    else for the per-candidate scalar path).
     """
     problem = (
         lower_layer_to_problem(workload) if isinstance(workload, LayerOp) else workload
@@ -95,6 +99,7 @@ def union_opt(
         cache_size=engine_cache,
         prune=engine_prune,
         workers=engine_workers,
+        backend=engine_backend,
     )
     try:
         res = mp.search(space, cm, metric, engine=engine)

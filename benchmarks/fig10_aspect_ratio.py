@@ -10,18 +10,21 @@ skewed arrays -- the motivation for cluster-target mappings.
 
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
 from benchmarks.workloads import CLOUD_ASPECTS, EDGE_ASPECTS, dnn_layers
 from repro.core.architecture import cloud_accelerator, edge_accelerator
+from repro.core.cost import ResultStore
 from repro.core.optimizer import union_opt
 
 OUT = Path("experiments/benchmarks")
 
 
-def run() -> dict:
+def run(store_dir: str | None = None) -> dict:
     layers = dnn_layers()
+    store = ResultStore(store_dir) if store_dir else None
     result = {"figure": "fig10", "edge": {}, "cloud": {}}
     for tag, mk, aspects in (
         ("edge", edge_accelerator, EDGE_ASPECTS),
@@ -32,7 +35,8 @@ def run() -> dict:
             for aspect in aspects:
                 arch = mk(aspect=aspect)
                 sol = union_opt(problem, arch, mapper="heuristic",
-                                cost_model="maestro", metric="edp")
+                                cost_model="maestro", metric="edp",
+                                result_store=store)
                 row["x".join(map(str, aspect))] = {
                     "edp": sol.cost.edp, "util": sol.cost.utilization,
                     "search": sol.search.stats_dict(),
@@ -41,10 +45,18 @@ def run() -> dict:
             best = min(row, key=lambda k: row[k]["edp"])
             print(f"[fig10] {tag:5s} {wname:10s} best aspect {best:8s} "
                   f"(util {row[best]['util']:.0%})")
+    if store is not None:
+        store.flush()
+        result["result_store"] = store.stats_dict()
+        print(f"[fig10] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig10.json").write_text(json.dumps(result, indent=1))
     return result
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-search ResultStore directory")
+    args = ap.parse_args()
+    run(store_dir=args.store)

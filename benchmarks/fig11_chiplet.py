@@ -8,19 +8,22 @@ layers with more reuse saturate earlier (ResNet earlier than DLRM/BERT).
 
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import chiplet_accelerator
+from repro.core.cost import ResultStore
 from repro.core.optimizer import union_opt
 
 OUT = Path("experiments/benchmarks")
 BWS = [0.125e9, 0.25e9, 0.5e9, 1e9, 2e9, 4e9, 6e9, 8e9, 12e9, 16e9, 32e9]
 
 
-def run() -> dict:
+def run(store_dir: str | None = None) -> dict:
     layers = dnn_layers()
+    store = ResultStore(store_dir) if store_dir else None
     result = {"figure": "fig11", "bandwidths_gbps": [b / 1e9 for b in BWS], "rows": {}}
     for wname, problem in layers.items():
         edps = []
@@ -28,7 +31,8 @@ def run() -> dict:
         for bw in BWS:
             arch = chiplet_accelerator(fill_bandwidth=bw)
             sol = union_opt(problem, arch, mapper="heuristic",
-                            cost_model="timeloop", metric="edp")
+                            cost_model="timeloop", metric="edp",
+                            result_store=store)
             edps.append(sol.cost.edp)
             searches.append(sol.search.stats_dict())
         # saturation point: first bw within 5% of the best (highest-bw) EDP
@@ -43,10 +47,18 @@ def run() -> dict:
         }
         print(f"[fig11] {wname:10s} EDP x{edps[0]/edps[-1]:7.1f} drop over sweep; "
               f"saturates at ~{sat/1e9:g} GB/s")
+    if store is not None:
+        store.flush()
+        result["result_store"] = store.stats_dict()
+        print(f"[fig11] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig11.json").write_text(json.dumps(result, indent=1))
     return result
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-search ResultStore directory")
+    args = ap.parse_args()
+    run(store_dir=args.store)

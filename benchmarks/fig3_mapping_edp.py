@@ -14,19 +14,20 @@ from pathlib import Path
 
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import edge_accelerator
-from repro.core.cost import TimeloopLikeModel
+from repro.core.cost import ResultStore, TimeloopLikeModel
 from repro.core.mapspace import MapSpace
 from repro.core.optimizer import union_opt
 
 OUT = Path("experiments/benchmarks")
 
 
-def run(samples: int = 300, seed: int = 0) -> dict:
+def run(samples: int = 300, seed: int = 0, store_dir: str | None = None) -> dict:
     problem = dnn_layers()["DLRM-1"]
     arch = edge_accelerator(aspect=(16, 16))
     cm = TimeloopLikeModel()
     space = MapSpace(problem, arch)
     rng = random.Random(seed)
+    store = ResultStore(store_dir) if store_dir else None
 
     rows = []
     for _ in range(samples):
@@ -34,7 +35,8 @@ def run(samples: int = 300, seed: int = 0) -> dict:
         c = cm.evaluate(problem, m, arch)
         rows.append({"latency": c.latency_cycles, "energy": c.energy_pj,
                      "edp": c.edp, "util": c.utilization})
-    best = union_opt(problem, arch, mapper="heuristic", cost_model=cm, metric="edp")
+    best = union_opt(problem, arch, mapper="heuristic", cost_model=cm, metric="edp",
+                     result_store=store)
     rows.sort(key=lambda r: r["edp"])
     e_min = min(r["energy"] for r in rows)
     l_min = min(r["latency"] for r in rows)
@@ -54,6 +56,9 @@ def run(samples: int = 300, seed: int = 0) -> dict:
             for r in rows[:: max(1, samples // 50)]
         ],
     }
+    if store is not None:
+        store.flush()
+        result["result_store"] = store.stats_dict()
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig3.json").write_text(json.dumps(result, indent=1))
     print(f"[fig3] DLRM-1 on 16x16: EDP spread x{result['edp_spread']:.1f} "
@@ -68,5 +73,8 @@ if __name__ == "__main__":
     ap.add_argument("--samples", type=int, default=300,
                     help="sampled mappings (CI smoke uses a reduced count)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-search ResultStore directory "
+                         "(warm re-runs skip re-scoring identical signatures)")
     args = ap.parse_args()
-    run(samples=args.samples, seed=args.seed)
+    run(samples=args.samples, seed=args.seed, store_dir=args.store)

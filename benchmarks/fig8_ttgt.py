@@ -30,6 +30,7 @@ from pathlib import Path
 from benchmarks.workloads import tc_problems
 from repro.core.architecture import cloud_accelerator
 from repro.core.constraints import Constraints
+from repro.core.cost import ResultStore
 from repro.core.ir.ttgt import best_ttgt_plan, transpose_cost
 from repro.core.optimizer import union_opt
 
@@ -37,13 +38,13 @@ OUT = Path("experiments/benchmarks")
 PAPER_SPACE = Constraints(name="memory_target_like", max_concurrent_spatial=1)
 
 
-def _best(problem, arch, constraints=None):
+def _best(problem, arch, constraints=None, store=None):
     """heuristic + random-sampling mappers (paper Sec. V-A), best of both."""
     sols = [
         union_opt(problem, arch, mapper="heuristic", cost_model="timeloop",
-                  metric="edp", constraints=constraints),
+                  metric="edp", constraints=constraints, result_store=store),
         union_opt(problem, arch, mapper="random", cost_model="timeloop",
-                  metric="edp", constraints=constraints),
+                  metric="edp", constraints=constraints, result_store=store),
     ]
     return min(sols, key=lambda s: s.cost.edp)
 
@@ -64,8 +65,9 @@ def ttgt_total_edp(cost, plan, arch, include_transpose: bool = True,
     )
 
 
-def run(include_transpose_cost: bool = True) -> dict:
+def run(include_transpose_cost: bool = True, store_dir: str | None = None) -> dict:
     arch = cloud_accelerator(aspect=(32, 64))
+    store = ResultStore(store_dir) if store_dir else None
     rows = []
     mappings = {}
     for name, tds, problem in tc_problems():
@@ -79,8 +81,8 @@ def run(include_transpose_cost: bool = True) -> dict:
             "transpose_energy_pj": t_pj,
         }
         for mode, cons in (("paper", PAPER_SPACE), ("union", None)):
-            native = _best(problem, arch, cons)
-            ttgt = _best(gemm, arch, cons)
+            native = _best(problem, arch, cons, store=store)
+            ttgt = _best(gemm, arch, cons, store=store)
             ttgt_edp = ttgt_total_edp(ttgt.cost, plan, arch, include_transpose_cost,
                                       tcost=(t_cyc, t_pj))
             row[f"edp_native_{mode}"] = native.cost.edp
@@ -118,6 +120,10 @@ def run(include_transpose_cost: bool = True) -> dict:
         ),
         "fig9_mappings": mappings,
     }
+    if store is not None:
+        store.flush()
+        result["result_store"] = store.stats_dict()
+        print(f"[fig8] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig8.json").write_text(json.dumps(result, indent=1))
     print(f"[fig8] paper claim (TTGT wins at TDS=16, memory-target space): "
@@ -136,5 +142,7 @@ if __name__ == "__main__":
         help="omit the transposes' DRAM traffic from the TTGT side "
              "(reproduces the historical GEMM-only numbers)",
     )
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-search ResultStore directory")
     args = ap.parse_args()
-    run(include_transpose_cost=not args.no_transpose_cost)
+    run(include_transpose_cost=not args.no_transpose_cost, store_dir=args.store)

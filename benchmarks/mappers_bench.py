@@ -10,9 +10,27 @@ at the repo root (the CI-tracked throughput summary).
 
 Usage:
     python benchmarks/mappers_bench.py [--smoke] [--repeats N] [--workers W]
+                                       [--store DIR] [--no-regress-check]
 
 ``--smoke`` runs a reduced matrix (one cost model, smaller budgets) that
-finishes in a few seconds -- used by CI to track the perf trajectory.
+finishes in a few seconds -- used by CI to track the perf trajectory. In
+smoke mode the run ASSERTS that evals/s has not regressed against the
+committed ``BENCH_mappers.json`` (within ``--regress-margin``, default
+50%, absorbing container noise) and fails with a per-row margin message
+otherwise; ``--no-regress-check`` disables the gate. The committed
+``BENCH_mappers.json`` is only rewritten deliberately: smoke runs never
+touch it (a merely-passing run must not ratchet the floor downward),
+full runs refuse to clobber a committed smoke baseline (the gate would
+skip forever on a matrix mismatch), and warm-store rows are never
+written (incomparable to cold runs) -- pass ``--update-baseline`` on a
+cold run to regenerate it.
+
+``--store DIR`` shares one persistent :class:`ResultStore` across every
+search and repeat (and across invocations): repeats stop re-scoring
+identical signatures, and the summary reports the store counters. NOTE:
+store hits bypass the admission filter, so evals/s rows measured with a
+warm store are not comparable to the cold baseline -- the regression gate
+refuses to run with ``--store``.
 """
 
 from __future__ import annotations
@@ -24,6 +42,7 @@ from pathlib import Path
 
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import cloud_accelerator
+from repro.core.cost import ResultStore
 from repro.core.optimizer import union_opt
 
 OUT = Path("experiments/benchmarks")
@@ -48,12 +67,48 @@ SEED_EVALS_PER_S = {
 }
 
 
+def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
+    """Fail (SystemExit) when any evals/s row regresses below ``margin`` x
+    the committed baseline. Only rows present in both files are compared,
+    and only when both were produced by the same (smoke) matrix."""
+    if not baseline_path.exists():
+        print(f"[mappers] no baseline at {baseline_path}; skipping regression gate")
+        return
+    try:
+        base = json.loads(baseline_path.read_text())
+    except Exception as e:  # pragma: no cover - unreadable baseline
+        print(f"[mappers] unreadable baseline ({e}); skipping regression gate")
+        return
+    if base.get("smoke") != summary["smoke"] or base.get("engine_backend") != summary[
+        "engine_backend"
+    ]:
+        print("[mappers] baseline matrix differs (smoke/backend); skipping gate")
+        return
+    failures = []
+    for key, new_v in summary["evals_per_s"].items():
+        old_v = base.get("evals_per_s", {}).get(key)
+        if old_v and new_v < old_v * margin:
+            failures.append(
+                f"  {key}: {new_v:,.0f} evals/s < {margin:.0%} of committed "
+                f"{old_v:,.0f} (floor {old_v * margin:,.0f})"
+            )
+    if failures:
+        raise SystemExit(
+            "[mappers] evals/s REGRESSION vs committed BENCH_mappers.json "
+            f"(margin {margin:.0%}):\n" + "\n".join(failures)
+        )
+    print(f"[mappers] regression gate OK (margin {margin:.0%} vs {baseline_path})")
+
+
 def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
-        backend: str = "numpy") -> dict:
+        backend: str = "numpy", store_dir: str | None = None,
+        regress_check: bool = True, regress_margin: float = 0.5,
+        update_baseline: bool = False) -> dict:
     problem = dnn_layers()["BERT-2"]
     arch = cloud_accelerator()
     cost_models = COST_MODELS[:1] if smoke else COST_MODELS
     mappers = ["random", "exhaustive", "genetic"] if smoke else MAPPERS
+    store = ResultStore(store_dir) if store_dir else None
     rows = []
     for cm in cost_models:
         for mp in mappers:
@@ -73,24 +128,30 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                 t0 = time.time()
                 sol = union_opt(
                     problem, arch, mapper=mp, cost_model=cm, metric="edp",
-                    engine_workers=workers, engine_backend=backend, **kw,
+                    engine_workers=workers, engine_backend=backend,
+                    result_store=store, **kw,
                 )
                 best_s = min(best_s, time.time() - t0)
             res = sol.search
             candidates = res.evaluated + res.pruned
             evals_per_s = candidates / best_s
-            seen = res.analyzed + res.cache_hits
+            seen = res.analyzed + res.cache_hits + res.store_hits
             row = {
                 "mapper": mp, "cost_model": cm,
                 "edp": sol.cost.edp, "util": sol.cost.utilization,
                 "evaluated": res.evaluated,
                 "analyzed": res.analyzed,
                 "cache_hits": res.cache_hits,
+                "store_hits": res.store_hits,
                 "pruned": res.pruned,
                 "candidates": candidates,
                 "cache_hit_rate": res.cache_hits / seen if seen else 0.0,
                 "seconds": best_s,
                 "evals_per_s": evals_per_s,
+                # per-phase engine wall-clock of the LAST repeat: admission
+                # (bound stage) vs scoring (miss evaluation)
+                "admit_s": res.admit_s,
+                "score_s": res.score_s,
                 "speedup_vs_seed": (
                     evals_per_s / SEED_EVALS_PER_S[(cm, mp)]
                     if (cm, mp) in SEED_EVALS_PER_S and not smoke
@@ -102,7 +163,9 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                 f"[mappers] {cm:9s} x {mp:10s}: EDP {sol.cost.edp:.3e} "
                 f"util {sol.cost.utilization:5.0%} "
                 f"({candidates} cand, {best_s:.2f}s, {evals_per_s:,.0f} evals/s, "
-                f"hit {row['cache_hit_rate']:.0%}, pruned {res.pruned})"
+                f"hit {row['cache_hit_rate']:.0%}, pruned {res.pruned}, "
+                f"store {res.store_hits}, admit {res.admit_s*1e3:.1f}ms, "
+                f"score {res.score_s*1e3:.1f}ms)"
             )
     result = {
         "figure": "mappers",
@@ -112,22 +175,59 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
         "engine_backend": backend,
         "rows": rows,
     }
+    if store is not None:
+        store.flush()
+        result["result_store"] = store.stats_dict()
+        print(f"[mappers] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "mappers.json").write_text(json.dumps(result, indent=1))
+    key_of = lambda r: f"{r['cost_model']}/{r['mapper']}"  # noqa: E731
     summary = {
         "problem": "BERT-2",
         "smoke": smoke,
         "engine_backend": backend,
-        "evals_per_s": {f"{r['cost_model']}/{r['mapper']}": round(r["evals_per_s"]) for r in rows},
-        "cache_hit_rate": {f"{r['cost_model']}/{r['mapper']}": round(r["cache_hit_rate"], 3) for r in rows},
-        "pruned": {f"{r['cost_model']}/{r['mapper']}": r["pruned"] for r in rows},
+        "evals_per_s": {key_of(r): round(r["evals_per_s"]) for r in rows},
+        "cache_hit_rate": {key_of(r): round(r["cache_hit_rate"], 3) for r in rows},
+        "pruned": {key_of(r): r["pruned"] for r in rows},
+        "store_hits": {key_of(r): r["store_hits"] for r in rows},
+        "phase_s": {
+            key_of(r): {"admit": round(r["admit_s"], 4), "score": round(r["score_s"], 4)}
+            for r in rows
+        },
         "speedup_vs_seed": {
-            f"{r['cost_model']}/{r['mapper']}": round(r["speedup_vs_seed"], 2)
+            key_of(r): round(r["speedup_vs_seed"], 2)
             for r in rows
             if r["speedup_vs_seed"] is not None
         },
     }
-    ROOT_BENCH.write_text(json.dumps(summary, indent=1))
+    if smoke and regress_check and store is None and not update_baseline:
+        check_regression(summary, ROOT_BENCH, regress_margin)
+    elif smoke and update_baseline:
+        print("[mappers] regression gate skipped: --update-baseline is a "
+              "deliberate baseline rewrite")
+    elif smoke and store is not None:
+        print("[mappers] regression gate skipped: warm-store rows are not "
+              "comparable to the cold baseline")
+    # Baseline rewrite rules: a merely-passing smoke run must not replace
+    # the committed floor (the gate would ratchet downward), warm-store
+    # rows must never become the baseline (incomparable to cold runs),
+    # and a full-matrix run must not clobber a committed SMOKE baseline
+    # (the gate would then skip forever on 'matrix differs'). Explicit
+    # --update-baseline overrides the matrix guard, never the store one.
+    write_baseline = store is None and update_baseline
+    if store is None and not update_baseline and not smoke:
+        try:
+            write_baseline = not json.loads(ROOT_BENCH.read_text()).get("smoke", False)
+        except Exception:
+            write_baseline = True  # absent/unreadable baseline: establish one
+    if write_baseline:
+        ROOT_BENCH.write_text(json.dumps(summary, indent=1))
+    elif store is not None and update_baseline:
+        print("[mappers] baseline NOT updated: warm-store rows are not a "
+              "valid cold baseline")
+    elif not smoke and not update_baseline:
+        print(f"[mappers] baseline untouched ({ROOT_BENCH} is a smoke "
+              "baseline; pass --update-baseline to replace it)")
     return result
 
 
@@ -138,6 +238,20 @@ if __name__ == "__main__":
     ap.add_argument("--workers", type=int, default=0, help="engine process-pool size")
     ap.add_argument("--backend", default="numpy", choices=["numpy", "jax", "none"],
                     help="vectorized miss-batch backend (none = scalar path)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-search ResultStore directory")
+    ap.add_argument("--no-regress-check", action="store_true",
+                    help="skip the smoke-mode evals/s gate vs BENCH_mappers.json")
+    ap.add_argument("--regress-margin", type=float, default=0.5,
+                    help="fail when evals/s drops below this fraction of the "
+                         "committed baseline (smoke mode only)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite BENCH_mappers.json from this (smoke) run; "
+                         "without it, smoke runs leave the committed "
+                         "baseline untouched")
     args = ap.parse_args()
     run(smoke=args.smoke, repeats=args.repeats, workers=args.workers,
-        backend=args.backend)
+        backend=args.backend, store_dir=args.store,
+        regress_check=not args.no_regress_check,
+        regress_margin=args.regress_margin,
+        update_baseline=args.update_baseline)

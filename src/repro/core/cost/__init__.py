@@ -13,6 +13,7 @@ paper's interoperability contribution: any mapper can drive any model.
 
 from repro.core.cost.base import Cost, CostModel  # noqa: F401
 from repro.core.cost.engine import EngineStats, EvaluationEngine, mapping_signature  # noqa: F401
+from repro.core.cost.store import ResultStore  # noqa: F401
 from repro.core.cost.timeloop_like import TimeloopLikeModel  # noqa: F401
 from repro.core.cost.maestro_like import MaestroLikeModel  # noqa: F401
 from repro.core.cost.roofline import TPURooflineModel  # noqa: F401

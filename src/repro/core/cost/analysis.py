@@ -46,6 +46,54 @@ from repro.core.problem import DataSpace, Problem
 BATCH_EXACT_LIMIT = float(1 << 52)
 
 
+def batch_projection_footprint(axes, ttf_lvl, xp=np):
+    """Batched data-space footprint over one level's tile rows.
+
+    ``axes`` is one entry of :attr:`AnalysisContext.ds_projection_axes`
+    (lists of ``(|coeff|, dim_index)`` terms per projection axis);
+    ``ttf_lvl`` is the clamped float64 tile matrix ``[B, D]`` of one
+    level. Replays the scalar span math (``span = 1 + sum(coeff *
+    (tt[j] - 1))``, footprint = product of spans) in the same float-op
+    order, so results are exact below :data:`BATCH_EXACT_LIMIT`. The one
+    batched form of the projection-span product -- the lower-bound cores
+    and the roofline bound all consume it.
+    """
+    B = ttf_lvl.shape[0]
+    foot = xp.ones(B, dtype=xp.float64)
+    for ax in axes:
+        span = xp.ones(B, dtype=xp.float64)
+        for coeff, j in ax:
+            span = span + coeff * (ttf_lvl[:, j] - 1.0)
+        foot = foot * span
+    return foot
+
+
+class StackedBatch:
+    """Stacked (tt, st, perm) matrices for one batch of signatures.
+
+    One StackedBatch is built per engine miss-batch and SHARED between the
+    admission stage (:meth:`AnalysisContext.lower_bound_batch`) and the
+    scoring stage (:meth:`AnalysisContext.signature_traffic_batch`), so the
+    batch is stacked exactly once. On the JAX backend the matrices are
+    additionally uploaded to the device once (``dev``) and reused by both
+    jitted programs; the scoring stage gathers the admitted subset directly
+    on device (``select``), so only the admitted candidates' traffic ever
+    returns to host.
+    """
+
+    __slots__ = ("tt", "st", "perm", "dev")
+
+    def __init__(self, tt: np.ndarray, st: np.ndarray, perm: np.ndarray) -> None:
+        self.tt = tt
+        self.st = st
+        self.perm = perm
+        self.dev = None  # (tt, st, perm) device arrays, uploaded lazily
+
+    @property
+    def size(self) -> int:
+        return int(self.tt.shape[0])
+
+
 class DsTrafficBatch(NamedTuple):
     """Per-data-space traffic arrays over a signature batch.
 
@@ -225,8 +273,25 @@ class AnalysisContext:
         # --- vectorized batch-analysis state (built lazily) ------------- #
         self._np_batch_core = None
         self._jax_batch_core = None
+        self._np_lb_core = None
+        self._jax_lb_core = None
         self._jax = None
         self._jax_failed = False
+        self._jax_core_donates = False
+
+    @property
+    def ds_projection_axes(self) -> List[Tuple[int, List[List[Tuple[int, int]]], Tuple[int, ...]]]:
+        """Per data space (problem order): ``(word_bytes, axes, rel_idx)``.
+
+        ``axes`` holds one list of ``(|coeff|, dim_index)`` terms per
+        projection axis (the span of axis ``a`` over a tile ``tt`` is
+        ``1 + sum(coeff * (tt[j] - 1))``); ``rel_idx`` is the sorted tuple
+        of dim indices that project into the data space. This is the public
+        form of the projection metadata the footprint/bound math consumes
+        -- model-specific terms (e.g. the roofline collective sharding
+        spans) should use it instead of the private ``_ds_axes_idx``.
+        """
+        return self._ds_axes_idx
 
     # ------------------------------------------------------------------ #
     def analyze(self, mapping: Mapping) -> AccessProfile:
@@ -470,6 +535,11 @@ class AnalysisContext:
         ).reshape(B, n, D)
         return tt, st, perm
 
+    def stacked_batch(self, sigs) -> StackedBatch:
+        """One :class:`StackedBatch` handle over ``stack_signatures(sigs)``,
+        shareable between the admission and scoring array programs."""
+        return StackedBatch(*self.stack_signatures(sigs))
+
     def _make_batch_core(self, xp, lax=None):
         """Build the (tt, st, perm) -> stacked-traffic array program.
 
@@ -582,65 +652,127 @@ class AnalysisContext:
 
         return core
 
-    def _run_jax_core(self, tt, st, perm):
-        """JAX-jitted batch core: pads the batch to a power of two (bounding
-        retraces), runs in float64 under ``enable_x64``, returns numpy
-        arrays of the UNPADDED batch -- or None so the caller falls back to
-        numpy (missing jax, trace failure, restricted platform)."""
+    def _ensure_jax(self):
+        """Import JAX lazily; memoized on the context."""
+        if self._jax is None:
+            import jax
+
+            self._jax = jax
+        return self._jax
+
+    def _jax_device_arrays(self, sb: StackedBatch):
+        """Upload a StackedBatch's matrices to the device once (int64; the
+        caller holds ``enable_x64``) and memoize them on the handle, so the
+        admission and scoring programs share one transfer."""
+        if sb.dev is None:
+            jax = self._ensure_jax()
+            sb.dev = tuple(jax.device_put(a) for a in (sb.tt, sb.st, sb.perm))
+        return sb.dev
+
+    @staticmethod
+    def _pad_pow2(tt, st, perm, xp):
+        """Pad the batch axis to the next power of two (bounding jit
+        retraces) by repeating row 0 -- a real candidate, so padding can
+        never trip the exactness guard (the lb core's guard reduces over
+        the padded batch) -- and return the original size too."""
+        B = int(tt.shape[0])
+        B2 = 1 << max(0, (B - 1).bit_length())
+        if B2 == B:
+            return tt, st, perm, B
+        padn = B2 - B
+
+        def pad(a):
+            return xp.concatenate(
+                [a, xp.broadcast_to(a[:1], (padn,) + tuple(a.shape[1:]))]
+            )
+
+        return pad(tt), pad(st), pad(perm), B
+
+    def _run_jax_core(self, sb: StackedBatch, select=None):
+        """JAX-jitted batch core over a (device-resident) StackedBatch:
+        optionally gathers the ``select`` row subset ON DEVICE, pads the
+        batch to a power of two (bounding retraces), runs in float64 under
+        ``enable_x64``, returns numpy arrays of the unpadded (selected)
+        batch -- or None so the caller falls back to numpy (missing jax,
+        trace failure, restricted platform)."""
         if self._jax_failed:
             return None
         try:
-            if self._jax_batch_core is None:
-                import jax
-                from jax import lax
-                import jax.numpy as jnp
+            jax = self._ensure_jax()
+            from jax import lax
+            import jax.numpy as jnp
 
-                self._jax = jax
-                self._jax_batch_core = jax.jit(self._make_batch_core(jnp, lax))
-            B = tt.shape[0]
-            B2 = 1 << max(0, (B - 1).bit_length())
-            if B2 != B:
-                padn = B2 - B
-                n, D = tt.shape[1], tt.shape[2]
-                ones = np.ones((padn, n, D), dtype=np.int64)
-                tt = np.concatenate([tt, ones])
-                st = np.concatenate([st, ones])
-                perm = np.concatenate(
-                    [perm, np.broadcast_to(np.arange(D, dtype=np.int64), (padn, n, D))]
+            if self._jax_batch_core is None:
+                # Buffer donation lets XLA reuse the input matrices' device
+                # memory for the program's temporaries; it is unsupported
+                # (and warns) on CPU, so only accelerator backends request
+                # it. The donated buffers are the batch matrices, which are
+                # re-uploaded from the host copy if the handle is reused.
+                donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+                self._jax_core_donates = bool(donate)
+                self._jax_batch_core = jax.jit(
+                    self._make_batch_core(jnp, lax), donate_argnums=donate
                 )
             from jax.experimental import enable_x64
 
             with enable_x64():
+                tt, st, perm = self._jax_device_arrays(sb)
+                if select is not None:
+                    sel = jnp.asarray(np.asarray(select, dtype=np.int64))
+                    tt, st, perm = tt[sel], st[sel], perm[sel]
+                tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
                 out = self._jax_batch_core(tt, st, perm)
-            out = self._jax.tree_util.tree_map(np.asarray, out)
+            if self._jax_core_donates and select is None:
+                sb.dev = None  # donated away; re-upload on next use
+            out = jax.tree_util.tree_map(np.asarray, out)
             if out[0].dtype != np.float64:
                 # x64 unavailable on this build: results are float32 and
                 # cannot honour the bit-identity contract
                 self._jax_failed = True
                 return None
-            if B2 != B:
+            if out[0].shape[0] != B:
                 out = _tree_slice(out, B)
             return out
         except Exception:
             self._jax_failed = True
             return None
 
-    def signature_traffic_batch(self, sigs, backend: str = "numpy") -> Optional[BatchTraffic]:
+    def signature_traffic_batch(
+        self,
+        sigs=None,
+        backend: str = "numpy",
+        stacked: Optional[StackedBatch] = None,
+        select=None,
+    ) -> Optional[BatchTraffic]:
         """Stacked :meth:`signature_traffic` over a batch of signatures.
 
         ``backend`` selects the array program: ``"numpy"`` (default) or
         ``"jax"`` (jitted, falls back to numpy when JAX cannot deliver
-        float64). Returns None for an empty batch.
+        float64). ``stacked`` reuses an already-stacked batch -- the
+        evaluation engine stacks each miss-batch ONCE and shares the handle
+        between the admission filter and this scoring pass. ``select``
+        restricts the program to the given row indices of the stacked
+        batch (on the jax backend the gather runs on device, so pruned
+        candidates' traffic never returns to host). Returns None for an
+        empty batch/selection.
         """
-        if not sigs:
+        sb = stacked
+        if sb is None:
+            if not sigs:
+                return None
+            sb = self.stacked_batch(sigs)
+        if sb.size == 0 or (select is not None and len(select) == 0):
             return None
-        tt, st, perm = self.stack_signatures(sigs)
         out = None
         if backend == "jax":
-            out = self._run_jax_core(tt, st, perm)
+            out = self._run_jax_core(sb, select=select)
         if out is None:
             if self._np_batch_core is None:
                 self._np_batch_core = self._make_batch_core(np)
+            tt, st, perm = sb.tt, sb.st, sb.perm
+            if select is not None:
+                idx = np.asarray(select, dtype=np.int64)
+                tt, st, perm = tt[idx], st[idx], perm[idx]
             out = self._np_batch_core(tt, st, perm)
         compute_cycles, total_trips, par, inst_at, tt_c, st_c, fans, rows = out
         return BatchTraffic(
@@ -817,6 +949,202 @@ class AnalysisContext:
             if cyc > cycles:
                 cycles = cyc
         return cycles, energy
+
+    # ------------------------------------------------------------------ #
+    # Batched lower bounds: the admission filter's counterpart of
+    # ``signature_traffic_batch``. One array program reproduces
+    # ``signature_lower_bound`` for a whole stacked batch -- same integer
+    # quantities, same float-operation order -- so the engine admits or
+    # rejects an entire miss-batch with one masked program instead of a
+    # per-candidate Python walk. All guarded quantities are integer-valued;
+    # the program tracks their max and the wrapper rejects the batch
+    # (caller falls back to the scalar bound) beyond BATCH_EXACT_LIMIT.
+    # ------------------------------------------------------------------ #
+    def _make_lb_core(self, xp, lax=None):
+        """Build the (tt, st, perm) -> (cycles[B], energy_pj[B], guard_max)
+        program: the exact vectorization of :meth:`signature_lower_bound`."""
+        sizes_row = np.asarray(self._size_tuple, dtype=np.int64)[None, None, :]
+        n = self.n_levels
+        D = len(self.dims)
+        mpc = self.macs_per_cycle
+        K = len(self._ds_rel_sets)
+        rel_stack = np.array(
+            [[j in rset for j in range(D)] for rset in self._ds_rel_sets], dtype=bool
+        )
+        wb_list = [wb for wb, _axes, _rel in self._ds_axes_idx]
+        ds_axes = [axes for _wb, axes, _rel in self._ds_axes_idx]
+        ds_out = [ds.is_output for ds, _rel in self.ds_rel]
+        e_base = self._lb_energy_base
+        dc = self._lb_dram_child
+        tre = self._top_read_e
+        twe = self._top_write_e
+        bw_levels = list(self._lb_bw_levels)
+        pos_seq = np.arange(n * D)
+
+        def ds_foot(ttf_lvl, k):
+            return batch_projection_footprint(ds_axes[k], ttf_lvl, xp)
+
+        def core(tt, st, perm):
+            B = tt.shape[0]
+            tt = xp.maximum(tt, 1)
+            st = xp.maximum(st, 1)
+            outer = xp.concatenate(
+                [xp.broadcast_to(xp.asarray(sizes_row), (B, 1, D)), st[:, :-1, :]],
+                axis=1,
+            )
+            trips = xp.maximum(outer // tt, 1)
+            tripsf = trips.astype(xp.float64)
+            total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
+            leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
+            cycles = total_trips * xp.ceil(leaf_macs / mpc)
+            energy = xp.full((B,), e_base, dtype=xp.float64)
+            mx = xp.maximum(xp.maximum(total_trips, leaf_macs), cycles)
+
+            dc_boundary = None
+            if dc is not None:
+                # temporal loops of levels <= dc in effective emission order
+                # (order-major): enough to reproduce changes/unique exactly.
+                S = (dc + 1) * D
+                perm_pref = perm[:, : dc + 1, :]
+                tseqf = (
+                    xp.take_along_axis(trips[:, : dc + 1, :], perm_pref, axis=2)
+                    .reshape(B, S)
+                    .astype(xp.float64)
+                )
+                rel_seq = xp.asarray(rel_stack)[:, perm_pref.reshape(B, S)]  # [K,B,S]
+                present = (tseqf > 1.0)[None, :, :]
+                relm = rel_seq & present
+                irrm = (~rel_seq) & present
+                tseq_b = xp.broadcast_to(tseqf[None, :, :], (K, B, S))
+                unique = xp.prod(xp.where(relm, tseq_b, 1.0), axis=2)  # [K, B]
+                irrprod = xp.cumprod(xp.where(irrm, tseq_b, 1.0), axis=2)
+                # irrelevant-trip product at the LAST relevant loop: position
+                # itself is relevant, so the inclusive irrprod there equals
+                # the scalar path's exclusive ``lastrel_ip``; 1.0 when no
+                # relevant loop exists.
+                idx = xp.where(relm, pos_seq[None, None, :S], -1)
+                lastrel = xp.max(idx, axis=2)
+                gathered = xp.take_along_axis(
+                    irrprod, xp.maximum(lastrel, 0)[:, :, None], axis=2
+                )[:, :, 0]
+                changes = unique * xp.where(lastrel >= 0, gathered, 1.0)
+                ttf_dc = tt[:, dc, :].astype(xp.float64)
+                if dc > 0:
+                    fans_pref = xp.maximum(tt[:, :dc, :] // st[:, :dc, :], 1).astype(
+                        xp.float64
+                    )
+                dc_boundary = xp.zeros(B, dtype=xp.float64)
+                for k in range(K):
+                    foot = ds_foot(ttf_dc, k)
+                    if dc > 0:
+                        rel_sp = xp.prod(
+                            xp.where(
+                                xp.asarray(rel_stack[k])[None, None, :], fans_pref, 1.0
+                            ).reshape(B, dc * D),
+                            axis=1,
+                        )
+                    else:
+                        rel_sp = xp.ones(B, dtype=xp.float64)
+                    cf = changes[k] * foot
+                    mx = xp.maximum(mx, changes[k])
+                    t1 = cf * rel_sp * wb_list[k]
+                    mx = xp.maximum(mx, t1)
+                    if ds_out[k]:
+                        rmw = xp.maximum(changes[k] - unique[k], 0.0) * foot
+                        t2 = rmw * rel_sp * wb_list[k]
+                        mx = xp.maximum(mx, t2)
+                        energy = energy + (t1 * twe + t2 * tre)
+                        dc_boundary = dc_boundary + (cf + rmw) * wb_list[k]
+                    else:
+                        energy = energy + t1 * tre
+                        dc_boundary = dc_boundary + cf * wb_list[k]
+                mx = xp.maximum(mx, dc_boundary)
+
+            for level, cyc_per_byte in bw_levels:
+                if level == dc:
+                    cycles = xp.maximum(cycles, dc_boundary * cyc_per_byte)
+                    continue
+                ttf_lvl = tt[:, level, :].astype(xp.float64)
+                # unique per ds: product of relevant trips of levels <= level
+                relprod_lvl = xp.prod(
+                    xp.where(
+                        xp.asarray(rel_stack)[:, None, None, :],
+                        tripsf[None, :, : level + 1, :],
+                        1.0,
+                    ).reshape(K, B, (level + 1) * D),
+                    axis=2,
+                )
+                b = xp.zeros(B, dtype=xp.float64)
+                for k in range(K):
+                    term = relprod_lvl[k] * ds_foot(ttf_lvl, k) * wb_list[k]
+                    mx = xp.maximum(mx, term)
+                    b = b + term
+                mx = xp.maximum(mx, b)
+                cycles = xp.maximum(cycles, b * cyc_per_byte)
+            return cycles, energy, xp.max(mx)
+
+        return core
+
+    def _run_jax_lb(self, sb: StackedBatch):
+        """Jitted lower-bound core over a device-resident StackedBatch; the
+        uploaded matrices stay on ``sb.dev`` for the scoring pass. Returns
+        numpy (cycles, energy, guard) or None (fallback to numpy)."""
+        if self._jax_failed:
+            return None
+        try:
+            jax = self._ensure_jax()
+            from jax import lax
+            import jax.numpy as jnp
+
+            if self._jax_lb_core is None:
+                # never donate here: the scoring pass reuses sb.dev
+                self._jax_lb_core = jax.jit(self._make_lb_core(jnp, lax))
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                tt, st, perm = self._jax_device_arrays(sb)
+                tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
+                cyc, en, mx = self._jax_lb_core(tt, st, perm)
+            cyc = np.asarray(cyc)
+            if cyc.dtype != np.float64:
+                self._jax_failed = True
+                return None
+            return cyc[:B], np.asarray(en)[:B], np.asarray(mx)
+        except Exception:
+            self._jax_failed = True
+            return None
+
+    def lower_bound_batch(
+        self,
+        sigs=None,
+        backend: str = "numpy",
+        stacked: Optional[StackedBatch] = None,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Stacked :meth:`signature_lower_bound`: float64 ``(cycles[B],
+        energy_pj[B])`` arrays, bit-identical per candidate to the scalar
+        bound, or None when the batch is empty or exactness cannot be
+        guaranteed (any guarded integer quantity at/above
+        :data:`BATCH_EXACT_LIMIT` -- the caller then falls back to the
+        per-candidate bound). ``stacked`` shares an already-stacked batch
+        with the scoring pass (see :meth:`signature_traffic_batch`)."""
+        sb = stacked
+        if sb is None:
+            if not sigs:
+                return None
+            sb = self.stacked_batch(sigs)
+        if sb.size == 0:
+            return None
+        out = None
+        if backend == "jax":
+            out = self._run_jax_lb(sb)
+        if out is None:
+            if self._np_lb_core is None:
+                self._np_lb_core = self._make_lb_core(np)
+            out = self._np_lb_core(sb.tt, sb.st, sb.perm)
+        cycles, energy, mx = out
+        if not (float(mx) < BATCH_EXACT_LIMIT):
+            return None
+        return np.asarray(cycles), np.asarray(energy)
 
     def chains_lower_bound(
         self, chain_list, orders, incumbent: float = math.inf, scalarize=None
@@ -1012,6 +1340,67 @@ def hierarchical_lower_bound(
     if sig is None:
         sig = mapping_signature(mapping, ctx.dims)
     return ctx.signature_lower_bound(sig)
+
+
+def batch_hierarchical_energy(
+    ctx: AnalysisContext,
+    arch: Architecture,
+    problem: Problem,
+    bt: BatchTraffic,
+    hop_pj_byte: Optional[float] = None,
+):
+    """Shared level-walk energy accumulation for the hierarchical models'
+    ``evaluate_signature_batch`` (timeloop_like and maestro_like run the
+    identical sequence of float operations here; maestro additionally
+    accumulates the NoC delivery term, enabled via ``hop_pj_byte``).
+
+    Returns ``(energy[B], noc_energy[B] or None, mac_term, mx)`` where
+    ``energy`` already includes the innermost-operand and MAC terms (the
+    scalar paths add them in exactly this order) and ``mx`` is the max of
+    every guarded integer-valued product (the caller folds it into its
+    BATCH_EXACT_LIMIT check). NoC energy is NOT folded into ``energy`` --
+    maestro adds it after the MAC term, as its scalar path does.
+    """
+    clusters = arch.clusters
+    real_levels = ctx.real_levels
+    real_parent = ctx.real_parent
+    leaf = clusters[-1]
+    inst_at = bt.inst_at
+    B = bt.compute_cycles.shape[0]
+    energy = np.zeros(B)
+    noc_energy = np.zeros(B) if hop_pj_byte is not None else None
+    mx = 0.0
+    for k, ds in enumerate(problem.data_spaces):
+        wb = ds.word_bytes
+        r = bt.rows[k]
+        for pos, i in enumerate(real_levels):
+            cl = clusters[i]
+            t = r.fills[:, pos] * inst_at[:, i] * wb
+            mx = max(mx, float(t.max()))
+            energy = energy + t * cl.write_energy
+            t = r.drains[:, pos] * inst_at[:, i] * wb
+            mx = max(mx, float(t.max()))
+            energy = energy + t * cl.read_energy
+            parent_idx = real_parent[i]
+            if parent_idx is not None:
+                parent = clusters[parent_idx]
+                n_parent = inst_at[:, parent_idx]
+                t = r.parent_reads[:, pos] * n_parent * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * parent.read_energy
+                t = r.parent_writes[:, pos] * n_parent * wb
+                mx = max(mx, float(t.max()))
+                energy = energy + t * parent.write_energy
+                if noc_energy is not None:
+                    # every DELIVERED copy pays a NoC hop (multicast reads
+                    # the parent once; see maestro_like)
+                    t = (r.fills[:, pos] + r.drains[:, pos]) * inst_at[:, i] * wb
+                    mx = max(mx, float(t.max()))
+                    noc_energy = noc_energy + t * hop_pj_byte
+        energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
+    mac_term = problem.macs * leaf.mac_energy
+    energy = energy + mac_term
+    return energy, noc_energy, mac_term, mx
 
 
 def boundary_bytes_per_instance(

@@ -92,6 +92,17 @@ class CostModel(abc.ABC):
         without building their signature. None when unsupported."""
         return None
 
+    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        """Optional vectorized admission bound: a closure
+        ``(sigs, backend=..., stacked=...) -> Optional[(cycles[B],
+        energy_pj[B]))`` producing, for every signature of a stacked batch,
+        exactly the values ``lower_bound_fn`` produces per candidate (the
+        engine admits a whole miss-batch with one masked array program).
+        Implementations MUST return None whenever bit-identity with the
+        scalar bound cannot be guaranteed (the engine then falls back to
+        the per-candidate bound). None when unsupported."""
+        return None
+
     def evaluate_signature(
         self, problem: Problem, arch: Architecture, sig
     ) -> Optional[Cost]:
@@ -103,19 +114,37 @@ class CostModel(abc.ABC):
         return None
 
     def evaluate_signature_batch(
-        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+        self,
+        problem: Problem,
+        arch: Architecture,
+        sigs,
+        backend: str = "numpy",
+        stacked=None,
+        select=None,
     ) -> Optional[List[Cost]]:
         """Vectorized fast path: the Costs ``evaluate_signature`` (or
         ``evaluate``) would produce for every signature in ``sigs``,
         computed as one array program over the stacked batch.
 
         ``backend`` selects the array stack (``"numpy"`` or ``"jax"``).
+        ``stacked``/``select`` let the evaluation engine share the
+        admission stage's already-stacked (device-resident, on jax)
+        ``StackedBatch`` and score only the admitted row indices; ``sigs``
+        must then be the corresponding subset, in ``select`` order.
         Return None when unsupported OR when exactness cannot be
         guaranteed for this batch (values beyond the float64-exact integer
         range) -- the engine then falls back to per-candidate evaluation.
         Implementations MUST be bit-identical to the scalar path whenever
         they return a result."""
         return None
+
+    def store_key_parts(self) -> "tuple":
+        """Model-configuration part of the persistent ResultStore key (see
+        ``repro.core.cost.store``). Two model instances with equal parts
+        MUST produce bit-identical Costs for every (problem, arch,
+        signature); models with scoring-relevant configuration override
+        this to include it."""
+        return (self.name,)
 
     def conformable(self, problem: Problem) -> bool:
         """Whether this model can evaluate the problem at all.

@@ -32,11 +32,13 @@ import math
 import pickle
 from collections import OrderedDict
 from dataclasses import dataclass, replace
+from time import perf_counter
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.architecture import Architecture
 from repro.core.cost.analysis import get_context
 from repro.core.cost.base import Cost, CostModel
+from repro.core.cost.store import ResultStore
 from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-export)
 from repro.core.problem import Problem
 
@@ -56,21 +58,24 @@ _BATCH_MIN = 4
 class EngineStats:
     """Counters for one engine lifetime (one search, in practice)."""
 
-    evaluated: int = 0  # full cost-model analyses (cache misses)
-    cache_hits: int = 0
+    evaluated: int = 0  # full cost-model analyses (cache misses everywhere)
+    cache_hits: int = 0  # served by the in-engine signature memo
+    store_hits: int = 0  # served by the cross-search ResultStore
     pruned: int = 0  # candidates rejected by the lower-bound filter
     batches: int = 0
+    admit_s: float = 0.0  # wall-clock spent in the admission (bound) stage
+    score_s: float = 0.0  # wall-clock spent scoring admitted misses
 
     def snapshot(self) -> "EngineStats":
         return replace(self)
 
     @property
     def candidates(self) -> int:
-        return self.evaluated + self.cache_hits + self.pruned
+        return self.evaluated + self.cache_hits + self.store_hits + self.pruned
 
     @property
     def cache_hit_rate(self) -> float:
-        seen = self.evaluated + self.cache_hits
+        seen = self.evaluated + self.cache_hits + self.store_hits
         return self.cache_hits / seen if seen else 0.0
 
 
@@ -103,9 +108,15 @@ class EvaluationEngine:
     workers:     >0 fans cache misses of ``evaluate_batch`` out to a
                  process pool (beneficial for expensive models / large
                  batches; 0 keeps everything in-process).
-    backend:     array backend for the vectorized miss-batch analysis
-                 ("numpy" default, "jax" for the jitted path); any other
-                 value disables batching (per-candidate scalar path).
+    backend:     array backend for the vectorized miss-batch analysis AND
+                 the batched admission bound ("numpy" default, "jax" for
+                 the jitted device-resident path); any other value
+                 disables batching (per-candidate scalar path).
+    store:       optional cross-search :class:`ResultStore`; probed on
+                 memo misses (before the admission filter) and fed every
+                 fresh evaluation, so repeated sweeps over the same
+                 (problem, arch, model) space stop re-scoring identical
+                 signatures across searches and processes.
     """
 
     def __init__(
@@ -118,6 +129,7 @@ class EvaluationEngine:
         prune: bool = True,
         workers: int = 0,
         backend: Optional[str] = "numpy",
+        store: Optional[ResultStore] = None,
     ) -> None:
         self.cost_model = cost_model
         self.problem = problem
@@ -134,6 +146,11 @@ class EvaluationEngine:
         self._freq = arch.frequency_hz
         self._lb_fn = cost_model.lower_bound_fn(problem, arch)
         self._lb_chains_fn = cost_model.lower_bound_chains_fn(problem, arch)
+        self._lb_batch_fn = cost_model.lower_bound_batch_fn(problem, arch)
+        self._store = store
+        self._store_skey = (
+            store.space_key(cost_model, problem, arch) if store is not None else None
+        )
         self._pool = None
         self._pool_failed = False
 
@@ -172,6 +189,18 @@ class EvaluationEngine:
             return (lb_energy * 1e-12) * (lb_cycles / self._freq)
         return 0.0
 
+    def _scalarize_batch(self, lb_cycles, lb_energy):
+        """Vector form of :meth:`_scalarize` -- identical float operations
+        per element, so batched admit/reject decisions are bit-identical
+        to the scalar filter."""
+        if self.metric == "latency":
+            return lb_cycles
+        if self.metric == "energy":
+            return lb_energy
+        if self.metric == "edp":
+            return (lb_energy * 1e-12) * (lb_cycles / self._freq)
+        return lb_cycles * 0.0
+
     def _should_prune(self, cand, incumbent: float) -> bool:
         if self._lb_chains_fn is not None and not isinstance(cand, Mapping):
             lc, le = self._lb_chains_fn(
@@ -204,6 +233,21 @@ class EvaluationEngine:
         if len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
 
+    def _store_get(self, key, cand) -> Optional[Cost]:
+        """Cross-search store probe (memo misses only). A hit is promoted
+        into the memo so in-batch duplicates become plain cache hits."""
+        if self._store is None:
+            return None
+        c = self._store.get(self._store_skey, self.signature(cand))
+        if c is not None:
+            self.stats.store_hits += 1
+            self._cache_put(key, c)
+        return c
+
+    def _store_put(self, cand, cost: Cost) -> None:
+        if self._store is not None:
+            self._store.put(self._store_skey, self.signature(cand), cost)
+
     def _evaluate_one(self, cand) -> Cost:
         c = self.cost_model.evaluate_signature(
             self.problem, self.arch, self.signature(cand)
@@ -219,54 +263,82 @@ class EvaluationEngine:
         c = self._cache_get(key)
         if c is not None:
             return c
+        c = self._store_get(key, cand)
+        if c is not None:
+            return c
         c = self._evaluate_one(cand)
         self.stats.evaluated += 1
         self._cache_put(key, c)
+        self._store_put(cand, c)
         return c
 
     def evaluate_admit(self, cand, incumbent: float) -> Optional[Cost]:
         """Evaluate unless the lower bound proves the candidate cannot beat
-        ``incumbent`` (returns None in that case). Cached candidates are
-        returned directly -- a hit is cheaper than the bound."""
+        ``incumbent`` (returns None in that case). Cached/stored candidates
+        are returned directly -- a hit is cheaper than the bound."""
         key = self._key_of(cand)
         c = self._cache_get(key)
         if c is not None:
             return c
-        if (
-            self.prune
-            and incumbent != math.inf
-            and self._should_prune(cand, incumbent)
-        ):
-            self.stats.pruned += 1
-            return None
+        c = self._store_get(key, cand)
+        if c is not None:
+            return c
+        if self.prune and incumbent != math.inf:
+            t0 = perf_counter()
+            dominated = self._should_prune(cand, incumbent)
+            self.stats.admit_s += perf_counter() - t0
+            if dominated:
+                self.stats.pruned += 1
+                return None
+        t0 = perf_counter()
         c = self._evaluate_one(cand)
+        self.stats.score_s += perf_counter() - t0
         self.stats.evaluated += 1
         self._cache_put(key, c)
+        self._store_put(cand, c)
         return c
 
     def evaluate_batch(
         self,
         candidates: Sequence,
         incumbent: float = math.inf,
+        probe: int = 0,
     ) -> List[Optional[Cost]]:
-        """Evaluate a population: dedup within the batch, serve cache hits,
-        reject bound-dominated candidates (entries come back ``None``), and
-        evaluate the misses -- in-process, or on the worker pool.
+        """Evaluate a population: dedup within the batch, serve memo/store
+        hits, reject bound-dominated candidates (entries come back
+        ``None``), and evaluate the misses -- the admission bound runs as
+        ONE masked array program over the whole batch (bit-identical
+        decisions and counters to the per-candidate filter), the survivors
+        as one scoring program (sharing the admission stage's stacked --
+        and, on jax, device-resident -- matrices), or on the worker pool.
 
         ``incumbent=inf`` disables pruning for this batch (population
         mappers that need a true fitness for every member use this).
+        ``probe`` is the engine-level warm start: while no incumbent
+        exists, the first ``probe`` candidates are scored unpruned and the
+        best of them becomes the incumbent for the rest of the batch --
+        the candidate stream is untouched and the bound is exact, so
+        results are identical for any ``probe``.
 
         In-batch duplicates of a PRUNED candidate are tracked the same way
         duplicates of a miss are: the bound runs once and ``stats.pruned``
         counts the candidate once per batch, mirroring the dedup semantics
         of ``evaluated``.
         """
+        if probe and incumbent == math.inf and len(candidates) > probe:
+            head = self.evaluate_batch(candidates[:probe])
+            inc = incumbent
+            for c in head:
+                if c is not None:
+                    s = c.metric(self.metric)
+                    if s < inc:
+                        inc = s
+            return head + self.evaluate_batch(candidates[probe:], incumbent=inc)
+
         self.stats.batches += 1
         results: List[Optional[Cost]] = [None] * len(candidates)
         pending: Dict = {}
-        pruned_keys = set()
-        misses: List[Tuple[object, object]] = []  # (key, candidate)
-        do_prune = self.prune and incumbent != math.inf
+        order: List[Tuple[object, object]] = []  # unique non-hit (key, cand)
         for idx, cand in enumerate(candidates):
             key = self._key_of(cand)
             c = self._cache_get(key)
@@ -277,32 +349,88 @@ class EvaluationEngine:
             if dup is not None:
                 dup.append(idx)
                 continue
-            if key in pruned_keys:
-                continue
-            if do_prune and self._should_prune(cand, incumbent):
-                self.stats.pruned += 1
-                pruned_keys.add(key)
+            c = self._store_get(key, cand)
+            if c is not None:
+                results[idx] = c
                 continue
             pending[key] = [idx]
-            misses.append((key, cand))
+            order.append((key, cand))
+
+        misses = order
+        stacked = None
+        select: Optional[List[int]] = None
+        if self.prune and incumbent != math.inf and order:
+            t0 = perf_counter()
+            admit, stacked = self._admit_batch(order, incumbent)
+            misses = []
+            select = []
+            for pos, ((key, cand), ok) in enumerate(zip(order, admit)):
+                if ok:
+                    misses.append((key, cand))
+                    select.append(pos)
+                else:
+                    self.stats.pruned += 1
+            self.stats.admit_s += perf_counter() - t0
 
         if misses:
-            costs = self._evaluate_misses(misses)
-            for (key, _cand), c in zip(misses, costs):
+            t0 = perf_counter()
+            costs = self._evaluate_misses(
+                misses,
+                stacked=stacked,
+                select=select if stacked is not None else None,
+            )
+            for (key, cand), c in zip(misses, costs):
                 self.stats.evaluated += 1
                 self._cache_put(key, c)
+                self._store_put(cand, c)
                 for idx in pending[key]:
                     results[idx] = c
+            self.stats.score_s += perf_counter() - t0
         return results
 
+    def _admit_batch(self, order, incumbent: float):
+        """Admission decisions for the unique non-hit candidates of one
+        batch: True = evaluate, False = prune. One vectorized bound program
+        when the model provides it (returning the shared StackedBatch for
+        the scoring stage); the per-candidate scalar bound otherwise --
+        decisions are bit-identical either way."""
+        sb = None
+        if (
+            self.backend is not None
+            and self._lb_batch_fn is not None
+            and len(order) >= _BATCH_MIN
+        ):
+            sigs = [self.signature(cand) for _key, cand in order]
+            sb = self._ctx.stacked_batch(sigs)
+            lb = self._lb_batch_fn(sigs, backend=self.backend, stacked=sb)
+            if lb is not None:
+                scal = self._scalarize_batch(*lb)
+                return [bool(v < incumbent) for v in scal], sb
+        # scalar fallback (tiny batch, no batched bound, or exactness guard
+        # tripped); an already-built StackedBatch is still handed to the
+        # scoring stage so the batch is never stacked twice
+        return [not self._should_prune(cand, incumbent) for _key, cand in order], sb
+
     # -------------------------------------------------------------- #
-    def _evaluate_misses(self, misses: List[Tuple[object, object]]) -> List[Cost]:
+    def _evaluate_misses(
+        self,
+        misses: List[Tuple[object, object]],
+        stacked=None,
+        select=None,
+    ) -> List[Cost]:
         pool = self._get_pool() if (self.workers and len(misses) >= 8) else None
         if pool is None:
-            if self.backend is not None and len(misses) >= _BATCH_MIN:
+            if self.backend is not None and (
+                stacked is not None or len(misses) >= _BATCH_MIN
+            ):
                 sigs = [self.signature(cand) for _key, cand in misses]
                 costs = self.cost_model.evaluate_signature_batch(
-                    self.problem, self.arch, sigs, backend=self.backend
+                    self.problem,
+                    self.arch,
+                    sigs,
+                    backend=self.backend,
+                    stacked=stacked,
+                    select=select,
                 )
                 if costs is not None:
                     return list(costs)

@@ -28,6 +28,7 @@ from repro.core.architecture import Architecture
 from repro.core.cost.analysis import (
     BATCH_EXACT_LIMIT,
     analyze,
+    batch_hierarchical_energy,
     boundary_bytes_per_instance,
     get_context,
     hierarchical_lower_bound,
@@ -57,6 +58,12 @@ class MaestroLikeModel(CostModel):
 
     def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
         return get_context(problem, arch).chains_lower_bound
+
+    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).lower_bound_batch
+
+    def store_key_parts(self):
+        return (self.name, self.etab)
 
     def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
         """Fused signature->Cost path: identical math (and float-operation
@@ -136,26 +143,34 @@ class MaestroLikeModel(CostModel):
         )
 
     def evaluate_signature_batch(
-        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+        self,
+        problem: Problem,
+        arch: Architecture,
+        sigs,
+        backend: str = "numpy",
+        stacked=None,
+        select=None,
     ):
         """Vectorized ``evaluate_signature`` over a whole miss-batch (same
         float-operation order per candidate; bit-identical results, with a
-        BATCH_EXACT_LIMIT guard that falls back to the scalar path)."""
+        BATCH_EXACT_LIMIT guard that falls back to the scalar path).
+        ``stacked``/``select`` reuse the engine's admission-stage
+        StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} only supports operations {_SUPPORTED_OPS}, "
                 f"got {problem.operation!r} (unit op {problem.unit_op!r})"
             )
         ctx = get_context(problem, arch)
-        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        bt = ctx.signature_traffic_batch(
+            sigs, backend=backend, stacked=stacked, select=select
+        )
         if bt is None:
             return None
         freq = arch.frequency_hz
         clusters = arch.clusters
         real_levels = ctx.real_levels
-        real_parent = ctx.real_parent
         spaces = problem.data_spaces
-        leaf = clusters[-1]
         cc = bt.compute_cycles
         B = cc.shape[0]
         # par is guarded too: utilization must match the scalar path's
@@ -188,36 +203,10 @@ class MaestroLikeModel(CostModel):
             latency = np.where(valid, np.maximum(latency, fill_cycles), latency)
         latency = latency + startup
 
-        energy = np.zeros(B)
-        noc_energy = np.zeros(B)
-        hop = self.etab.noc_hop_pj_byte
-        inst_at = bt.inst_at
-        for k, ds in enumerate(spaces):
-            wb = ds.word_bytes
-            r = bt.rows[k]
-            for pos, i in enumerate(real_levels):
-                cl = clusters[i]
-                t = r.fills[:, pos] * inst_at[:, i] * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * cl.write_energy
-                t = r.drains[:, pos] * inst_at[:, i] * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * cl.read_energy
-                parent_idx = real_parent[i]
-                if parent_idx is not None:
-                    parent = clusters[parent_idx]
-                    n_parent = inst_at[:, parent_idx]
-                    t = r.parent_reads[:, pos] * n_parent * wb
-                    mx = max(mx, float(t.max()))
-                    energy = energy + t * parent.read_energy
-                    t = r.parent_writes[:, pos] * n_parent * wb
-                    mx = max(mx, float(t.max()))
-                    energy = energy + t * parent.write_energy
-                    t = (r.fills[:, pos] + r.drains[:, pos]) * inst_at[:, i] * wb
-                    mx = max(mx, float(t.max()))
-                    noc_energy = noc_energy + t * hop
-            energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
-        energy = energy + problem.macs * leaf.mac_energy
+        energy, noc_energy, _mac_term, e_mx = batch_hierarchical_energy(
+            ctx, arch, problem, bt, hop_pj_byte=self.etab.noc_hop_pj_byte
+        )
+        mx = max(mx, e_mx)
         energy = energy + noc_energy
 
         if not (mx < BATCH_EXACT_LIMIT):

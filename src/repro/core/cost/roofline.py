@@ -31,6 +31,7 @@ from repro.core.architecture import Architecture, TPU_V5E
 from repro.core.cost.analysis import (
     BATCH_EXACT_LIMIT,
     analyze,
+    batch_projection_footprint,
     boundary_bytes_per_instance,
     get_context,
 )
@@ -157,16 +158,71 @@ class TPURooflineModel(CostModel):
         energy = problem.macs * arch.clusters[-1].mac_energy
         return cycles, energy
 
+    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        """Vectorized ``lower_bound``: one array program reproduces the
+        scalar bound (perfect chip scaling + compulsory VMEM traffic) for
+        a whole stacked batch, bit-identically -- or returns None beyond
+        the float64-exact range so the engine falls back per candidate."""
+        ctx = get_context(problem, arch)
+        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
+        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
+        chips = 1
+        for cl in arch.clusters:
+            if cl.dimension in MESH_AXES and cl.fanout > 1:
+                chips *= cl.fanout
+        compute_s = 2.0 * problem.macs / max(1, chips) / peak
+        vmem_level = arch.n_levels - 1
+        vmem_real = vmem_level in ctx.real_levels
+        freq = arch.frequency_hz
+        energy_const = problem.macs * arch.clusters[-1].mac_energy
+        axes_info = ctx.ds_projection_axes
+
+        def lb_batch(sigs=None, backend: str = "numpy", stacked=None):
+            sb = stacked
+            if sb is None:
+                if not sigs:
+                    return None
+                sb = ctx.stacked_batch(sigs)
+            if sb.size == 0:
+                return None
+            B = sb.size
+            memory_s = np.zeros(B)
+            mx = 0.0
+            if vmem_real:
+                ttf = np.maximum(sb.tt[:, vmem_level, :], 1).astype(np.float64)
+                total = np.zeros(B)
+                for wb, axes, _rel in axes_info:
+                    t = batch_projection_footprint(axes, ttf) * wb
+                    mx = max(mx, float(t.max()))
+                    total = total + t
+                memory_s = total / hbm_bw
+            if not (mx < BATCH_EXACT_LIMIT):
+                return None
+            cycles = np.maximum(compute_s, memory_s) * freq
+            return cycles, np.full(B, energy_const)
+
+        return lb_batch
+
     def evaluate_signature_batch(
-        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+        self,
+        problem: Problem,
+        arch: Architecture,
+        sigs,
+        backend: str = "numpy",
+        stacked=None,
+        select=None,
     ):
         """Vectorized ``evaluate`` over a miss-batch of signatures: VMEM
         boundary traffic from the shared batch analysis, chip utilization
         and collective terms from the stacked fan/tile matrices. Same
         float-operation order per candidate as ``evaluate`` (bit-identical;
-        BATCH_EXACT_LIMIT guard falls back to the scalar path)."""
+        BATCH_EXACT_LIMIT guard falls back to the scalar path).
+        ``stacked``/``select`` reuse the engine's admission-stage
+        StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
         ctx = get_context(problem, arch)
-        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        bt = ctx.signature_traffic_batch(
+            sigs, backend=backend, stacked=stacked, select=select
+        )
         if bt is None:
             return None
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
@@ -220,7 +276,7 @@ class TPURooflineModel(CostModel):
             )
             stf = bt.st[:, lvl, :].astype(np.float64)
             for k, ds in enumerate(problem.data_spaces):
-                wb, axes, rel_idx = ctx._ds_axes_idx[k]
+                wb, axes, rel_idx = ctx.ds_projection_axes[k]
                 shard = np.ones(B)
                 for ax in axes:
                     span = np.ones(B)

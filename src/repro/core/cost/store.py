@@ -1,0 +1,287 @@
+"""Persistent cross-search result store.
+
+Figure sweeps (fig3/fig8/fig10/fig11) and ``mappers_bench`` re-run searches
+over the same (problem, arch, cost model) spaces -- across aspect ratios,
+bandwidth points, repeats, and whole benchmark invocations -- and a large
+fraction of the signatures they score are identical between runs. The
+:class:`ResultStore` memoizes ``signature -> Cost`` ACROSS searches and
+(optionally) across processes:
+
+  * **in-memory tier** -- a dict per *space key*, always on;
+  * **on-disk tier** -- one versioned JSON file per space key under a
+    directory, loaded lazily on first probe and written by :meth:`flush`
+    (atomic tmp+rename under an advisory per-space lock). JSON, not
+    pickle: a store directory is meant to be shared (between processes,
+    or as a CI cache artifact), and loading it must never be a
+    code-execution surface -- the records are plain numbers + a
+    ``str -> float`` breakdown dict. Corrupt, truncated, or
+    version-mismatched files are ignored (counted, never raised) and
+    rewritten on the next flush.
+
+The **space key** digests everything that determines a Cost besides the
+mapping signature: problem dims/data-space projections/unit op, every
+cost-relevant cluster attribute of the architecture, and the cost model's
+``store_key_parts()``. Problem and architecture *names* that do not affect
+scoring are excluded, so identical shapes share entries; cluster names ARE
+included because they appear in Cost breakdown keys.
+
+Correctness: a store hit returns the exact Cost an evaluation would have
+produced (same engine, deterministic models), so search results are
+unchanged -- only the ``pruned``/``analyzed`` counter split can shift,
+because a stored candidate is served before the admission filter runs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import uuid
+from pathlib import Path
+from typing import Dict, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platform
+    fcntl = None
+
+from repro.core.architecture import Architecture
+from repro.core.cost.base import Cost, CostModel
+from repro.core.problem import Problem
+
+# Bump whenever the Cost record layout or any scoring semantics change in a
+# way older entries cannot represent: mismatched files are discarded whole.
+STORE_VERSION = 1
+
+
+def _canon_problem(problem: Problem) -> dict:
+    return {
+        "dims": list(problem.dims.items()),
+        "operation": problem.operation,
+        "unit_op": problem.unit_op,
+        "data_spaces": [
+            {
+                "name": ds.name,
+                "out": ds.is_output,
+                "wb": ds.word_bytes,
+                "proj": [
+                    [(t.coeff, t.dim) for t in expr.terms] for expr in ds.projection
+                ],
+            }
+            for ds in problem.data_spaces
+        ],
+    }
+
+
+def _canon_arch(arch: Architecture) -> dict:
+    return {
+        "freq": arch.frequency_hz,
+        "attrs": sorted((k, repr(v)) for k, v in arch.attrs.items()),
+        "clusters": [
+            [
+                c.name,  # appears in Cost breakdown keys
+                c.fanout,
+                c.dimension,
+                c.memory_bytes,
+                repr(c.fill_bandwidth),  # repr: json keeps inf stable
+                c.read_energy,
+                c.write_energy,
+                c.macs_per_cycle,
+                c.mac_energy,
+            ]
+            for c in arch.clusters
+        ],
+    }
+
+
+def space_key(cost_model: CostModel, problem: Problem, arch: Architecture) -> str:
+    """Stable digest of the (cost model, problem, arch) triple."""
+    desc = json.dumps(
+        {
+            "version": STORE_VERSION,
+            "model": [repr(p) for p in cost_model.store_key_parts()],
+            "problem": _canon_problem(problem),
+            "arch": _canon_arch(arch),
+        },
+        sort_keys=True,
+        default=repr,
+    )
+    return hashlib.sha256(desc.encode()).hexdigest()[:32]
+
+
+def _cost_to_record(c: Cost) -> list:
+    return [
+        c.latency_cycles,
+        c.energy_pj,
+        c.utilization,
+        c.macs,
+        c.frequency_hz,
+        dict(c.breakdown),
+    ]
+
+
+def _cost_from_record(rec) -> Cost:
+    latency, energy, util, macs, freq, breakdown = rec
+    return Cost(
+        latency_cycles=latency,
+        energy_pj=energy,
+        utilization=util,
+        macs=macs,
+        frequency_hz=freq,
+        breakdown=breakdown,
+    )
+
+
+def _sig_to_key(sig) -> str:
+    """Canonical signature tuple -> stable JSON string (dict key form)."""
+    return json.dumps(sig, separators=(",", ":"))
+
+
+def _sig_from_key(s: str):
+    """Inverse of :func:`_sig_to_key`: rebuild the exact nested tuples."""
+    return tuple(
+        (tuple(order), tuple(tt), tuple(st)) for order, tt, st in json.loads(s)
+    )
+
+
+class ResultStore:
+    """Cross-search ``(space key, signature) -> Cost`` store.
+
+    One instance is shared across every search of a benchmark sweep (pass
+    it to ``union_opt(result_store=...)``); the engine probes it on memo
+    misses and feeds every fresh evaluation back. Thread-compatibility
+    matches the engine's (single-threaded use per store).
+    """
+
+    def __init__(self, path: Optional[str] = None) -> None:
+        self.path = Path(path) if path else None
+        self._spaces: Dict[str, Dict[object, Cost]] = {}
+        self._loaded: set = set()  # space keys whose disk tier was read
+        self._dirty: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.disk_loaded = 0  # entries brought in from disk
+        self.corrupt = 0  # unreadable or version-mismatched files skipped
+
+    # -------------------------------------------------------------- #
+    def space_key(
+        self, cost_model: CostModel, problem: Problem, arch: Architecture
+    ) -> str:
+        return space_key(cost_model, problem, arch)
+
+    def _space(self, skey: str) -> Dict[object, Cost]:
+        d = self._spaces.get(skey)
+        if d is None:
+            d = self._spaces[skey] = {}
+        if self.path is not None and skey not in self._loaded:
+            self._loaded.add(skey)
+            f = self.path / f"{skey}.json"
+            try:
+                payload = json.loads(f.read_text())
+                if (
+                    isinstance(payload, dict)
+                    and payload.get("version") == STORE_VERSION
+                ):
+                    for key, rec in payload["costs"].items():
+                        sig = _sig_from_key(key)
+                        if sig not in d:
+                            d[sig] = _cost_from_record(rec)
+                            self.disk_loaded += 1
+                else:
+                    self.corrupt += 1  # stale version: discard, rewrite later
+            except FileNotFoundError:
+                pass
+            except Exception:
+                self.corrupt += 1  # truncated/garbled file: start fresh
+        return d
+
+    def get(self, skey: str, sig) -> Optional[Cost]:
+        c = self._space(skey).get(sig)
+        if c is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return c
+
+    def put(self, skey: str, sig, cost: Cost) -> None:
+        d = self._space(skey)
+        if sig not in d:
+            d[sig] = cost
+            self.puts += 1
+            self._dirty.add(skey)
+
+    # -------------------------------------------------------------- #
+    @contextlib.contextmanager
+    def _store_lock(self):
+        """Advisory exclusive lock serializing read-merge-replace across
+        processes (POSIX flock; no-op where unavailable). One lock file
+        per DIRECTORY, deliberately never unlinked: unlink-and-recreate
+        races would break flock's mutual exclusion, and a single constant
+        file cannot litter a long-lived shared store."""
+        if fcntl is None:
+            yield
+            return
+        with open(self.path / ".store.lock", "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def flush(self) -> int:
+        """Write dirty spaces to the disk tier (atomic per space); returns
+        the number of entries persisted. No-op without a path.
+
+        Concurrent writers sharing a directory are lossless: under an
+        advisory per-space lock, the on-disk file is re-read and UNIONED
+        with the in-memory view right before the atomic replace, so
+        entries another process flushed since our lazy load are preserved
+        (identical keys are identical Costs by construction, so merge
+        order is immaterial)."""
+        if self.path is None:
+            self._dirty.clear()
+            return 0
+        self.path.mkdir(parents=True, exist_ok=True)
+        written = 0
+        for skey in sorted(self._dirty):
+            d = self._spaces[skey]
+            costs = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
+            with self._store_lock():
+                try:
+                    prior = json.loads((self.path / f"{skey}.json").read_text())
+                    if (
+                        isinstance(prior, dict)
+                        and prior.get("version") == STORE_VERSION
+                    ):
+                        for key, rec in prior["costs"].items():
+                            costs.setdefault(key, rec)
+                except Exception:
+                    pass  # absent/corrupt prior file: nothing to merge
+                payload = {"version": STORE_VERSION, "costs": costs}
+                # writer-unique tmp name: scratch files are never shared
+                # even if a non-POSIX platform skipped the lock
+                tmp = self.path / f".{skey}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
+                tmp.write_text(json.dumps(payload, separators=(",", ":")))
+                tmp.replace(self.path / f"{skey}.json")
+            written += len(costs)
+        self._dirty.clear()
+        return written
+
+    def stats_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "puts": self.puts,
+            "disk_loaded": self.disk_loaded,
+            "corrupt": self.corrupt,
+            "spaces": len(self._spaces),
+            "entries": sum(len(d) for d in self._spaces.values()),
+        }
+
+    def __enter__(self) -> "ResultStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.flush()

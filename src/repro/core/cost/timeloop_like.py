@@ -20,6 +20,7 @@ from repro.core.architecture import Architecture
 from repro.core.cost.analysis import (
     BATCH_EXACT_LIMIT,
     analyze,
+    batch_hierarchical_energy,
     boundary_bytes_per_instance,
     get_context,
     hierarchical_lower_bound,
@@ -49,6 +50,12 @@ class TimeloopLikeModel(CostModel):
 
     def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
         return get_context(problem, arch).chains_lower_bound
+
+    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch).lower_bound_batch
+
+    def store_key_parts(self):
+        return (self.name, self.unit_op)
 
     def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
         """Fused signature->Cost path: identical math (and float-operation
@@ -114,25 +121,34 @@ class TimeloopLikeModel(CostModel):
         )
 
     def evaluate_signature_batch(
-        self, problem: Problem, arch: Architecture, sigs, backend: str = "numpy"
+        self,
+        problem: Problem,
+        arch: Architecture,
+        sigs,
+        backend: str = "numpy",
+        stacked=None,
+        select=None,
     ):
         """Vectorized ``evaluate_signature`` over a whole miss-batch: same
         float-operation order per candidate, so results are bit-identical
         whenever every integer-valued product stays float64-exact (checked
-        against BATCH_EXACT_LIMIT; returns None otherwise)."""
+        against BATCH_EXACT_LIMIT; returns None otherwise). ``stacked``/
+        ``select`` reuse the engine's admission-stage StackedBatch (see
+        ``CostModel.evaluate_signature_batch``)."""
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} configured with unit op {self.unit_op!r} cannot "
                 f"evaluate problem with unit op {problem.unit_op!r}"
             )
         ctx = get_context(problem, arch)
-        bt = ctx.signature_traffic_batch(sigs, backend=backend)
+        bt = ctx.signature_traffic_batch(
+            sigs, backend=backend, stacked=stacked, select=select
+        )
         if bt is None:
             return None
         freq = arch.frequency_hz
         clusters = arch.clusters
         real_levels = ctx.real_levels
-        real_parent = ctx.real_parent
         spaces = problem.data_spaces
         cc = bt.compute_cycles
         B = cc.shape[0]
@@ -159,33 +175,8 @@ class TimeloopLikeModel(CostModel):
             worst = np.maximum(worst, np.where(bts > 0, cyc, 0.0))
         latency = np.maximum(cc, worst)
 
-        energy = np.zeros(B)
-        leaf = clusters[-1]
-        inst_at = bt.inst_at
-        for k, ds in enumerate(spaces):
-            wb = ds.word_bytes
-            r = bt.rows[k]
-            for pos, i in enumerate(real_levels):
-                cl = clusters[i]
-                t = r.fills[:, pos] * inst_at[:, i] * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * cl.write_energy
-                t = r.drains[:, pos] * inst_at[:, i] * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * cl.read_energy
-                parent_idx = real_parent[i]
-                if parent_idx is not None:
-                    parent = clusters[parent_idx]
-                    n_parent = inst_at[:, parent_idx]
-                    t = r.parent_reads[:, pos] * n_parent * wb
-                    mx = max(mx, float(t.max()))
-                    energy = energy + t * parent.read_energy
-                    t = r.parent_writes[:, pos] * n_parent * wb
-                    mx = max(mx, float(t.max()))
-                    energy = energy + t * parent.write_energy
-            energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
-        mac_term = problem.macs * leaf.mac_energy
-        energy = energy + mac_term
+        energy, _noc, mac_term, e_mx = batch_hierarchical_energy(ctx, arch, problem, bt)
+        mx = max(mx, e_mx)
 
         if not (mx < BATCH_EXACT_LIMIT):
             return None  # exactness not guaranteed: use the scalar path

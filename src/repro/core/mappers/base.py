@@ -35,6 +35,9 @@ class SearchResult:
     cache_hits: int = 0
     pruned: int = 0
     analyzed: int = 0  # full cost-model analyses (cache misses)
+    store_hits: int = 0  # served by the cross-search ResultStore
+    admit_s: float = 0.0  # engine wall-clock in the admission (bound) stage
+    score_s: float = 0.0  # engine wall-clock scoring admitted misses
 
     @property
     def best_metric(self) -> float:
@@ -57,10 +60,13 @@ class SearchResult:
             "evaluated": self.evaluated,
             "analyzed": self.analyzed,
             "cache_hits": self.cache_hits,
+            "store_hits": self.store_hits,
             "pruned": self.pruned,
             "candidates": self.candidates,
             "elapsed_s": round(self.elapsed_s, 4),
             "evals_per_s": round(self.evals_per_s, 1),
+            "admit_s": round(self.admit_s, 4),
+            "score_s": round(self.score_s, 4),
         }
 
 
@@ -133,4 +139,7 @@ class _Tracker:
             cache_hits=stats.cache_hits if stats else 0,
             pruned=stats.pruned if stats else 0,
             analyzed=stats.evaluated if stats else 0,
+            store_hits=stats.store_hits if stats else 0,
+            admit_s=stats.admit_s if stats else 0.0,
+            score_s=stats.score_s if stats else 0.0,
         )

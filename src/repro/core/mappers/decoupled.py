@@ -7,7 +7,6 @@ ON-CHIP levels conditioned on each of the top-k off-chip prefixes.
 
 from __future__ import annotations
 
-import math
 import random
 from typing import Dict, List, Optional, Tuple
 
@@ -30,11 +29,12 @@ class DecoupledMapper(Mapper):
         seed: int = 0,
         probe: int = 8,
     ) -> None:
-        """``probe``: while the incumbent is still infinite, phase-2
-        batches are split so a small head establishes an incumbent before
-        the rest of the batch runs under the bound filter (0 disables).
-        Candidate order is unchanged and pruning is exact, so results are
-        identical for any ``probe``."""
+        """``probe``: the engine-level warm start (see
+        ``EvaluationEngine.evaluate_batch``) -- while the incumbent is
+        still infinite, the first ``probe`` candidates of a phase-2 batch
+        are scored unpruned and their best seeds the bound filter for the
+        rest (0 disables). Candidate order is unchanged and pruning is
+        exact, so results are identical for any ``probe``."""
         self.offchip_samples = offchip_samples
         self.onchip_samples = onchip_samples
         self.top_k = top_k
@@ -133,12 +133,9 @@ class DecoupledMapper(Mapper):
                 ):
                     continue
                 batch.append(m)
-            if self.probe and tr.best_metric_value == math.inf and len(batch) > self.probe:
-                head = batch[: self.probe]
-                batch = batch[self.probe :]
-                for m, cost in zip(head, engine.evaluate_batch(head)):
-                    tr.offer(m, cost)
-            costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)
+            costs = engine.evaluate_batch(
+                batch, incumbent=tr.best_metric_value, probe=self.probe
+            )
             for m, cost in zip(batch, costs):
                 if cost is not None:
                     tr.offer(m, cost)

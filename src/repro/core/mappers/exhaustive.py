@@ -10,7 +10,6 @@ the one serial evaluation finds.
 from __future__ import annotations
 
 import itertools
-import math
 from typing import Optional
 
 from repro.core.cost.base import CostModel
@@ -29,9 +28,10 @@ class ExhaustiveMapper(Mapper):
         batch_size: int = 256,
         probe: int = 8,
     ) -> None:
-        """``probe`` caps chunk size while the incumbent is still infinite,
-        so a small warm-start chunk establishes an incumbent before
-        full-width chunks run under the bound filter (0 disables). The
+        """``probe``: the engine-level warm start (see
+        ``EvaluationEngine.evaluate_batch``) -- while no incumbent exists,
+        the first ``probe`` candidates of a chunk are scored unpruned and
+        their best seeds the bound filter for the rest (0 disables). The
         enumeration stream and the argmin are unaffected."""
         self.max_mappings = max_mappings
         self.orders = orders
@@ -49,13 +49,12 @@ class ExhaustiveMapper(Mapper):
         tr = self._mk_result(metric, engine)
         stream = space.enumerate_genomes(max_mappings=self.max_mappings, orders=self.orders)
         while True:
-            k = self.batch_size
-            if self.probe and tr.best_metric_value == math.inf:
-                k = min(k, self.probe)
-            chunk = list(itertools.islice(stream, k))
+            chunk = list(itertools.islice(stream, self.batch_size))
             if not chunk:
                 break
-            costs = engine.evaluate_batch(chunk, incumbent=tr.best_metric_value)
+            costs = engine.evaluate_batch(
+                chunk, incumbent=tr.best_metric_value, probe=self.probe
+            )
             for m, c in zip(chunk, costs):
                 if c is not None:
                     tr.offer(m, c)

@@ -10,7 +10,6 @@ which keeps results identical to one-at-a-time evaluation for fixed seeds.
 
 from __future__ import annotations
 
-import math
 import random
 from typing import Optional
 
@@ -33,13 +32,12 @@ class RandomMapper(Mapper):
     ) -> None:
         """``patience``: stop after this many consecutive non-improving
         samples (0 = never early-stop), mirroring Timeloop's victory
-        condition. ``probe``: while the incumbent is still infinite (no
-        candidate scored yet) chunks are capped at this size, so a small
-        probe establishes an incumbent before full-width batches run --
-        full batches then get bound-pruned instead of being evaluated
-        unpruned (0 disables the warm-start). The sample stream is
-        independent of chunking and pruning is exact, so results are
-        identical for any ``probe``."""
+        condition. ``probe``: the engine-level warm start (see
+        ``EvaluationEngine.evaluate_batch``) -- while no incumbent exists,
+        the first ``probe`` candidates of a batch are scored unpruned and
+        their best seeds the bound filter for the rest (0 disables). The
+        sample stream is independent of chunking and pruning is exact, so
+        results are identical for any ``probe``."""
         self.samples = samples
         self.seed = seed
         self.patience = patience
@@ -60,11 +58,11 @@ class RandomMapper(Mapper):
         remaining = self.samples
         while remaining > 0:
             k = min(self.batch_size, remaining)
-            if self.probe and tr.best_metric_value == math.inf:
-                k = min(k, self.probe)
             remaining -= k
             batch = [space.random_genome(rng) for _ in range(k)]
-            costs = engine.evaluate_batch(batch, incumbent=tr.best_metric_value)
+            costs = engine.evaluate_batch(
+                batch, incumbent=tr.best_metric_value, probe=self.probe
+            )
             stop = False
             for m, c in zip(batch, costs):
                 if c is not None and tr.offer(m, c):

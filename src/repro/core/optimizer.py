@@ -24,6 +24,7 @@ from repro.core.constraints import Constraints
 from repro.core.cost import MaestroLikeModel, TimeloopLikeModel, TPURooflineModel
 from repro.core.cost.base import Cost, CostModel
 from repro.core.cost.engine import EvaluationEngine
+from repro.core.cost.store import ResultStore
 from repro.core.ir.conformability import conformable_models
 from repro.core.ir.dialects import LayerOp
 from repro.core.ir.lowering import lower_layer_to_problem
@@ -65,6 +66,7 @@ def union_opt(
     engine_cache: int = 1 << 16,
     engine_prune: bool = True,
     engine_backend: Optional[str] = "numpy",
+    result_store: Optional[ResultStore] = None,
     **mapper_kw,
 ) -> UnionSolution:
     """Run one end-to-end mapping search.
@@ -73,8 +75,12 @@ def union_opt(
     ``engine_backend`` configure the shared :class:`EvaluationEngine` all
     mappers score candidates through (process-pool fan-out, memo-cache
     capacity, lower-bound admission, and the vectorized miss-batch
-    backend: "numpy" default, "jax" for jitted device sweeps, anything
-    else for the per-candidate scalar path).
+    backend: "numpy" default, "jax" for jitted device-resident sweeps,
+    anything else for the per-candidate scalar path). ``result_store`` is
+    an optional persistent cross-search cache shared between calls (see
+    ``repro.core.cost.store.ResultStore``): benchmark sweeps pass one
+    store so identical signatures are scored once across runs; callers
+    own ``flush()``.
     """
     problem = (
         lower_layer_to_problem(workload) if isinstance(workload, LayerOp) else workload
@@ -100,6 +106,7 @@ def union_opt(
         prune=engine_prune,
         workers=engine_workers,
         backend=engine_backend,
+        store=result_store,
     )
     try:
         res = mp.search(space, cm, metric, engine=engine)

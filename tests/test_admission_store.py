@@ -1,0 +1,293 @@
+"""Fully-batched admission pipeline + persistent result store.
+
+The vectorized lower bound must be BIT-identical to the scalar bound for
+every cost model (values, admit/reject decisions, and engine counters),
+the engine-level probe warm start must never change results, and the
+cross-search ResultStore must round-trip Costs exactly, survive corrupt or
+version-mismatched disk files, and leave search outputs unchanged on warm
+runs.
+"""
+
+import json
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.architecture import (
+    cloud_accelerator,
+    edge_accelerator,
+    tpu_v5e_pod,
+)
+from repro.core.cost import (
+    EvaluationEngine,
+    MaestroLikeModel,
+    ResultStore,
+    TimeloopLikeModel,
+    TPURooflineModel,
+)
+from repro.core.cost.analysis import get_context
+from repro.core.cost.store import STORE_VERSION, space_key
+from repro.core.optimizer import union_opt
+from repro.core.mapspace import MapSpace
+from repro.core.problem import Problem
+
+GEMM = Problem.gemm(64, 32, 16, word_bytes=1)
+CONV = Problem.conv2d(2, 8, 8, 7, 7, 3, 3, stride=2, name="conv_t", word_bytes=1)
+MODELS = [TimeloopLikeModel, MaestroLikeModel, TPURooflineModel]
+
+
+def _costs_equal(a, b):
+    return (
+        a.latency_cycles == b.latency_cycles
+        and a.energy_pj == b.energy_pj
+        and a.utilization == b.utilization
+        and a.macs == b.macs
+        and a.frequency_hz == b.frequency_hz
+        and a.breakdown == b.breakdown
+    )
+
+
+# --------------------------------------------------------------------- #
+# Batched lower bound == scalar lower bound
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", MODELS)
+@pytest.mark.parametrize(
+    "mk_arch",
+    [edge_accelerator, cloud_accelerator, lambda: tpu_v5e_pod(1, 2, 2)],
+    ids=["edge", "cloud", "tpu_pod"],
+)
+def test_lower_bound_batch_bit_identical(problem, model_cls, mk_arch):
+    """lower_bound_batch_fn == lower_bound_fn per signature, bit for bit,
+    for all three cost models on every architecture family."""
+    arch = mk_arch()
+    cm = model_cls()
+    ctx = get_context(problem, arch)
+    space = MapSpace(problem, arch)
+    rng = random.Random(3)
+    sigs = [space.random_genome(rng).signature(ctx.dims) for _ in range(60)]
+    batch_fn = cm.lower_bound_batch_fn(problem, arch)
+    assert batch_fn is not None
+    lb = batch_fn(sigs)
+    assert lb is not None
+    cyc, en = lb
+    assert cyc.dtype == np.float64 and en.dtype == np.float64
+    scalar_fn = cm.lower_bound_fn(problem, arch)
+    for i, sig in enumerate(sigs):
+        sc, se = scalar_fn(sig)
+        assert float(sc) == cyc[i]
+        assert float(se) == en[i]
+
+
+def test_lower_bound_batch_hypothesis_equivalence():
+    """Randomized GEMM shapes x seeds: batched bound == scalar bound."""
+    pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    sizes = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64])
+
+    @given(sizes, sizes, sizes, st.integers(0, 2**20))
+    @settings(max_examples=25, deadline=None)
+    def check(M, N, K, seed):
+        problem = Problem.gemm(M, N, K, word_bytes=1)
+        arch = cloud_accelerator()
+        ctx = get_context(problem, arch)
+        space = MapSpace(problem, arch)
+        rng = random.Random(seed)
+        sigs = [space.random_genome(rng).signature(ctx.dims) for _ in range(6)]
+        for cm in (TimeloopLikeModel(), MaestroLikeModel(), TPURooflineModel()):
+            lb = cm.lower_bound_batch_fn(problem, arch)(sigs)
+            assert lb is not None
+            scalar_fn = cm.lower_bound_fn(problem, arch)
+            for i, sig in enumerate(sigs):
+                sc, se = scalar_fn(sig)
+                assert float(sc) == lb[0][i]
+                assert float(se) == lb[1][i]
+
+    check()
+
+
+def test_lower_bound_batch_jax_matches_numpy():
+    """The jitted JAX lower-bound core produces the same arrays as numpy
+    (device-resident StackedBatch shared with the traffic program)."""
+    pytest.importorskip("jax")
+    arch = cloud_accelerator()
+    ctx = get_context(GEMM, arch)
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(7)
+    sigs = [space.random_genome(rng).signature(ctx.dims) for _ in range(13)]
+    lb_np = ctx.lower_bound_batch(sigs, backend="numpy")
+    sb = ctx.stacked_batch(sigs)
+    lb_jax = ctx.lower_bound_batch(backend="jax", stacked=sb)
+    if ctx._jax_failed:
+        pytest.skip("jax lb core unavailable on this platform")
+    assert np.array_equal(lb_np[0], lb_jax[0])
+    assert np.array_equal(lb_np[1], lb_jax[1])
+    # the uploaded matrices stay on the handle for the scoring pass
+    assert sb.dev is not None
+    bt_dev = ctx.signature_traffic_batch(backend="jax", stacked=sb, select=[0, 2, 5])
+    bt_np = ctx.signature_traffic_batch([sigs[i] for i in (0, 2, 5)], backend="numpy")
+    assert np.array_equal(bt_dev.compute_cycles, bt_np.compute_cycles)
+    for rd, rn in zip(bt_dev.rows, bt_np.rows):
+        for a, b in zip(rd, rn):
+            assert np.array_equal(a, b)
+
+
+def test_admit_decisions_and_counters_match_scalar_path():
+    """Full searches through the batched admission filter == the scalar
+    per-candidate filter: same best mapping/cost AND same counters, across
+    the mapper x cost-model matrix."""
+    arch = cloud_accelerator()
+    matrix = [
+        ("random", "timeloop", {"samples": 400}),
+        ("random", "maestro", {"samples": 400}),
+        ("exhaustive", "timeloop", {"max_mappings": 600}),
+        ("exhaustive", "maestro", {"max_mappings": 600}),
+        ("decoupled", "timeloop", {"offchip_samples": 80, "onchip_samples": 120}),
+        ("heuristic", "timeloop", {}),
+    ]
+    for mapper, cm, kw in matrix:
+        a = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                      engine_backend="numpy", **kw)
+        b = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                      engine_backend="none", **kw)
+        assert a.cost.edp == b.cost.edp, (mapper, cm)
+        assert a.mapping.to_dict() == b.mapping.to_dict(), (mapper, cm)
+        for attr in ("evaluated", "analyzed", "cache_hits", "pruned", "store_hits"):
+            assert getattr(a.search, attr) == getattr(b.search, attr), (mapper, cm, attr)
+
+
+def test_engine_probe_param_identical_results():
+    """The engine-level probe warm start changes counters, never results."""
+    arch = cloud_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(5)
+    batch = [space.random_genome(rng) for _ in range(64)]
+    plain = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    probed = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    want = plain.evaluate_batch(batch, incumbent=math.inf)
+    got = probed.evaluate_batch(batch, incumbent=math.inf, probe=8)
+    # no incumbent given: plain evaluates everything; probed may prune
+    # candidates that provably cannot beat the head's best -- every
+    # non-None cost must agree, and the head must be fully scored
+    assert all(c is not None for c in got[:8])
+    for a, b in zip(got, want):
+        if a is not None:
+            assert _costs_equal(a, b)
+    assert probed.stats.pruned > 0  # the warm start engaged the filter
+
+
+# --------------------------------------------------------------------- #
+# ResultStore
+# --------------------------------------------------------------------- #
+def test_store_roundtrip_and_flush(tmp_path):
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    ctx = get_context(GEMM, arch)
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(0)
+    sigs = [space.random_genome(rng).signature(ctx.dims) for _ in range(5)]
+    skey = space_key(cm, GEMM, arch)
+    store = ResultStore(tmp_path / "store")
+    costs = {sig: cm.evaluate_signature(GEMM, arch, sig) for sig in sigs}
+    for sig, c in costs.items():
+        store.put(skey, sig, c)
+    assert store.puts == len(costs)
+    assert store.flush() == len(costs)
+    # a fresh instance reads the disk tier lazily and returns EXACT Costs
+    fresh = ResultStore(tmp_path / "store")
+    for sig, c in costs.items():
+        got = fresh.get(skey, sig)
+        assert got is not None and _costs_equal(got, c)
+    assert fresh.hits == len(costs) and fresh.disk_loaded == len(costs)
+    assert fresh.get(skey, ("missing",)) is None
+    assert fresh.misses == 1
+
+
+def test_store_version_mismatch_and_corruption(tmp_path):
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    ctx = get_context(GEMM, arch)
+    g = MapSpace(GEMM, arch).random_genome(random.Random(1))
+    sig = g.signature(ctx.dims)
+    skey = space_key(cm, GEMM, arch)
+    cost = cm.evaluate_signature(GEMM, arch, sig)
+
+    store = ResultStore(tmp_path)
+    store.put(skey, sig, cost)
+    store.flush()
+    f = tmp_path / f"{skey}.json"
+    assert f.exists()
+
+    # version mismatch: entries are discarded (counted), not raised
+    payload = json.loads(f.read_text())
+    payload["version"] = STORE_VERSION + 1
+    f.write_text(json.dumps(payload))
+    stale = ResultStore(tmp_path)
+    assert stale.get(skey, sig) is None
+    assert stale.corrupt == 1
+    # and the space is rewritten at the current version on the next flush
+    stale.put(skey, sig, cost)
+    stale.flush()
+    assert json.loads(f.read_text())["version"] == STORE_VERSION
+
+    # truncated/garbled file: ignored, store starts fresh
+    f.write_text("{\"version\": this is not json")
+    broken = ResultStore(tmp_path)
+    assert broken.get(skey, sig) is None
+    assert broken.corrupt == 1
+    broken.put(skey, sig, cost)
+    broken.flush()
+    again = ResultStore(tmp_path)
+    assert _costs_equal(again.get(skey, sig), cost)
+
+
+def test_store_space_key_separates_configurations():
+    arch = edge_accelerator()
+    k1 = space_key(TimeloopLikeModel(), GEMM, arch)
+    assert k1 == space_key(TimeloopLikeModel(), GEMM, arch)  # deterministic
+    assert k1 != space_key(MaestroLikeModel(), GEMM, arch)
+    assert k1 != space_key(TimeloopLikeModel(), CONV, arch)
+    assert k1 != space_key(TimeloopLikeModel(), GEMM, cloud_accelerator())
+    assert k1 != space_key(TimeloopLikeModel("mac3"), GEMM, arch)  # model config
+    # problem NAME is excluded: identical shapes share the space
+    renamed = Problem.gemm(64, 32, 16, name="other_layer", word_bytes=1)
+    assert k1 == space_key(TimeloopLikeModel(), renamed, arch)
+
+
+def test_store_warm_search_identical_outputs(tmp_path):
+    """A second (warm) run with the on-disk store reports nonzero store
+    hits and byte-identical outputs, across mappers and models."""
+    arch = cloud_accelerator()
+    for mapper, cm, kw in (
+        ("random", "timeloop", {"samples": 300}),
+        ("heuristic", "maestro", {}),
+    ):
+        base = union_opt(GEMM, arch, mapper=mapper, cost_model=cm, **kw)
+        cold_store = ResultStore(tmp_path / "s")
+        cold = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                         result_store=cold_store, **kw)
+        cold_store.flush()
+        warm_store = ResultStore(tmp_path / "s")
+        warm = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                         result_store=warm_store, **kw)
+        assert warm.search.store_hits > 0, (mapper, cm)
+        assert warm.search.analyzed == 0, (mapper, cm)  # nothing re-scored
+        for sol in (cold, warm):
+            assert sol.cost.edp == base.cost.edp, (mapper, cm)
+            assert sol.mapping.to_dict() == base.mapping.to_dict(), (mapper, cm)
+
+
+def test_search_counters_include_phases_and_store():
+    sol = union_opt(GEMM, cloud_accelerator(), mapper="random",
+                    cost_model="timeloop", samples=400)
+    d = sol.search.stats_dict()
+    for key in ("store_hits", "admit_s", "score_s"):
+        assert key in d
+    assert d["store_hits"] == 0  # no store attached
+    assert d["admit_s"] >= 0.0 and d["score_s"] > 0.0

@@ -22,9 +22,13 @@ from repro.core.optimizer import union_opt
 OUT = Path("experiments/benchmarks")
 
 
-def run(store_dir: str | None = None) -> dict:
+def run(store_dir: str | None = None, store_cap: int | None = None) -> dict:
     layers = dnn_layers()
-    store = ResultStore(store_dir) if store_dir else None
+    store = (
+        ResultStore(store_dir, max_entries_per_space=store_cap)
+        if store_dir
+        else None
+    )
     result = {"figure": "fig10", "edge": {}, "cloud": {}}
     for tag, mk, aspects in (
         ("edge", edge_accelerator, EDGE_ASPECTS),
@@ -58,5 +62,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persistent cross-search ResultStore directory")
+    ap.add_argument("--store-cap", type=int, default=None, metavar="N",
+                    help="per-space LRU entry cap for the result store "
+                         "(disk tier compacted at flush; default unbounded)")
     args = ap.parse_args()
-    run(store_dir=args.store)
+    run(store_dir=args.store, store_cap=args.store_cap)

@@ -21,9 +21,13 @@ OUT = Path("experiments/benchmarks")
 BWS = [0.125e9, 0.25e9, 0.5e9, 1e9, 2e9, 4e9, 6e9, 8e9, 12e9, 16e9, 32e9]
 
 
-def run(store_dir: str | None = None) -> dict:
+def run(store_dir: str | None = None, store_cap: int | None = None) -> dict:
     layers = dnn_layers()
-    store = ResultStore(store_dir) if store_dir else None
+    store = (
+        ResultStore(store_dir, max_entries_per_space=store_cap)
+        if store_dir
+        else None
+    )
     result = {"figure": "fig11", "bandwidths_gbps": [b / 1e9 for b in BWS], "rows": {}}
     for wname, problem in layers.items():
         edps = []
@@ -60,5 +64,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persistent cross-search ResultStore directory")
+    ap.add_argument("--store-cap", type=int, default=None, metavar="N",
+                    help="per-space LRU entry cap for the result store "
+                         "(disk tier compacted at flush; default unbounded)")
     args = ap.parse_args()
-    run(store_dir=args.store)
+    run(store_dir=args.store, store_cap=args.store_cap)

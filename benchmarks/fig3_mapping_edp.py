@@ -21,13 +21,18 @@ from repro.core.optimizer import union_opt
 OUT = Path("experiments/benchmarks")
 
 
-def run(samples: int = 300, seed: int = 0, store_dir: str | None = None) -> dict:
+def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
+        store_cap: int | None = None) -> dict:
     problem = dnn_layers()["DLRM-1"]
     arch = edge_accelerator(aspect=(16, 16))
     cm = TimeloopLikeModel()
     space = MapSpace(problem, arch)
     rng = random.Random(seed)
-    store = ResultStore(store_dir) if store_dir else None
+    store = (
+        ResultStore(store_dir, max_entries_per_space=store_cap)
+        if store_dir
+        else None
+    )
 
     rows = []
     for _ in range(samples):
@@ -76,5 +81,9 @@ if __name__ == "__main__":
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persistent cross-search ResultStore directory "
                          "(warm re-runs skip re-scoring identical signatures)")
+    ap.add_argument("--store-cap", type=int, default=None, metavar="N",
+                    help="per-space LRU entry cap for the result store "
+                         "(disk tier compacted at flush; default unbounded)")
     args = ap.parse_args()
-    run(samples=args.samples, seed=args.seed, store_dir=args.store)
+    run(samples=args.samples, seed=args.seed, store_dir=args.store,
+        store_cap=args.store_cap)

@@ -65,9 +65,14 @@ def ttgt_total_edp(cost, plan, arch, include_transpose: bool = True,
     )
 
 
-def run(include_transpose_cost: bool = True, store_dir: str | None = None) -> dict:
+def run(include_transpose_cost: bool = True, store_dir: str | None = None,
+        store_cap: int | None = None) -> dict:
     arch = cloud_accelerator(aspect=(32, 64))
-    store = ResultStore(store_dir) if store_dir else None
+    store = (
+        ResultStore(store_dir, max_entries_per_space=store_cap)
+        if store_dir
+        else None
+    )
     rows = []
     mappings = {}
     for name, tds, problem in tc_problems():
@@ -144,5 +149,9 @@ if __name__ == "__main__":
     )
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persistent cross-search ResultStore directory")
+    ap.add_argument("--store-cap", type=int, default=None, metavar="N",
+                    help="per-space LRU entry cap for the result store "
+                         "(disk tier compacted at flush; default unbounded)")
     args = ap.parse_args()
-    run(include_transpose_cost=not args.no_transpose_cost, store_dir=args.store)
+    run(include_transpose_cost=not args.no_transpose_cost, store_dir=args.store,
+        store_cap=args.store_cap)

@@ -46,6 +46,78 @@ from repro.core.problem import DataSpace, Problem
 BATCH_EXACT_LIMIT = float(1 << 52)
 
 
+def exact_divisor(xp, v):
+    """A host constant to DIVIDE by inside a traced array program.
+
+    numpy returns the plain value. Under a jax trace the constant is
+    wrapped in an optimization barrier so XLA's simplifier cannot fold
+    ``x / c`` into ``x * (1/c)`` -- that rewrite is exact only for powers
+    of two and would break bit-identity with the host numpy division for
+    every other bandwidth/frequency/PE-count constant.
+    """
+    if xp is np:
+        return v
+    from jax import lax
+
+    return lax.optimization_barrier(xp.float64(v))
+
+
+def ordered_sum(xp, init, addends):
+    """Left-associated ``((init + a0) + a1) + ...`` with numpy semantics.
+
+    On numpy this is the plain accumulation loop. Under a jax trace the
+    addends are stacked and summed by ``lax.scan``: the while-loop
+    boundary forces every addend (typically an ``int_counts * energy``
+    product) to be materialized -- i.e. ROUNDED -- before the sequential
+    adds, and XLA cannot fuse producer multiplies into the loop body, so
+    the LLVM backend can never contract ``acc + a*b`` into an FMA. This
+    is what keeps fractional (energy) accumulations bit-identical between
+    the host numpy program and the fused jitted core; integer-valued
+    accumulations don't need it (exact under FMA or not).
+    """
+    if xp is np:
+        acc = init
+        for a in addends:
+            acc = acc + a
+        return acc
+    if not addends:
+        return init
+    from jax import lax
+
+    stacked = xp.stack([xp.broadcast_to(a, init.shape) for a in addends])
+    out, _ = lax.scan(lambda acc, a: (acc + a, None), init, stacked)
+    return out
+
+
+def ordered_pair_sum(xp, init, pairs):
+    """Left-associated ``acc + (x + y)`` accumulation over ``pairs``, with
+    the same contraction-proof scan structure as :func:`ordered_sum` (the
+    inner ``x + y`` rounds first, exactly as the scalar/numpy programs
+    associate their two-term energy addends). Pass ``y = 0.0`` for single
+    addends: ``x + 0.0`` is exact for the non-negative energy terms."""
+    if xp is np:
+        acc = init
+        for x, y in pairs:
+            acc = acc + (x + y)
+        return acc
+    if not pairs:
+        return init
+    from jax import lax
+
+    stacked = xp.stack(
+        [
+            xp.stack(
+                [xp.broadcast_to(x, init.shape), xp.broadcast_to(y, init.shape)]
+            )
+            for x, y in pairs
+        ]
+    )
+    out, _ = lax.scan(
+        lambda acc, p: (acc + (p[0] + p[1]), None), init, stacked
+    )
+    return out
+
+
 def batch_projection_footprint(axes, ttf_lvl, xp=np):
     """Batched data-space footprint over one level's tile rows.
 
@@ -278,6 +350,14 @@ class AnalysisContext:
         self._jax = None
         self._jax_failed = False
         self._jax_core_donates = False
+        # jitted-program invocations (lb, traffic, or fused admit+score):
+        # the observable "dispatches per batch" count tests probe.
+        self.jax_dispatches = 0
+        # fused admit+score runners, keyed by (model store-key parts,
+        # metric): engines come and go per search, the compiled program
+        # is reused (equal store_key_parts => bit-identical costs, so
+        # sharing is sound by the same contract the ResultStore relies on)
+        self._fused_runners: Dict[Tuple, object] = {}
 
     @property
     def ds_projection_axes(self) -> List[Tuple[int, List[List[Tuple[int, int]]], Tuple[int, ...]]]:
@@ -588,7 +668,7 @@ class AnalysisContext:
             fansf = fans.astype(xp.float64)
             total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
             leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
-            compute_cycles = total_trips * xp.ceil(leaf_macs / mpc)
+            compute_cycles = total_trips * xp.ceil(leaf_macs / exact_divisor(xp, mpc))
             par = xp.prod(fansf.reshape(B, n * D), axis=1)
             lvl_all = xp.prod(fansf, axis=2)  # [B, n]
             cp_all = xp.cumprod(lvl_all, axis=1)
@@ -721,6 +801,7 @@ class AnalysisContext:
                     sel = jnp.asarray(np.asarray(select, dtype=np.int64))
                     tt, st, perm = tt[sel], st[sel], perm[sel]
                 tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
+                self.jax_dispatches += 1
                 out = self._jax_batch_core(tt, st, perm)
             if self._jax_core_donates and select is None:
                 sb.dev = None  # donated away; re-upload on next use
@@ -996,8 +1077,11 @@ class AnalysisContext:
             tripsf = trips.astype(xp.float64)
             total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
             leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
-            cycles = total_trips * xp.ceil(leaf_macs / mpc)
-            energy = xp.full((B,), e_base, dtype=xp.float64)
+            cycles = total_trips * xp.ceil(leaf_macs / exact_divisor(xp, mpc))
+            # fractional energy addends are collected as (x, y) pairs and
+            # summed through ordered_pair_sum -- contraction-proof on the
+            # jitted path, plain left-associated adds on numpy
+            e_pairs = []
             mx = xp.maximum(xp.maximum(total_trips, leaf_macs), cycles)
 
             dc_boundary = None
@@ -1053,12 +1137,17 @@ class AnalysisContext:
                         rmw = xp.maximum(changes[k] - unique[k], 0.0) * foot
                         t2 = rmw * rel_sp * wb_list[k]
                         mx = xp.maximum(mx, t2)
-                        energy = energy + (t1 * twe + t2 * tre)
+                        e_pairs.append((t1 * twe, t2 * tre))
                         dc_boundary = dc_boundary + (cf + rmw) * wb_list[k]
                     else:
-                        energy = energy + t1 * tre
+                        # x + 0.0 is exact for the non-negative term, so the
+                        # pair form reproduces ``energy + t1 * tre``
+                        e_pairs.append((t1 * tre, 0.0))
                         dc_boundary = dc_boundary + cf * wb_list[k]
                 mx = xp.maximum(mx, dc_boundary)
+            energy = ordered_pair_sum(
+                xp, xp.full((B,), e_base, dtype=xp.float64), e_pairs
+            )
 
             for level, cyc_per_byte in bw_levels:
                 if level == dc:
@@ -1104,6 +1193,7 @@ class AnalysisContext:
             with enable_x64():
                 tt, st, perm = self._jax_device_arrays(sb)
                 tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
+                self.jax_dispatches += 1
                 cyc, en, mx = self._jax_lb_core(tt, st, perm)
             cyc = np.asarray(cyc)
             if cyc.dtype != np.float64:
@@ -1145,6 +1235,141 @@ class AnalysisContext:
         if not (float(mx) < BATCH_EXACT_LIMIT):
             return None
         return np.asarray(cycles), np.asarray(energy)
+
+    # ------------------------------------------------------------------ #
+    # Single-dispatch fused admit+score. One jitted program runs the
+    # model's lower-bound core, derives the admit mask, runs the traffic
+    # core, and accumulates the model's latency/energy/utilization terms
+    # -- so one dispatch per miss-batch covers the whole pipeline and only
+    # per-candidate scalars (plus small [B] breakdown arrays) ever return
+    # to host. The numpy backend keeps the two-stage flow but runs the
+    # SAME terms array program per row, so values are bit-identical.
+    # ------------------------------------------------------------------ #
+    def _metric_scalarize(self, metric: str, xp):
+        """Device-traceable twin of ``EvaluationEngine._scalarize_batch``:
+        identical float operations per element (the frequency divisor goes
+        through :func:`exact_divisor`), so on-device admit/reject decisions
+        are bit-identical to the host filter."""
+        freq = self.arch.frequency_hz
+        if metric == "latency":
+            return lambda cyc, en: cyc
+        if metric == "energy":
+            return lambda cyc, en: en
+        if metric == "edp":
+            return lambda cyc, en: (en * 1e-12) * (cyc / exact_divisor(xp, freq))
+        return lambda cyc, en: cyc * 0.0
+
+    def _make_fused_core(self, xp, lax, lb_builder, terms, metric: str):
+        """Build the (tt, st, perm, incumbent) -> (admit[B], lb_guard,
+        latency[B], energy[B], util[B], score_guard, extras) program.
+
+        ``lb_builder(xp, lax)`` yields the model's admission-bound core
+        (``CostModel.batch_admit_core_builder``); ``terms`` is the model's
+        cost-terms program (``CostModel.batch_cost_terms_fn``). Both guard
+        maxes come back so the host can fall back exactly where the
+        two-stage path would (lb guard -> scalar bound; score guard ->
+        scalar/numpy scoring of the admitted subset).
+        """
+        lb_core = lb_builder(xp, lax)
+        traffic_core = self._make_batch_core(xp, lax)
+        scalarize = self._metric_scalarize(metric, xp)
+
+        def core(tt, st, perm, incumbent):
+            lb_cyc, lb_en, lb_mx = lb_core(tt, st, perm)
+            admit = scalarize(lb_cyc, lb_en) < incumbent
+            out = traffic_core(tt, st, perm)
+            bt = BatchTraffic(
+                compute_cycles=out[0],
+                total_trips=out[1],
+                par=out[2],
+                inst_at=out[3],
+                tt=out[4],
+                st=out[5],
+                fans=out[6],
+                rows=tuple(DsTrafficBatch(*r) for r in out[7]),
+            )
+            latency, energy, util, score_mx, extras = terms(bt, xp)
+            return admit, lb_mx, latency, energy, util, score_mx, extras
+
+        return core
+
+    def build_fused_runner(self, lb_builder, terms, metric: str, cache_key=None):
+        """Jitted single-dispatch admit+score runner for one (model,
+        metric): ``run(sb, incumbent) -> (admit[B] bool, lb_guard float,
+        latency[B], energy[B], util[B], score_guard float, extras)`` as
+        host numpy, or None (jax unavailable / x64 undeliverable / trace
+        failure -- the engine then keeps the two-stage flow). The stacked
+        batch is uploaded once and padded to a power of two (padding
+        repeats row 0, a real candidate, so neither guard can trip on
+        padding); only [B]-sized result arrays cross back to host.
+
+        ``cache_key`` (model store-key parts + metric, from the engine)
+        memoizes the runner on the context so repeated searches over the
+        same (problem, arch, model, metric) reuse the compiled program
+        instead of re-tracing per engine.
+        """
+        if self._jax_failed:
+            return None
+        if cache_key is not None:
+            cached = self._fused_runners.get(cache_key)
+            if cached is not None:
+                return cached
+        try:
+            jax = self._ensure_jax()
+            from jax import lax
+            import jax.numpy as jnp
+        except Exception:
+            self._jax_failed = True
+            return None
+        try:
+            # Donation mirrors the traffic core: XLA may reuse the batch
+            # matrices' device memory on accelerator backends (unsupported
+            # on CPU); the incumbent scalar (arg 3) is never donated.
+            donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+            core = jax.jit(
+                self._make_fused_core(jnp, lax, lb_builder, terms, metric),
+                donate_argnums=donate,
+            )
+        except Exception:
+            self._jax_failed = True
+            return None
+
+        def run(sb: StackedBatch, incumbent: float):
+            if self._jax_failed:
+                return None
+            try:
+                from jax.experimental import enable_x64
+
+                with enable_x64():
+                    tt, st, perm = self._jax_device_arrays(sb)
+                    tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
+                    inc = jnp.asarray(float(incumbent), dtype=jnp.float64)
+                    self.jax_dispatches += 1
+                    out = core(tt, st, perm, inc)
+                if donate:
+                    sb.dev = None  # donated away; fallbacks re-upload
+                admit, lb_mx, latency, energy, util, score_mx, extras = out
+                latency = np.asarray(latency)
+                if latency.dtype != np.float64:
+                    # x64 unavailable: cannot honour bit-identity
+                    self._jax_failed = True
+                    return None
+                return (
+                    np.asarray(admit)[:B],
+                    float(np.asarray(lb_mx)),
+                    latency[:B],
+                    np.asarray(energy)[:B],
+                    np.asarray(util)[:B],
+                    float(np.asarray(score_mx)),
+                    {k: np.asarray(v)[:B] for k, v in extras.items()},
+                )
+            except Exception:
+                self._jax_failed = True
+                return None
+
+        if cache_key is not None:
+            self._fused_runners[cache_key] = run
+        return run
 
     def chains_lower_bound(
         self, chain_list, orders, incumbent: float = math.inf, scalarize=None
@@ -1348,58 +1573,76 @@ def batch_hierarchical_energy(
     problem: Problem,
     bt: BatchTraffic,
     hop_pj_byte: Optional[float] = None,
+    xp=np,
 ):
     """Shared level-walk energy accumulation for the hierarchical models'
     ``evaluate_signature_batch`` (timeloop_like and maestro_like run the
     identical sequence of float operations here; maestro additionally
     accumulates the NoC delivery term, enabled via ``hop_pj_byte``).
 
+    ``xp`` selects the array stack: numpy for host-side scoring, jax.numpy
+    when the walk runs inside the fused single-dispatch jitted core (the
+    per-element float-operation order is identical either way).
+
     Returns ``(energy[B], noc_energy[B] or None, mac_term, mx)`` where
     ``energy`` already includes the innermost-operand and MAC terms (the
-    scalar paths add them in exactly this order) and ``mx`` is the max of
-    every guarded integer-valued product (the caller folds it into its
-    BATCH_EXACT_LIMIT check). NoC energy is NOT folded into ``energy`` --
-    maestro adds it after the MAC term, as its scalar path does.
+    scalar paths add them in exactly this order) and ``mx`` is an xp
+    scalar holding the max of every guarded integer-valued product (the
+    caller folds it into its BATCH_EXACT_LIMIT check host-side). NoC
+    energy is NOT folded into ``energy`` -- maestro adds it after the MAC
+    term, as its scalar path does.
     """
     clusters = arch.clusters
     real_levels = ctx.real_levels
     real_parent = ctx.real_parent
     leaf = clusters[-1]
     inst_at = bt.inst_at
-    B = bt.compute_cycles.shape[0]
-    energy = np.zeros(B)
-    noc_energy = np.zeros(B) if hop_pj_byte is not None else None
-    mx = 0.0
+    mx = xp.zeros(())
+    # The access-count products (t) are integer-valued and exact, but the
+    # per-byte energies are fractional: each ``t * energy`` product must be
+    # ROUNDED before it joins the accumulator, exactly as numpy does.
+    # Addends are collected and summed through :func:`ordered_sum`, whose
+    # scan structure stops XLA's LLVM backend from contracting
+    # ``acc + t * e`` into an FMA (one rounding instead of two) on the
+    # fused jitted path.
+    e_terms = []
+    noc_terms = [] if hop_pj_byte is not None else None
     for k, ds in enumerate(problem.data_spaces):
         wb = ds.word_bytes
         r = bt.rows[k]
         for pos, i in enumerate(real_levels):
             cl = clusters[i]
             t = r.fills[:, pos] * inst_at[:, i] * wb
-            mx = max(mx, float(t.max()))
-            energy = energy + t * cl.write_energy
+            mx = xp.maximum(mx, xp.max(t))
+            e_terms.append(t * cl.write_energy)
             t = r.drains[:, pos] * inst_at[:, i] * wb
-            mx = max(mx, float(t.max()))
-            energy = energy + t * cl.read_energy
+            mx = xp.maximum(mx, xp.max(t))
+            e_terms.append(t * cl.read_energy)
             parent_idx = real_parent[i]
             if parent_idx is not None:
                 parent = clusters[parent_idx]
                 n_parent = inst_at[:, parent_idx]
                 t = r.parent_reads[:, pos] * n_parent * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * parent.read_energy
+                mx = xp.maximum(mx, xp.max(t))
+                e_terms.append(t * parent.read_energy)
                 t = r.parent_writes[:, pos] * n_parent * wb
-                mx = max(mx, float(t.max()))
-                energy = energy + t * parent.write_energy
-                if noc_energy is not None:
+                mx = xp.maximum(mx, xp.max(t))
+                e_terms.append(t * parent.write_energy)
+                if noc_terms is not None:
                     # every DELIVERED copy pays a NoC hop (multicast reads
                     # the parent once; see maestro_like)
                     t = (r.fills[:, pos] + r.drains[:, pos]) * inst_at[:, i] * wb
-                    mx = max(mx, float(t.max()))
-                    noc_energy = noc_energy + t * hop_pj_byte
-        energy = energy + ctx.l1_reads[ds.name] * wb * leaf.read_energy
+                    mx = xp.maximum(mx, xp.max(t))
+                    noc_terms.append(t * hop_pj_byte)
+        e_terms.append(ctx.l1_reads[ds.name] * wb * leaf.read_energy)
     mac_term = problem.macs * leaf.mac_energy
-    energy = energy + mac_term
+    e_terms.append(mac_term)
+    energy = ordered_sum(xp, xp.zeros_like(bt.compute_cycles), e_terms)
+    noc_energy = (
+        ordered_sum(xp, xp.zeros_like(energy), noc_terms)
+        if noc_terms is not None
+        else None
+    )
     return energy, noc_energy, mac_term, mx
 
 

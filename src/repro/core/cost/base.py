@@ -138,6 +138,47 @@ class CostModel(abc.ABC):
         they return a result."""
         return None
 
+    def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        """Optional traceable admission-bound core builder for the fused
+        single-dispatch pipeline: an ``(xp, lax=None) -> core`` callable
+        where ``core(tt, st, perm) -> (cycles[B], energy_pj[B], guard)``
+        reproduces ``lower_bound_fn`` per row bit-identically (``guard``
+        is the running max of every guarded integer-valued quantity; the
+        host rejects the dispatch at BATCH_EXACT_LIMIT). The hierarchical
+        models return ``AnalysisContext._make_lb_core``; None disables the
+        fused path for this model."""
+        return None
+
+    def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
+        """Optional array-program cost terms: a traceable closure
+        ``terms(bt: BatchTraffic, xp) -> (latency[B], energy_pj[B],
+        util[B], guard, extras)`` accumulating this model's latency/energy
+        over the stacked traffic with ``xp`` ops only (numpy host-side,
+        jax.numpy inside the fused jitted core -- the per-row float-op
+        order must equal ``evaluate_signature``'s). ``guard`` is an xp
+        scalar (max of guarded integer-valued products, checked host-side
+        against BATCH_EXACT_LIMIT); ``extras`` is a str->array[B] dict
+        carrying whatever :meth:`costs_from_batch` needs to rebuild
+        breakdown dicts. None when unsupported (disables both the shared
+        numpy scoring program and the fused jax path)."""
+        return None
+
+    def costs_from_batch(
+        self,
+        problem: Problem,
+        arch: Architecture,
+        latency,
+        energy,
+        util,
+        extras,
+        indices=None,
+    ) -> List[Cost]:
+        """Materialize Cost objects (scalar-path breakdown layout
+        included) from :meth:`batch_cost_terms_fn` output arrays --
+        ``indices`` restricts materialization to the given rows (the
+        engine's fused path builds Costs only for ADMITTED candidates)."""
+        raise NotImplementedError
+
     def store_key_parts(self) -> "tuple":
         """Model-configuration part of the persistent ResultStore key (see
         ``repro.core.cost.store``). Two model instances with equal parts

@@ -33,10 +33,10 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass, replace
 from time import perf_counter
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.core.architecture import Architecture
-from repro.core.cost.analysis import get_context
+from repro.core.cost.analysis import BATCH_EXACT_LIMIT, get_context
 from repro.core.cost.base import Cost, CostModel
 from repro.core.cost.store import ResultStore
 from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-export)
@@ -54,6 +54,20 @@ _BATCH_MIN = 4
 # actual cache misses.
 
 
+class _FusedOutcome(NamedTuple):
+    """Result of one fused admit+score attempt (see
+    ``EvaluationEngine._fused_admit_score``)."""
+
+    decided: bool  # admission decisions were made on device
+    misses: Optional[List[Tuple[object, object]]]  # admitted (key, cand)
+    select: Optional[List[int]]  # admitted row indices into the batch
+    stacked: Optional[object]  # StackedBatch to reuse on any fallback
+    arrays: Optional[tuple]  # (latency, energy, util, extras) or None
+
+
+_FUSED_UNAVAILABLE = _FusedOutcome(False, None, None, None, None)
+
+
 @dataclass
 class EngineStats:
     """Counters for one engine lifetime (one search, in practice)."""
@@ -63,6 +77,15 @@ class EngineStats:
     store_hits: int = 0  # served by the cross-search ResultStore
     pruned: int = 0  # candidates rejected by the lower-bound filter
     batches: int = 0
+    # candidate instances submitted by the mapper (pre-dedup, regardless of
+    # how they were served). The mapper's candidate stream is unchanged by
+    # cache/store warmth, so -- unlike the evaluated/pruned split -- this
+    # total is warm/cold invariant.
+    considered: int = 0
+    # miss-batches served by the single-dispatch fused admit+score program
+    # (jax backend): one jitted dispatch covered bound + mask + traffic +
+    # energy for the whole batch.
+    fused_dispatches: int = 0
     admit_s: float = 0.0  # wall-clock spent in the admission (bound) stage
     score_s: float = 0.0  # wall-clock spent scoring admitted misses
 
@@ -153,6 +176,9 @@ class EvaluationEngine:
         )
         self._pool = None
         self._pool_failed = False
+        # fused single-dispatch admit+score (jax backend only; lazy)
+        self._fused_runner = None
+        self._fused_failed = False
 
     # -------------------------------------------------------------- #
     def signature(self, cand) -> Signature:
@@ -259,6 +285,7 @@ class EvaluationEngine:
     # -------------------------------------------------------------- #
     def evaluate(self, cand) -> Cost:
         """Memoized single evaluation (always admits)."""
+        self.stats.considered += 1
         key = self._key_of(cand)
         c = self._cache_get(key)
         if c is not None:
@@ -276,6 +303,7 @@ class EvaluationEngine:
         """Evaluate unless the lower bound proves the candidate cannot beat
         ``incumbent`` (returns None in that case). Cached/stored candidates
         are returned directly -- a hit is cheaper than the bound."""
+        self.stats.considered += 1
         key = self._key_of(cand)
         c = self._cache_get(key)
         if c is not None:
@@ -336,6 +364,7 @@ class EvaluationEngine:
             return head + self.evaluate_batch(candidates[probe:], incumbent=inc)
 
         self.stats.batches += 1
+        self.stats.considered += len(candidates)
         results: List[Optional[Cost]] = [None] * len(candidates)
         pending: Dict = {}
         order: List[Tuple[object, object]] = []  # unique non-hit (key, cand)
@@ -356,52 +385,162 @@ class EvaluationEngine:
             pending[key] = [idx]
             order.append((key, cand))
 
-        misses = order
-        stacked = None
-        select: Optional[List[int]] = None
-        if self.prune and incumbent != math.inf and order:
-            t0 = perf_counter()
-            admit, stacked = self._admit_batch(order, incumbent)
-            misses = []
-            select = []
-            for pos, ((key, cand), ok) in enumerate(zip(order, admit)):
-                if ok:
-                    misses.append((key, cand))
-                    select.append(pos)
-                else:
-                    self.stats.pruned += 1
-            self.stats.admit_s += perf_counter() - t0
-
-        if misses:
-            t0 = perf_counter()
-            costs = self._evaluate_misses(
-                misses,
-                stacked=stacked,
-                select=select if stacked is not None else None,
-            )
+        def commit(misses, costs):
             for (key, cand), c in zip(misses, costs):
                 self.stats.evaluated += 1
                 self._cache_put(key, c)
                 self._store_put(cand, c)
                 for idx in pending[key]:
                     results[idx] = c
+
+        misses = order
+        stacked = None
+        select: Optional[List[int]] = None
+        decided = False  # admission decisions already made by the fused path
+
+        if order and self.backend == "jax" and len(order) >= _BATCH_MIN:
+            fused = self._fused_admit_score(order, incumbent)
+            stacked = fused.stacked  # reused by every fallback below
+            if fused.decided:
+                decided = True
+                misses, select = fused.misses, fused.select
+                if misses and fused.arrays is not None:
+                    latency, energy, util, extras = fused.arrays
+                    t0 = perf_counter()
+                    commit(
+                        misses,
+                        self.cost_model.costs_from_batch(
+                            self.problem,
+                            self.arch,
+                            latency,
+                            energy,
+                            util,
+                            extras,
+                            indices=select,
+                        ),
+                    )
+                    self.stats.score_s += perf_counter() - t0
+                    return results
+                # score guard tripped (arrays is None): the decisions
+                # stand and the shared scoring path below re-scores the
+                # admitted subset through the numpy/scalar flow.
+
+        if not decided and self.prune and incumbent != math.inf and order:
+            t0 = perf_counter()
+            admit, stacked = self._admit_batch(order, incumbent, stacked=stacked)
+            misses, select = self._partition_admitted(order, admit)
+            self.stats.admit_s += perf_counter() - t0
+
+        if misses:
+            t0 = perf_counter()
+            commit(
+                misses,
+                self._evaluate_misses(
+                    misses,
+                    stacked=stacked,
+                    select=select if stacked is not None else None,
+                ),
+            )
             self.stats.score_s += perf_counter() - t0
         return results
 
-    def _admit_batch(self, order, incumbent: float):
+    def _partition_admitted(self, order, admit):
+        """Split a batch's unique candidates by admit flag, counting one
+        ``pruned`` tick per rejected candidate -- the single accounting
+        path shared by the fused and two-stage admission flows."""
+        misses: List[Tuple[object, object]] = []
+        select: List[int] = []
+        for pos, ((key, cand), ok) in enumerate(zip(order, admit)):
+            if ok:
+                misses.append((key, cand))
+                select.append(pos)
+            else:
+                self.stats.pruned += 1
+        return misses, select
+
+    def _fused_admit_score(self, order, incumbent: float) -> "_FusedOutcome":
+        """Single-dispatch fused admit+score for one miss-batch (jax
+        backend): one jitted program covers bound -> admit mask ->
+        traffic -> energy; only per-candidate scalars return to host, and
+        decisions/costs/counters are bit-identical to the two-stage flow
+        by construction.
+
+        ``decided=False`` means the caller must run its own admission
+        (runner unavailable, jax broke mid-flight, or the lower-bound
+        exactness guard tripped -- the two-stage bound falls back to the
+        scalar bound the same way); any already-stacked batch is returned
+        for reuse either way. With ``decided=True``, ``arrays`` holds the
+        on-device score results -- or None when the score guard tripped,
+        in which case the admitted subset must be re-scored host-side.
+        The fused dispatch (and mask derivation) is accounted to
+        ``admit_s``; Cost materialization is the caller's ``score_s``.
+        """
+        runner = self._get_fused_runner()
+        if runner is None:
+            return _FUSED_UNAVAILABLE
+        t0 = perf_counter()
+        sigs = [self.signature(cand) for _key, cand in order]
+        sb = self._ctx.stacked_batch(sigs)
+        inc = incumbent if (self.prune and incumbent != math.inf) else math.inf
+        out = runner(sb, inc)
+        if out is None:
+            self._fused_failed = True  # jax broke: stop trying
+            self.stats.admit_s += perf_counter() - t0
+            return _FusedOutcome(False, None, None, sb, None)
+        admit, lb_mx, latency, energy, util, score_mx, extras = out
+        if not (lb_mx < BATCH_EXACT_LIMIT):
+            self.stats.admit_s += perf_counter() - t0
+            return _FusedOutcome(False, None, None, sb, None)
+        self.stats.fused_dispatches += 1
+        misses, select = self._partition_admitted(order, admit)
+        self.stats.admit_s += perf_counter() - t0
+        arrays = (
+            (latency, energy, util, extras)
+            if score_mx < BATCH_EXACT_LIMIT
+            else None
+        )
+        return _FusedOutcome(True, misses, select, sb, arrays)
+
+    def _get_fused_runner(self):
+        """Lazily build (and memoize) the single-dispatch jitted
+        admit+score runner for this (model, metric). None when the model
+        does not provide traceable bound/terms programs or JAX cannot
+        deliver float64 -- the engine then keeps the two-stage flow."""
+        if self._fused_failed:
+            return None
+        if self._fused_runner is None:
+            terms = self.cost_model.batch_cost_terms_fn(self.problem, self.arch)
+            lb_builder = self.cost_model.batch_admit_core_builder(
+                self.problem, self.arch
+            )
+            if terms is None or lb_builder is None:
+                self._fused_failed = True
+                return None
+            cache_key = (repr(self.cost_model.store_key_parts()), self.metric)
+            runner = self._ctx.build_fused_runner(
+                lb_builder, terms, self.metric, cache_key=cache_key
+            )
+            if runner is None:
+                self._fused_failed = True
+                return None
+            self._fused_runner = runner
+        return self._fused_runner
+
+    def _admit_batch(self, order, incumbent: float, stacked=None):
         """Admission decisions for the unique non-hit candidates of one
         batch: True = evaluate, False = prune. One vectorized bound program
         when the model provides it (returning the shared StackedBatch for
         the scoring stage); the per-candidate scalar bound otherwise --
         decisions are bit-identical either way."""
-        sb = None
+        sb = stacked
         if (
             self.backend is not None
             and self._lb_batch_fn is not None
             and len(order) >= _BATCH_MIN
         ):
             sigs = [self.signature(cand) for _key, cand in order]
-            sb = self._ctx.stacked_batch(sigs)
+            if sb is None:
+                sb = self._ctx.stacked_batch(sigs)
             lb = self._lb_batch_fn(sigs, backend=self.backend, stacked=sb)
             if lb is not None:
                 scal = self._scalarize_batch(*lb)

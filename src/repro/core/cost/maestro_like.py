@@ -30,6 +30,7 @@ from repro.core.cost.analysis import (
     analyze,
     batch_hierarchical_energy,
     boundary_bytes_per_instance,
+    exact_divisor,
     get_context,
     hierarchical_lower_bound,
 )
@@ -62,8 +63,108 @@ class MaestroLikeModel(CostModel):
     def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
         return get_context(problem, arch).lower_bound_batch
 
+    def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch)._make_lb_core
+
     def store_key_parts(self):
         return (self.name, self.etab)
+
+    def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
+        """Array-program twin of ``evaluate_signature``'s latency/energy
+        accumulation (double-buffered schedule + startup + NoC delivery
+        term): same float-op order per row with numpy or jax.numpy. See
+        ``CostModel.batch_cost_terms_fn``."""
+        if not self.conformable(problem):
+            return None
+        ctx = get_context(problem, arch)
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        spaces = problem.data_spaces
+        num_pes = ctx.num_pes
+        hop = self.etab.noc_hop_pj_byte
+
+        def terms(bt, xp):
+            cc = bt.compute_cycles
+            # par is guarded too: utilization must match the scalar path's
+            # exact-int parallelism bit for bit
+            mx = xp.maximum(
+                xp.maximum(xp.max(cc), xp.max(bt.total_trips)), xp.max(bt.par)
+            )
+            latency = cc
+            startup = xp.zeros_like(cc)
+            extras = {"compute_cycles": cc}
+            for pos, i in enumerate(real_levels):
+                if i == 0:
+                    continue
+                cl = clusters[i]
+                if math.isinf(cl.fill_bandwidth):
+                    continue
+                total_fill = xp.zeros_like(cc)
+                tile_bytes = xp.zeros_like(cc)
+                for k, ds in enumerate(spaces):
+                    r = bt.rows[k]
+                    t = (r.fills[:, pos] + r.drains[:, pos]) * ds.word_bytes
+                    mx = xp.maximum(mx, xp.max(t))
+                    total_fill = total_fill + t
+                    tile_bytes = tile_bytes + r.foot[:, pos] * ds.word_bytes
+                mx = xp.maximum(mx, xp.max(tile_bytes))
+                valid = total_fill > 0
+                bw = exact_divisor(xp, cl.fill_bandwidth)
+                fill_cycles = total_fill * freq / bw
+                startup = startup + xp.where(
+                    valid, tile_bytes * freq / bw, 0.0
+                )
+                extras[f"fill_cycles::{i}"] = fill_cycles
+                extras[f"fill_valid::{i}"] = valid
+                latency = xp.where(valid, xp.maximum(latency, fill_cycles), latency)
+            latency = latency + startup
+            energy, noc_energy, _mac, e_mx = batch_hierarchical_energy(
+                ctx, arch, problem, bt, hop_pj_byte=hop, xp=xp
+            )
+            mx = xp.maximum(mx, e_mx)
+            energy = energy + noc_energy
+            extras["startup_cycles"] = startup
+            extras["noc_energy_pj"] = noc_energy
+            util = bt.par / exact_divisor(xp, num_pes)
+            return latency, energy, util, mx, extras
+
+        return terms
+
+    def costs_from_batch(
+        self, problem, arch, latency, energy, util, extras, indices=None
+    ):
+        ctx = get_context(problem, arch)
+        clusters = arch.clusters
+        freq = arch.frequency_hz
+        cc = extras["compute_cycles"]
+        fills = [
+            (clusters[i].name, extras[f"fill_cycles::{i}"], extras[f"fill_valid::{i}"])
+            for i in ctx.real_levels
+            if f"fill_cycles::{i}" in extras
+        ]
+        startup = extras["startup_cycles"]
+        noc = extras["noc_energy_pj"]
+        rows = range(latency.shape[0]) if indices is None else indices
+        out = []
+        for b in rows:
+            breakdown = {"compute_cycles": float(cc[b])}
+            for name, cyc, valid in fills:
+                if valid[b]:
+                    breakdown[f"fill_cycles_{name}"] = float(cyc[b])
+            breakdown["startup_cycles"] = float(startup[b])
+            breakdown["noc_energy_pj"] = float(noc[b])
+            out.append(
+                Cost(
+                    latency_cycles=float(latency[b]),
+                    energy_pj=float(energy[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown=breakdown,
+                )
+            )
+        return out
 
     def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
         """Fused signature->Cost path: identical math (and float-operation
@@ -153,9 +254,12 @@ class MaestroLikeModel(CostModel):
     ):
         """Vectorized ``evaluate_signature`` over a whole miss-batch (same
         float-operation order per candidate; bit-identical results, with a
-        BATCH_EXACT_LIMIT guard that falls back to the scalar path).
-        ``stacked``/``select`` reuse the engine's admission-stage
-        StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
+        BATCH_EXACT_LIMIT guard that falls back to the scalar path). The
+        latency/energy accumulation is the SAME array program the fused
+        jitted single-dispatch path traces (``batch_cost_terms_fn``), run
+        here with numpy over the admitted subset. ``stacked``/``select``
+        reuse the engine's admission-stage StackedBatch (see
+        ``CostModel.evaluate_signature_batch``)."""
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} only supports operations {_SUPPORTED_OPS}, "
@@ -167,70 +271,11 @@ class MaestroLikeModel(CostModel):
         )
         if bt is None:
             return None
-        freq = arch.frequency_hz
-        clusters = arch.clusters
-        real_levels = ctx.real_levels
-        spaces = problem.data_spaces
-        cc = bt.compute_cycles
-        B = cc.shape[0]
-        # par is guarded too: utilization must match the scalar path's
-        # exact-int parallelism bit for bit
-        mx = max(float(cc.max()), float(bt.total_trips.max()), float(bt.par.max()))
-
-        latency = cc.copy()
-        startup = np.zeros(B)
-        fill_levels = {}  # level -> (fill_cycles[B], valid[B])
-        for pos, i in enumerate(real_levels):
-            if i == 0:
-                continue
-            cl = clusters[i]
-            if math.isinf(cl.fill_bandwidth):
-                continue
-            total_fill = np.zeros(B)
-            tile_bytes = np.zeros(B)
-            for k, ds in enumerate(spaces):
-                r = bt.rows[k]
-                t = (r.fills[:, pos] + r.drains[:, pos]) * ds.word_bytes
-                mx = max(mx, float(t.max()))
-                total_fill = total_fill + t
-                tb = r.foot[:, pos] * ds.word_bytes
-                tile_bytes = tile_bytes + tb
-            mx = max(mx, float(tile_bytes.max()))
-            valid = total_fill > 0
-            fill_cycles = total_fill * freq / cl.fill_bandwidth
-            startup = startup + np.where(valid, tile_bytes * freq / cl.fill_bandwidth, 0.0)
-            fill_levels[i] = (fill_cycles, valid)
-            latency = np.where(valid, np.maximum(latency, fill_cycles), latency)
-        latency = latency + startup
-
-        energy, noc_energy, _mac_term, e_mx = batch_hierarchical_energy(
-            ctx, arch, problem, bt, hop_pj_byte=self.etab.noc_hop_pj_byte
-        )
-        mx = max(mx, e_mx)
-        energy = energy + noc_energy
-
-        if not (mx < BATCH_EXACT_LIMIT):
+        terms = self.batch_cost_terms_fn(problem, arch)
+        latency, energy, util, mx, extras = terms(bt, np)
+        if not (float(mx) < BATCH_EXACT_LIMIT):
             return None  # exactness not guaranteed: use the scalar path
-        util = bt.par / ctx.num_pes
-        out = []
-        for b in range(B):
-            breakdown = {"compute_cycles": float(cc[b])}
-            for i, (cyc, valid) in fill_levels.items():
-                if valid[b]:
-                    breakdown[f"fill_cycles_{clusters[i].name}"] = float(cyc[b])
-            breakdown["startup_cycles"] = float(startup[b])
-            breakdown["noc_energy_pj"] = float(noc_energy[b])
-            out.append(
-                Cost(
-                    latency_cycles=float(latency[b]),
-                    energy_pj=float(energy[b]),
-                    utilization=float(util[b]),
-                    macs=problem.macs,
-                    frequency_hz=freq,
-                    breakdown=breakdown,
-                )
-            )
-        return out
+        return self.costs_from_batch(problem, arch, latency, energy, util, extras)
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):

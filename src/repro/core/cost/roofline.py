@@ -33,6 +33,7 @@ from repro.core.cost.analysis import (
     analyze,
     batch_projection_footprint,
     boundary_bytes_per_instance,
+    exact_divisor,
     get_context,
 )
 from repro.core.cost.base import Cost, CostModel
@@ -158,11 +159,11 @@ class TPURooflineModel(CostModel):
         energy = problem.macs * arch.clusters[-1].mac_energy
         return cycles, energy
 
-    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
-        """Vectorized ``lower_bound``: one array program reproduces the
-        scalar bound (perfect chip scaling + compulsory VMEM traffic) for
-        a whole stacked batch, bit-identically -- or returns None beyond
-        the float64-exact range so the engine falls back per candidate."""
+    def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        """Traceable form of the roofline admission bound (perfect chip
+        scaling + compulsory VMEM traffic): an ``(xp, lax=None) -> core``
+        builder whose core reproduces ``lower_bound`` per row bit-for-bit
+        with numpy or inside the fused jitted program."""
         ctx = get_context(problem, arch)
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
         hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
@@ -177,6 +178,35 @@ class TPURooflineModel(CostModel):
         energy_const = problem.macs * arch.clusters[-1].mac_energy
         axes_info = ctx.ds_projection_axes
 
+        def build(xp, lax=None):
+            def core(tt, st, perm):
+                B = tt.shape[0]
+                mx = xp.zeros(())
+                memory_s = xp.zeros(B, dtype=xp.float64)
+                if vmem_real:
+                    ttf = xp.maximum(tt[:, vmem_level, :], 1).astype(xp.float64)
+                    total = xp.zeros(B, dtype=xp.float64)
+                    for wb, axes, _rel in axes_info:
+                        t = batch_projection_footprint(axes, ttf, xp) * wb
+                        mx = xp.maximum(mx, xp.max(t))
+                        total = total + t
+                    memory_s = total / exact_divisor(xp, hbm_bw)
+                cycles = xp.maximum(compute_s, memory_s) * freq
+                return cycles, xp.full(B, energy_const, dtype=xp.float64), mx
+
+            return core
+
+        return build
+
+    def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        """Vectorized ``lower_bound``: one array program reproduces the
+        scalar bound (perfect chip scaling + compulsory VMEM traffic) for
+        a whole stacked batch, bit-identically -- or returns None beyond
+        the float64-exact range so the engine falls back per candidate.
+        Runs the same core the fused jitted path traces, with numpy."""
+        ctx = get_context(problem, arch)
+        core = self.batch_admit_core_builder(problem, arch)(np)
+
         def lb_batch(sigs=None, backend: str = "numpy", stacked=None):
             sb = stacked
             if sb is None:
@@ -185,23 +215,145 @@ class TPURooflineModel(CostModel):
                 sb = ctx.stacked_batch(sigs)
             if sb.size == 0:
                 return None
-            B = sb.size
-            memory_s = np.zeros(B)
-            mx = 0.0
-            if vmem_real:
-                ttf = np.maximum(sb.tt[:, vmem_level, :], 1).astype(np.float64)
-                total = np.zeros(B)
-                for wb, axes, _rel in axes_info:
-                    t = batch_projection_footprint(axes, ttf) * wb
-                    mx = max(mx, float(t.max()))
-                    total = total + t
-                memory_s = total / hbm_bw
-            if not (mx < BATCH_EXACT_LIMIT):
+            cycles, energy, mx = core(sb.tt, sb.st, sb.perm)
+            if not (float(mx) < BATCH_EXACT_LIMIT):
                 return None
-            cycles = np.maximum(compute_s, memory_s) * freq
-            return cycles, np.full(B, energy_const)
+            return cycles, energy
 
         return lb_batch
+
+    def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
+        """Array-program twin of ``evaluate``'s three-term roofline: VMEM
+        boundary traffic from the shared batch analysis, chip utilization
+        and collective terms from the stacked fan/tile matrices. Same
+        float-operation order per row with numpy or jax.numpy. See
+        ``CostModel.batch_cost_terms_fn``."""
+        ctx = get_context(problem, arch)
+        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
+        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
+        link_bw = float(arch.attrs.get("ici_link_bw", TPU_V5E["ici_link_bw"]))
+        freq = arch.frequency_hz
+        mac_term = problem.macs * arch.clusters[-1].mac_energy
+        num_pes = max(1, arch.num_pes)
+        chips = 1
+        mesh_levels = []
+        for i, cl in enumerate(arch.clusters):
+            if cl.dimension in MESH_AXES and cl.fanout > 1:
+                chips *= cl.fanout
+                mesh_levels.append(i)
+        vmem_level = arch.n_levels - 1
+        vmem_real = vmem_level in ctx.real_levels
+        pos_v = ctx.real_levels.index(vmem_level) if vmem_real else -1
+        red = set(problem.reduction_dims())
+        red_idx = np.asarray(
+            [j for j, d in enumerate(ctx.dims) if d in red], dtype=np.int64
+        )
+        axes_info = ctx.ds_projection_axes
+        ds_out = [ds.is_output for ds in problem.data_spaces]
+        word_bytes = [ds.word_bytes for ds in problem.data_spaces]
+
+        def terms(bt, xp):
+            B = bt.compute_cycles.shape[0]
+            # par is guarded too: utilization must match the scalar path's
+            # exact-int parallelism bit for bit
+            mx = xp.maximum(xp.max(bt.total_trips), xp.max(bt.par))
+
+            fansf = bt.fans.astype(xp.float64)
+            lvl_par = xp.prod(fansf, axis=2)  # [B, n_levels]
+            used_chips = xp.ones(B)
+            for i in mesh_levels:
+                if i > 0:
+                    used_chips = used_chips * lvl_par[:, i - 1]
+            used_chips = xp.maximum(1.0, xp.minimum(float(chips), used_chips))
+            flops_per_chip = 2.0 * problem.macs / used_chips
+            compute_s = flops_per_chip / exact_divisor(xp, peak)
+
+            hbm_bytes = xp.zeros(B)
+            if vmem_real:
+                for k in range(len(axes_info)):
+                    r = bt.rows[k]
+                    t = (r.fills[:, pos_v] + r.drains[:, pos_v]) * word_bytes[k]
+                    mx = xp.maximum(mx, xp.max(t))
+                    hbm_bytes = hbm_bytes + t
+            memory_s = hbm_bytes / exact_divisor(xp, hbm_bw)
+
+            coll_bytes = xp.zeros(B)
+            for i in mesh_levels:
+                lvl = i - 1  # mapping level distributing over this mesh axis
+                if lvl < 0:
+                    continue
+                f = bt.fans[:, lvl, :]
+                n_arr = lvl_par[:, lvl]
+                has_split = n_arr > 1
+                split_red = (
+                    xp.any(f[:, red_idx] > 1, axis=1)
+                    if red_idx.size
+                    else xp.zeros(B, dtype=bool)
+                )
+                stf = bt.st[:, lvl, :].astype(xp.float64)
+                for k, (wb, axes, rel_idx) in enumerate(axes_info):
+                    shard = xp.ones(B)
+                    for ax in axes:
+                        span = xp.ones(B)
+                        for coeff, j in ax:
+                            span = span + coeff * (stf[:, j] - 1.0)
+                        shard = shard * span
+                    mx = xp.maximum(mx, xp.max(shard))
+                    if ds_out[k]:
+                        cond = has_split & split_red
+                        term = 2.0 * (n_arr - 1.0) / n_arr * shard * wb
+                    else:
+                        split_rel = (
+                            xp.any(f[:, np.asarray(rel_idx, dtype=np.int64)] > 1, axis=1)
+                            if rel_idx
+                            else xp.zeros(B, dtype=bool)
+                        )
+                        cond = has_split & ~split_rel
+                        term = (n_arr - 1.0) / n_arr * shard * wb
+                    coll_bytes = coll_bytes + xp.where(cond, term, 0.0)
+            collective_s = coll_bytes / exact_divisor(xp, link_bw)
+
+            latency_s = xp.maximum(compute_s, xp.maximum(memory_s, collective_s))
+            energy_pj = (
+                hbm_bytes * used_chips * 7.0 + coll_bytes * used_chips * 2.0 + mac_term
+            )
+            util = bt.par / exact_divisor(xp, num_pes)
+            bound_idx = xp.argmax(
+                xp.stack([compute_s, memory_s, collective_s]), axis=0
+            )
+            extras = {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "bound": bound_idx,
+            }
+            return latency_s * freq, energy_pj, util, mx, extras
+
+        return terms
+
+    def costs_from_batch(
+        self, problem, arch, latency, energy, util, extras, indices=None
+    ):
+        freq = arch.frequency_hz
+        rows = range(latency.shape[0]) if indices is None else indices
+        out = []
+        for b in rows:
+            out.append(
+                Cost(
+                    latency_cycles=float(latency[b]),
+                    energy_pj=float(energy[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown={
+                        "compute_s": float(extras["compute_s"][b]),
+                        "memory_s": float(extras["memory_s"][b]),
+                        "collective_s": float(extras["collective_s"][b]),
+                        "bound": float(extras["bound"][b]),
+                    },
+                )
+            )
+        return out
 
     def evaluate_signature_batch(
         self,
@@ -212,12 +364,12 @@ class TPURooflineModel(CostModel):
         stacked=None,
         select=None,
     ):
-        """Vectorized ``evaluate`` over a miss-batch of signatures: VMEM
-        boundary traffic from the shared batch analysis, chip utilization
-        and collective terms from the stacked fan/tile matrices. Same
-        float-operation order per candidate as ``evaluate`` (bit-identical;
-        BATCH_EXACT_LIMIT guard falls back to the scalar path).
-        ``stacked``/``select`` reuse the engine's admission-stage
+        """Vectorized ``evaluate`` over a miss-batch of signatures: the
+        SAME array program the fused jitted single-dispatch path traces
+        (``batch_cost_terms_fn``), run here with numpy over the admitted
+        subset. Same float-operation order per candidate as ``evaluate``
+        (bit-identical; BATCH_EXACT_LIMIT guard falls back to the scalar
+        path). ``stacked``/``select`` reuse the engine's admission-stage
         StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
         ctx = get_context(problem, arch)
         bt = ctx.signature_traffic_batch(
@@ -225,105 +377,11 @@ class TPURooflineModel(CostModel):
         )
         if bt is None:
             return None
-        peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
-        hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
-        link_bw = float(arch.attrs.get("ici_link_bw", TPU_V5E["ici_link_bw"]))
-        B = bt.compute_cycles.shape[0]
-        # par is guarded too: utilization must match the scalar path's
-        # exact-int parallelism bit for bit
-        mx = max(float(bt.total_trips.max()), float(bt.par.max()))
-
-        chips = 1
-        mesh_levels = []
-        for i, cl in enumerate(arch.clusters):
-            if cl.dimension in MESH_AXES and cl.fanout > 1:
-                chips *= cl.fanout
-                mesh_levels.append(i)
-
-        fansf = bt.fans.astype(np.float64)
-        lvl_par = np.prod(fansf, axis=2)  # [B, n_levels]
-        used_chips = np.ones(B)
-        for i in mesh_levels:
-            if i > 0:
-                used_chips = used_chips * lvl_par[:, i - 1]
-        used_chips = np.maximum(1.0, np.minimum(float(chips), used_chips))
-        flops_per_chip = 2.0 * problem.macs / used_chips
-        compute_s = flops_per_chip / peak
-
-        vmem_level = arch.n_levels - 1
-        hbm_bytes = np.zeros(B)
-        if vmem_level in ctx.real_levels:
-            pos_v = ctx.real_levels.index(vmem_level)
-            for k, ds in enumerate(problem.data_spaces):
-                r = bt.rows[k]
-                t = (r.fills[:, pos_v] + r.drains[:, pos_v]) * ds.word_bytes
-                mx = max(mx, float(t.max()))
-                hbm_bytes = hbm_bytes + t
-        memory_s = hbm_bytes / hbm_bw
-
-        red = set(problem.reduction_dims())
-        red_idx = [j for j, d in enumerate(ctx.dims) if d in red]
-        coll_bytes = np.zeros(B)
-        for i in mesh_levels:
-            lvl = i - 1  # mapping level that distributes over this mesh axis
-            if lvl < 0:
-                continue
-            f = bt.fans[:, lvl, :]
-            n_arr = lvl_par[:, lvl]
-            has_split = n_arr > 1
-            split_red = (
-                (f[:, red_idx] > 1).any(axis=1) if red_idx else np.zeros(B, dtype=bool)
-            )
-            stf = bt.st[:, lvl, :].astype(np.float64)
-            for k, ds in enumerate(problem.data_spaces):
-                wb, axes, rel_idx = ctx.ds_projection_axes[k]
-                shard = np.ones(B)
-                for ax in axes:
-                    span = np.ones(B)
-                    for coeff, j in ax:
-                        span = span + coeff * (stf[:, j] - 1.0)
-                    shard = shard * span
-                mx = max(mx, float(shard.max()))
-                if ds.is_output:
-                    cond = has_split & split_red
-                    term = 2.0 * (n_arr - 1.0) / n_arr * shard * wb
-                else:
-                    split_rel = (
-                        (f[:, list(rel_idx)] > 1).any(axis=1)
-                        if rel_idx
-                        else np.zeros(B, dtype=bool)
-                    )
-                    cond = has_split & ~split_rel
-                    term = (n_arr - 1.0) / n_arr * shard * wb
-                coll_bytes = coll_bytes + np.where(cond, term, 0.0)
-        collective_s = coll_bytes / link_bw
-
-        if not (mx < BATCH_EXACT_LIMIT):
+        terms = self.batch_cost_terms_fn(problem, arch)
+        latency, energy, util, mx, extras = terms(bt, np)
+        if not (float(mx) < BATCH_EXACT_LIMIT):
             return None  # exactness not guaranteed: use the scalar path
-        latency_s = np.maximum(compute_s, np.maximum(memory_s, collective_s))
-        freq = arch.frequency_hz
-        mac_term = problem.macs * arch.clusters[-1].mac_energy
-        energy_pj = hbm_bytes * used_chips * 7.0 + coll_bytes * used_chips * 2.0 + mac_term
-        util = bt.par / max(1, arch.num_pes)
-        bound_idx = np.argmax(np.stack([compute_s, memory_s, collective_s]), axis=0)
-        out = []
-        for b in range(B):
-            out.append(
-                Cost(
-                    latency_cycles=float(latency_s[b] * freq),
-                    energy_pj=float(energy_pj[b]),
-                    utilization=float(util[b]),
-                    macs=problem.macs,
-                    frequency_hz=freq,
-                    breakdown={
-                        "compute_s": float(compute_s[b]),
-                        "memory_s": float(memory_s[b]),
-                        "collective_s": float(collective_s[b]),
-                        "bound": float(bound_idx[b]),
-                    },
-                )
-            )
-        return out
+        return self.costs_from_batch(problem, arch, latency, energy, util, extras)
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         prof = analyze(problem, mapping, arch)

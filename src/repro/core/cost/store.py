@@ -29,6 +29,17 @@ Correctness: a store hit returns the exact Cost an evaluation would have
 produced (same engine, deterministic models), so search results are
 unchanged -- only the ``pruned``/``analyzed`` counter split can shift,
 because a stored candidate is served before the admission filter runs.
+``SearchResult.considered`` (candidates submitted by the mapper) is the
+warm/cold-INVARIANT total to compare runs by; throughput reporting
+excludes store-served candidates from its denominator for the same
+reason (see ``benchmarks/mappers_bench.py``).
+
+Eviction: with ``max_entries_per_space`` set, each space is an LRU --
+``get`` refreshes recency, the in-memory tier evicts past the cap, and
+``flush`` compacts the disk tier to the cap AFTER the concurrent-writer
+union (prior-file entries rank least recent), so the newest entries
+survive and another writer's fresh results are never silently dropped
+below the cap.
 """
 
 from __future__ import annotations
@@ -36,10 +47,14 @@ from __future__ import annotations
 import contextlib
 import hashlib
 import json
+import math
 import os
 import uuid
+from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, Optional
+
+import numpy as np
 
 try:
     import fcntl
@@ -55,18 +70,45 @@ from repro.core.problem import Problem
 STORE_VERSION = 1
 
 
+def _canon_num(v):
+    """Canonical digest form for a (possibly numpy) numeric attribute.
+
+    ``repr`` forks the key between equal values of different types --
+    ``repr(np.float64(2.0))`` is ``'np.float64(2.0)'`` on numpy>=2 while
+    ``repr(2.0)`` is ``'2.0'`` -- silently orphaning disk entries between
+    writers that load the same architecture through different code paths.
+    Numerics are therefore collapsed to plain Python ints/floats before
+    the JSON digest, with explicit ``'inf'``/``'-inf'``/``'nan'`` string
+    encodings (JSON has no literal for them). Non-numeric values keep
+    their repr.
+    """
+    if isinstance(v, bool):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        f = float(v)
+        if math.isinf(f):
+            return "inf" if f > 0 else "-inf"
+        if math.isnan(f):
+            return "nan"
+        return f
+    return repr(v)
+
+
 def _canon_problem(problem: Problem) -> dict:
     return {
-        "dims": list(problem.dims.items()),
+        "dims": [(d, _canon_num(s)) for d, s in problem.dims.items()],
         "operation": problem.operation,
         "unit_op": problem.unit_op,
         "data_spaces": [
             {
                 "name": ds.name,
                 "out": ds.is_output,
-                "wb": ds.word_bytes,
+                "wb": _canon_num(ds.word_bytes),
                 "proj": [
-                    [(t.coeff, t.dim) for t in expr.terms] for expr in ds.projection
+                    [(_canon_num(t.coeff), t.dim) for t in expr.terms]
+                    for expr in ds.projection
                 ],
             }
             for ds in problem.data_spaces
@@ -76,19 +118,19 @@ def _canon_problem(problem: Problem) -> dict:
 
 def _canon_arch(arch: Architecture) -> dict:
     return {
-        "freq": arch.frequency_hz,
-        "attrs": sorted((k, repr(v)) for k, v in arch.attrs.items()),
+        "freq": _canon_num(arch.frequency_hz),
+        "attrs": sorted((k, _canon_num(v)) for k, v in arch.attrs.items()),
         "clusters": [
             [
                 c.name,  # appears in Cost breakdown keys
-                c.fanout,
+                _canon_num(c.fanout),
                 c.dimension,
-                c.memory_bytes,
-                repr(c.fill_bandwidth),  # repr: json keeps inf stable
-                c.read_energy,
-                c.write_energy,
-                c.macs_per_cycle,
-                c.mac_energy,
+                _canon_num(c.memory_bytes),
+                _canon_num(c.fill_bandwidth),
+                _canon_num(c.read_energy),
+                _canon_num(c.write_energy),
+                _canon_num(c.macs_per_cycle),
+                _canon_num(c.mac_energy),
             ]
             for c in arch.clusters
         ],
@@ -152,11 +194,26 @@ class ResultStore:
     it to ``union_opt(result_store=...)``); the engine probes it on memo
     misses and feeds every fresh evaluation back. Thread-compatibility
     matches the engine's (single-threaded use per store).
+
+    ``max_entries_per_space`` caps both tiers per space key: the
+    in-memory tier evicts least-recently-used entries as it grows past
+    the cap (``get`` refreshes recency), and :meth:`flush` compacts the
+    disk tier to the cap AFTER unioning with the on-disk file -- prior
+    entries another writer flushed rank as least recent, then this
+    store's entries in LRU order, and the newest ``cap`` survive. With
+    the default (None) both tiers grow without bound, as before.
     """
 
-    def __init__(self, path: Optional[str] = None) -> None:
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        max_entries_per_space: Optional[int] = None,
+    ) -> None:
         self.path = Path(path) if path else None
-        self._spaces: Dict[str, Dict[object, Cost]] = {}
+        self.max_entries_per_space = (
+            int(max_entries_per_space) if max_entries_per_space else None
+        )
+        self._spaces: Dict[str, "OrderedDict[object, Cost]"] = {}
         self._loaded: set = set()  # space keys whose disk tier was read
         self._dirty: set = set()
         self.hits = 0
@@ -164,6 +221,7 @@ class ResultStore:
         self.puts = 0
         self.disk_loaded = 0  # entries brought in from disk
         self.corrupt = 0  # unreadable or version-mismatched files skipped
+        self.evicted = 0  # entries dropped by the per-space LRU cap
 
     # -------------------------------------------------------------- #
     def space_key(
@@ -171,10 +229,17 @@ class ResultStore:
     ) -> str:
         return space_key(cost_model, problem, arch)
 
-    def _space(self, skey: str) -> Dict[object, Cost]:
+    def _trim(self, d: "OrderedDict[object, Cost]") -> None:
+        cap = self.max_entries_per_space
+        if cap is not None:
+            while len(d) > cap:
+                d.popitem(last=False)  # least recently used first
+                self.evicted += 1
+
+    def _space(self, skey: str) -> "OrderedDict[object, Cost]":
         d = self._spaces.get(skey)
         if d is None:
-            d = self._spaces[skey] = {}
+            d = self._spaces[skey] = OrderedDict()
         if self.path is not None and skey not in self._loaded:
             self._loaded.add(skey)
             f = self.path / f"{skey}.json"
@@ -189,6 +254,7 @@ class ResultStore:
                         if sig not in d:
                             d[sig] = _cost_from_record(rec)
                             self.disk_loaded += 1
+                    self._trim(d)
                 else:
                     self.corrupt += 1  # stale version: discard, rewrite later
             except FileNotFoundError:
@@ -198,10 +264,12 @@ class ResultStore:
         return d
 
     def get(self, skey: str, sig) -> Optional[Cost]:
-        c = self._space(skey).get(sig)
+        d = self._space(skey)
+        c = d.get(sig)
         if c is None:
             self.misses += 1
         else:
+            d.move_to_end(sig)  # LRU touch
             self.hits += 1
         return c
 
@@ -211,6 +279,7 @@ class ResultStore:
             d[sig] = cost
             self.puts += 1
             self._dirty.add(skey)
+            self._trim(d)
 
     # -------------------------------------------------------------- #
     @contextlib.contextmanager
@@ -239,16 +308,25 @@ class ResultStore:
         with the in-memory view right before the atomic replace, so
         entries another process flushed since our lazy load are preserved
         (identical keys are identical Costs by construction, so merge
-        order is immaterial)."""
+        order is immaterial).
+
+        With ``max_entries_per_space`` set, the merged union is LRU-
+        compacted to the cap before the replace: prior-file entries not
+        in memory rank least recent (in their file order, i.e. the other
+        writer's LRU order), this store's entries follow in local LRU
+        order, and only the newest ``cap`` survive -- so eviction composes
+        with the union guarantee instead of clobbering it."""
         if self.path is None:
             self._dirty.clear()
             return 0
         self.path.mkdir(parents=True, exist_ok=True)
+        cap = self.max_entries_per_space
         written = 0
         for skey in sorted(self._dirty):
             d = self._spaces[skey]
-            costs = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
+            mem = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
             with self._store_lock():
+                merged: "OrderedDict[str, object]" = OrderedDict()
                 try:
                     prior = json.loads((self.path / f"{skey}.json").read_text())
                     if (
@@ -256,16 +334,23 @@ class ResultStore:
                         and prior.get("version") == STORE_VERSION
                     ):
                         for key, rec in prior["costs"].items():
-                            costs.setdefault(key, rec)
+                            if key not in mem:
+                                merged[key] = rec
                 except Exception:
                     pass  # absent/corrupt prior file: nothing to merge
-                payload = {"version": STORE_VERSION, "costs": costs}
+                merged.update(mem)  # in-memory LRU order, most recent last
+                if cap is not None and len(merged) > cap:
+                    drop = len(merged) - cap
+                    for key in list(merged)[:drop]:
+                        del merged[key]
+                        self.evicted += 1
+                payload = {"version": STORE_VERSION, "costs": dict(merged)}
                 # writer-unique tmp name: scratch files are never shared
                 # even if a non-POSIX platform skipped the lock
                 tmp = self.path / f".{skey}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
                 tmp.write_text(json.dumps(payload, separators=(",", ":")))
                 tmp.replace(self.path / f"{skey}.json")
-            written += len(costs)
+            written += len(merged)
         self._dirty.clear()
         return written
 
@@ -276,6 +361,7 @@ class ResultStore:
             "puts": self.puts,
             "disk_loaded": self.disk_loaded,
             "corrupt": self.corrupt,
+            "evicted": self.evicted,
             "spaces": len(self._spaces),
             "entries": sum(len(d) for d in self._spaces.values()),
         }

@@ -22,6 +22,7 @@ from repro.core.cost.analysis import (
     analyze,
     batch_hierarchical_energy,
     boundary_bytes_per_instance,
+    exact_divisor,
     get_context,
     hierarchical_lower_bound,
 )
@@ -54,8 +55,96 @@ class TimeloopLikeModel(CostModel):
     def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
         return get_context(problem, arch).lower_bound_batch
 
+    def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        return get_context(problem, arch)._make_lb_core
+
     def store_key_parts(self):
         return (self.name, self.unit_op)
+
+    def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
+        """Array-program twin of ``evaluate_signature``'s latency/energy
+        accumulation: same float-operation order per row, runnable with
+        numpy (host scoring) or jax.numpy (inside the fused jitted
+        core). See ``CostModel.batch_cost_terms_fn``."""
+        if not self.conformable(problem):
+            return None
+        ctx = get_context(problem, arch)
+        freq = arch.frequency_hz
+        clusters = arch.clusters
+        real_levels = ctx.real_levels
+        spaces = problem.data_spaces
+        num_pes = ctx.num_pes
+
+        def terms(bt, xp):
+            cc = bt.compute_cycles
+            # par is guarded too: utilization must match the scalar path's
+            # exact-int parallelism bit for bit
+            mx = xp.maximum(
+                xp.maximum(xp.max(cc), xp.max(bt.total_trips)), xp.max(bt.par)
+            )
+            worst = xp.zeros_like(cc)
+            extras = {"compute_cycles": cc}
+            for pos, i in enumerate(real_levels):
+                cl = clusters[i]
+                # the scalar path computes bts before skipping these levels
+                # but never uses it; skipping first is value-identical (the
+                # fills/drains factors are exactness-guarded in the energy
+                # walk below)
+                if i == 0 or math.isinf(cl.fill_bandwidth):
+                    continue
+                bts = xp.zeros_like(cc)
+                for k, ds in enumerate(spaces):
+                    t = (
+                        bt.rows[k].fills[:, pos] + bt.rows[k].drains[:, pos]
+                    ) * ds.word_bytes
+                    mx = xp.maximum(mx, xp.max(t))
+                    bts = bts + t
+                cyc = bts * freq / exact_divisor(xp, cl.fill_bandwidth)
+                extras[f"bw_cycles::{i}"] = cyc
+                extras[f"bw_bytes::{i}"] = bts
+                worst = xp.maximum(worst, xp.where(bts > 0, cyc, 0.0))
+            latency = xp.maximum(cc, worst)
+            energy, _noc, _mac, e_mx = batch_hierarchical_energy(
+                ctx, arch, problem, bt, xp=xp
+            )
+            mx = xp.maximum(mx, e_mx)
+            util = bt.par / exact_divisor(xp, num_pes)
+            return latency, energy, util, mx, extras
+
+        return terms
+
+    def costs_from_batch(
+        self, problem, arch, latency, energy, util, extras, indices=None
+    ):
+        ctx = get_context(problem, arch)
+        clusters = arch.clusters
+        freq = arch.frequency_hz
+        mac_term = problem.macs * clusters[-1].mac_energy
+        cc = extras["compute_cycles"]
+        bw = [
+            (clusters[i].name, extras[f"bw_cycles::{i}"], extras[f"bw_bytes::{i}"])
+            for i in ctx.real_levels
+            if f"bw_cycles::{i}" in extras
+        ]
+        rows = range(latency.shape[0]) if indices is None else indices
+        out = []
+        for b in rows:
+            breakdown = {"compute_cycles": float(cc[b])}
+            for name, cyc, bts in bw:
+                if bts[b] > 0:
+                    breakdown[f"bw_cycles_{name}"] = float(cyc[b])
+            breakdown["energy_mac_pj"] = mac_term
+            out.append(
+                Cost(
+                    latency_cycles=float(latency[b]),
+                    energy_pj=float(energy[b]),
+                    utilization=float(util[b]),
+                    macs=problem.macs,
+                    frequency_hz=freq,
+                    breakdown=breakdown,
+                )
+            )
+        return out
 
     def evaluate_signature(self, problem: Problem, arch: Architecture, sig):
         """Fused signature->Cost path: identical math (and float-operation
@@ -132,8 +221,11 @@ class TimeloopLikeModel(CostModel):
         """Vectorized ``evaluate_signature`` over a whole miss-batch: same
         float-operation order per candidate, so results are bit-identical
         whenever every integer-valued product stays float64-exact (checked
-        against BATCH_EXACT_LIMIT; returns None otherwise). ``stacked``/
-        ``select`` reuse the engine's admission-stage StackedBatch (see
+        against BATCH_EXACT_LIMIT; returns None otherwise). The latency/
+        energy accumulation is the SAME array program the fused jitted
+        single-dispatch path traces (``batch_cost_terms_fn``), run here
+        with numpy over the admitted subset. ``stacked``/``select`` reuse
+        the engine's admission-stage StackedBatch (see
         ``CostModel.evaluate_signature_batch``)."""
         if not self.conformable(problem):
             raise ValueError(
@@ -146,59 +238,11 @@ class TimeloopLikeModel(CostModel):
         )
         if bt is None:
             return None
-        freq = arch.frequency_hz
-        clusters = arch.clusters
-        real_levels = ctx.real_levels
-        spaces = problem.data_spaces
-        cc = bt.compute_cycles
-        B = cc.shape[0]
-        # par is guarded too: utilization must match the scalar path's
-        # exact-int parallelism bit for bit
-        mx = max(float(cc.max()), float(bt.total_trips.max()), float(bt.par.max()))
-
-        worst = np.zeros(B)
-        bw_levels = {}  # level -> (cycles[B], bts[B])
-        for pos, i in enumerate(real_levels):
-            cl = clusters[i]
-            # the scalar path computes bts before skipping these levels but
-            # never uses it; skipping first is value-identical (the fills/
-            # drains factors are exactness-guarded in the energy loop below)
-            if i == 0 or math.isinf(cl.fill_bandwidth):
-                continue
-            bts = np.zeros(B)
-            for k, ds in enumerate(spaces):
-                t = (bt.rows[k].fills[:, pos] + bt.rows[k].drains[:, pos]) * ds.word_bytes
-                mx = max(mx, float(t.max()))
-                bts = bts + t
-            cyc = bts * freq / cl.fill_bandwidth
-            bw_levels[i] = (cyc, bts)
-            worst = np.maximum(worst, np.where(bts > 0, cyc, 0.0))
-        latency = np.maximum(cc, worst)
-
-        energy, _noc, mac_term, e_mx = batch_hierarchical_energy(ctx, arch, problem, bt)
-        mx = max(mx, e_mx)
-
-        if not (mx < BATCH_EXACT_LIMIT):
+        terms = self.batch_cost_terms_fn(problem, arch)
+        latency, energy, util, mx, extras = terms(bt, np)
+        if not (float(mx) < BATCH_EXACT_LIMIT):
             return None  # exactness not guaranteed: use the scalar path
-        util = bt.par / ctx.num_pes
-        out = []
-        for b in range(B):
-            breakdown = {"compute_cycles": float(cc[b])}
-            for i, (cyc, bts) in bw_levels.items():
-                if bts[b] > 0:
-                    breakdown[f"bw_cycles_{clusters[i].name}"] = float(cyc[b])
-            breakdown["energy_mac_pj"] = mac_term
-            out.append(
-                Cost(
-                    latency_cycles=float(latency[b]),
-                    energy_pj=float(energy[b]),
-                    utilization=float(util[b]),
-                    macs=problem.macs,
-                    frequency_hz=freq,
-                    breakdown=breakdown,
-                )
-            )
-        return out
+        return self.costs_from_batch(problem, arch, latency, energy, util, extras)
 
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         if not self.conformable(problem):

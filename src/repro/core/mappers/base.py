@@ -36,6 +36,14 @@ class SearchResult:
     pruned: int = 0
     analyzed: int = 0  # full cost-model analyses (cache misses)
     store_hits: int = 0  # served by the cross-search ResultStore
+    # candidate instances the mapper submitted to the engine, before dedup
+    # and regardless of how they were served (analysis / memo / store /
+    # bound rejection). A store hit turns a would-be pruned or analyzed
+    # candidate into a served one -- the evaluated/pruned SPLIT shifts
+    # between warm and cold runs -- but the submitted stream is identical,
+    # so this total is warm/cold INVARIANT.
+    considered: int = 0
+    fused_dispatches: int = 0  # miss-batches served by one jitted dispatch
     admit_s: float = 0.0  # engine wall-clock in the admission (bound) stage
     score_s: float = 0.0  # engine wall-clock scoring admitted misses
 
@@ -49,8 +57,21 @@ class SearchResult:
         return self.evaluated + self.pruned
 
     @property
+    def scored(self) -> int:
+        """Throughput numerator: the warm/cold-invariant ``considered``
+        total MINUS store-served candidates (a store hit costs a dict
+        probe, not an evaluation -- counting it would inflate warm-run
+        rows against cold baselines). Falls back to the classic
+        scored+pruned count for mappers that bypass the engine
+        (``considered == 0``). The single definition both
+        :attr:`evals_per_s` and ``benchmarks/mappers_bench.py`` use."""
+        return (
+            self.considered - self.store_hits if self.considered else self.candidates
+        )
+
+    @property
     def evals_per_s(self) -> float:
-        return self.candidates / self.elapsed_s if self.elapsed_s > 0 else 0.0
+        return self.scored / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
     def stats_dict(self) -> dict:
         """JSON-ready engine-counter summary (figure benchmarks attach this
@@ -63,6 +84,8 @@ class SearchResult:
             "store_hits": self.store_hits,
             "pruned": self.pruned,
             "candidates": self.candidates,
+            "considered": self.considered,
+            "fused_dispatches": self.fused_dispatches,
             "elapsed_s": round(self.elapsed_s, 4),
             "evals_per_s": round(self.evals_per_s, 1),
             "admit_s": round(self.admit_s, 4),
@@ -140,6 +163,8 @@ class _Tracker:
             pruned=stats.pruned if stats else 0,
             analyzed=stats.evaluated if stats else 0,
             store_hits=stats.store_hits if stats else 0,
+            considered=stats.considered if stats else 0,
+            fused_dispatches=stats.fused_dispatches if stats else 0,
             admit_s=stats.admit_s if stats else 0.0,
             score_s=stats.score_s if stats else 0.0,
         )

@@ -5,6 +5,22 @@ spatial-capable levels (maximizing PE utilization, which Fig. 10 of the
 paper shows dominates EDP), then temporal tiles are chosen to saturate
 each level's memory. Hill-climbing refines with the shared mutation
 operator, accepting only improvements.
+
+The climb is chunked through ``EvaluationEngine.evaluate_batch`` so it
+hits the batched admission bound, the shared StackedBatch, and (under
+``engine_backend="jax"``) the single-dispatch fused admit+score program
+-- previously each step went through scalar ``evaluate_admit``. Chunks
+are SPECULATIVE: all ``chunk`` candidates are mutations of the current
+incumbent, results are scanned in order, and the tail past the first
+accepted move is discarded while the RNG is rewound to the state the
+serial walk would have -- so the ACCEPTED-MOVE SEQUENCE (every accepted
+mapping and score, in order) and the final best mapping are identical to
+the one-at-a-time climb for any fixed seed (A/B-asserted in
+``tests/test_mappers.py``). Work counters are NOT part of that contract:
+speculated candidates past an accepted move were evaluated and cached,
+so a later re-draw the serial walk would bound-prune can instead be
+served from cache and offered -- ``SearchResult.evaluated`` and
+trajectory step indices may differ slightly from ``chunk=1``.
 """
 
 from __future__ import annotations
@@ -23,10 +39,25 @@ from repro.core.mapspace import MapSpace
 class HeuristicMapper(Mapper):
     name = "heuristic"
 
-    def __init__(self, climb_steps: int = 300, restarts: int = 3, seed: int = 0) -> None:
+    def __init__(
+        self,
+        climb_steps: int = 300,
+        restarts: int = 3,
+        seed: int = 0,
+        chunk: int = 8,
+        probe: int = 8,
+    ) -> None:
+        """``chunk``: climb steps speculated per ``evaluate_batch`` call
+        (<=1 restores the serial scalar walk -- the A/B reference).
+        ``probe``: the engine-level warm start passed through to
+        ``evaluate_batch`` like random/exhaustive do; the climb always has
+        a finite incumbent (the seed mapping), so it only engages if a
+        cost model ever yields an infinite seed metric."""
         self.climb_steps = climb_steps
         self.restarts = restarts
         self.seed = seed
+        self.chunk = chunk
+        self.probe = probe
 
     # ------------------------------------------------------------------ #
     def _greedy_seed(self, space: MapSpace, rng: random.Random) -> Mapping:
@@ -114,6 +145,7 @@ class HeuristicMapper(Mapper):
         engine = self._mk_engine(space, cost_model, metric, engine)
         rng = random.Random(self.seed)
         tr = self._mk_result(metric, engine)
+        steps_per_restart = self.climb_steps // self.restarts
         for r in range(self.restarts):
             m = self._greedy_seed(space, rng) if r == 0 else space.random_mapping(rng)
             if space.constraints is not None and not space.constraints.ok(
@@ -123,17 +155,56 @@ class HeuristicMapper(Mapper):
             best = engine.evaluate(m)
             tr.offer(m, best)
             best_s = best.metric(metric)
-            for _ in range(self.climb_steps // self.restarts):
-                cand = space.mutate(m, rng)
-                # prune against the LOCAL incumbent: a candidate whose bound
-                # is >= the climb's best can neither be an accepted move nor
-                # improve the global best (global <= local), so the walk is
-                # unchanged vs. evaluating everything.
-                c = engine.evaluate_admit(cand, incumbent=best_s)
-                if c is None:
-                    continue
-                tr.offer(cand, c)
-                s = c.metric(metric)
-                if s < best_s:
-                    m, best, best_s = cand, c, s
+            if self.chunk <= 1:
+                # serial reference walk (exact historical behavior)
+                for _ in range(steps_per_restart):
+                    cand = space.mutate(m, rng)
+                    # prune against the LOCAL incumbent: a candidate whose
+                    # bound is >= the climb's best can neither be an
+                    # accepted move nor improve the global best (global <=
+                    # local), so the walk is unchanged vs. evaluating
+                    # everything.
+                    c = engine.evaluate_admit(cand, incumbent=best_s)
+                    if c is None:
+                        continue
+                    tr.offer(cand, c)
+                    s = c.metric(metric)
+                    if s < best_s:
+                        m, best, best_s = cand, c, s
+                continue
+            steps = 0
+            while steps < steps_per_restart:
+                k = min(self.chunk, steps_per_restart - steps)
+                # Speculate k mutations of the CURRENT incumbent. The RNG
+                # state before each draw is recorded so an accepted move
+                # can rewind to exactly where the serial walk would be
+                # (mutate is deterministic in (mapping, rng state), so the
+                # replayed prefix is byte-identical).
+                states = []
+                cands = []
+                for _ in range(k):
+                    states.append(rng.getstate())
+                    cands.append(space.mutate(m, rng))
+                costs = engine.evaluate_batch(
+                    cands, incumbent=best_s, probe=self.probe
+                )
+                accepted = None
+                for j, (cand, c) in enumerate(zip(cands, costs)):
+                    if c is None:
+                        continue  # bound-pruned: provably not an accepted move
+                    tr.offer(cand, c)
+                    s = c.metric(metric)
+                    if s < best_s:
+                        accepted = j
+                        m, best, best_s = cand, c, s
+                        break
+                if accepted is None:
+                    steps += k
+                else:
+                    # the serial walk would now mutate the NEW incumbent:
+                    # count only the steps up to the accepted move and
+                    # rewind the RNG past it, discarding the speculated tail
+                    steps += accepted + 1
+                    if accepted + 1 < k:
+                        rng.setstate(states[accepted + 1])
         return tr.result()

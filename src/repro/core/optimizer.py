@@ -75,12 +75,21 @@ def union_opt(
     ``engine_backend`` configure the shared :class:`EvaluationEngine` all
     mappers score candidates through (process-pool fan-out, memo-cache
     capacity, lower-bound admission, and the vectorized miss-batch
-    backend: "numpy" default, "jax" for jitted device-resident sweeps,
-    anything else for the per-candidate scalar path). ``result_store`` is
-    an optional persistent cross-search cache shared between calls (see
-    ``repro.core.cost.store.ResultStore``): benchmark sweeps pass one
-    store so identical signatures are scored once across runs; callers
-    own ``flush()``.
+    backend: "numpy" default, anything else for the per-candidate scalar
+    path). ``engine_backend="jax"`` runs the SINGLE-DISPATCH fused
+    pipeline: one jitted program per miss-batch covers stack ->
+    lower-bound -> admit mask -> traffic -> energy on device, returning
+    only per-candidate ``(cycles, energy_pj, util)`` scalars (plus small
+    breakdown arrays) to host, with Cost objects materialized for
+    admitted rows only -- costs, decisions, and counters bit-identical to
+    the numpy and scalar paths. The compiled program is cached on the
+    (problem, arch) analysis context, so repeated ``union_opt`` calls
+    over the same space reuse it. ``result_store`` is an optional
+    persistent cross-search cache shared between calls (see
+    ``repro.core.cost.store.ResultStore``; construct it with
+    ``max_entries_per_space=`` for LRU-capped tiers): benchmark sweeps
+    pass one store so identical signatures are scored once across runs;
+    callers own ``flush()``.
     """
     problem = (
         lower_layer_to_problem(workload) if isinstance(workload, LayerOp) else workload

@@ -2,12 +2,16 @@
 
 The vectorized lower bound must be BIT-identical to the scalar bound for
 every cost model (values, admit/reject decisions, and engine counters),
-the engine-level probe warm start must never change results, and the
-cross-search ResultStore must round-trip Costs exactly, survive corrupt or
-version-mismatched disk files, and leave search outputs unchanged on warm
-runs.
+the single-dispatch fused jax admit+score program must be bit-identical
+to the numpy and scalar paths (costs, decisions, counters) while issuing
+exactly ONE jitted dispatch per miss-batch, the engine-level probe warm
+start must never change results, and the cross-search ResultStore must
+round-trip Costs exactly, survive corrupt or version-mismatched disk
+files, evict LRU entries at its per-space cap, keep concurrent flushes
+lossless up to that cap, and leave search outputs unchanged on warm runs.
 """
 
+import dataclasses
 import json
 import math
 import random
@@ -183,6 +187,94 @@ def test_engine_probe_param_identical_results():
 
 
 # --------------------------------------------------------------------- #
+# Single-dispatch fused admit+score (jax backend)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_fused_single_dispatch_per_miss_batch(model_cls):
+    """Under engine_backend='jax', ONE jitted dispatch covers admit+score
+    for a whole miss-batch (dispatch-count probe on the context), and the
+    resulting Costs/decisions are served without further array programs."""
+    pytest.importorskip("jax")
+    arch = cloud_accelerator()
+    cm = model_cls()
+    ctx = get_context(GEMM, arch)
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(9)
+    batch = [space.random_genome(rng) for _ in range(64)]
+    eng = EvaluationEngine(cm, GEMM, arch, metric="edp", backend="jax")
+    inc = eng.evaluate(batch[0]).metric("edp")
+    before = ctx.jax_dispatches
+    costs = eng.evaluate_batch(batch, incumbent=inc)
+    if ctx._jax_failed:
+        pytest.skip("jax fused core unavailable on this platform")
+    assert ctx.jax_dispatches - before == 1
+    assert eng.stats.fused_dispatches == 1
+    assert any(c is not None for c in costs)
+    # a second batch reuses the jitted program: still one dispatch each
+    batch2 = [space.random_genome(rng) for _ in range(32)]
+    eng.evaluate_batch(batch2, incumbent=inc)
+    assert ctx.jax_dispatches - before == 2
+    assert eng.stats.fused_dispatches == 2
+
+
+def test_fused_jax_matches_numpy_and_scalar_searches():
+    """Full searches under the fused jax single-dispatch pipeline produce
+    bit-identical best costs, mappings, AND counters vs the numpy and
+    scalar engines, across the mapper x cost-model matrix."""
+    pytest.importorskip("jax")
+    arch = cloud_accelerator()
+    matrix = [
+        ("random", "timeloop", {"samples": 400}),
+        ("random", "maestro", {"samples": 400}),
+        ("exhaustive", "timeloop", {"max_mappings": 600}),
+        ("genetic", "maestro", {"generations": 6}),
+        ("heuristic", "timeloop", {}),
+        ("decoupled", "timeloop", {"offchip_samples": 80, "onchip_samples": 120}),
+    ]
+    for mapper, cm, kw in matrix:
+        a = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                      engine_backend="jax", **kw)
+        b = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                      engine_backend="numpy", **kw)
+        c = union_opt(GEMM, arch, mapper=mapper, cost_model=cm,
+                      engine_backend="none", **kw)
+        if get_context(GEMM, arch)._jax_failed:
+            pytest.skip("jax unavailable for the fused pipeline")
+        assert a.cost.edp == b.cost.edp == c.cost.edp, (mapper, cm)
+        assert _costs_equal(a.cost, b.cost) and _costs_equal(b.cost, c.cost)
+        assert (
+            a.mapping.to_dict() == b.mapping.to_dict() == c.mapping.to_dict()
+        ), (mapper, cm)
+        for attr in (
+            "evaluated", "analyzed", "cache_hits", "pruned", "store_hits",
+            "considered",
+        ):
+            assert (
+                getattr(a.search, attr)
+                == getattr(b.search, attr)
+                == getattr(c.search, attr)
+            ), (mapper, cm, attr)
+        assert a.search.fused_dispatches > 0, (mapper, cm)
+
+
+def test_fused_tpu_roofline_on_pod():
+    """The roofline model's own admission bound drives the fused program
+    on a TPU-pod architecture, bit-identically to the numpy flow."""
+    pytest.importorskip("jax")
+    arch = tpu_v5e_pod(1, 2, 2)
+    a = union_opt(GEMM, arch, mapper="random", cost_model="tpu_roofline",
+                  engine_backend="jax", samples=300)
+    b = union_opt(GEMM, arch, mapper="random", cost_model="tpu_roofline",
+                  engine_backend="numpy", samples=300)
+    if get_context(GEMM, arch)._jax_failed:
+        pytest.skip("jax unavailable for the fused pipeline")
+    assert _costs_equal(a.cost, b.cost)
+    assert a.mapping.to_dict() == b.mapping.to_dict()
+    assert a.search.pruned == b.search.pruned
+    assert a.search.analyzed == b.search.analyzed
+
+
+# --------------------------------------------------------------------- #
 # ResultStore
 # --------------------------------------------------------------------- #
 def test_store_roundtrip_and_flush(tmp_path):
@@ -247,6 +339,121 @@ def test_store_version_mismatch_and_corruption(tmp_path):
     assert _costs_equal(again.get(skey, sig), cost)
 
 
+def _sig_pool(problem, arch, n, seed=0):
+    ctx = get_context(problem, arch)
+    space = MapSpace(problem, arch)
+    rng = random.Random(seed)
+    sigs, seen = [], set()
+    while len(sigs) < n:
+        s = space.random_genome(rng).signature(ctx.dims)
+        if s not in seen:
+            seen.add(s)
+            sigs.append(s)
+    return sigs
+
+
+def test_store_eviction_cap_and_lru_order(tmp_path):
+    """The per-space cap is respected in both tiers, eviction is LRU
+    (a ``get`` refreshes recency), and flush compacts the disk tier."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    skey = space_key(cm, GEMM, arch)
+    sigs = _sig_pool(GEMM, arch, 8)
+    costs = {s: cm.evaluate_signature(GEMM, arch, s) for s in sigs}
+
+    store = ResultStore(tmp_path / "s", max_entries_per_space=4)
+    for s in sigs[:4]:
+        store.put(skey, s, costs[s])
+    # touch the OLDEST entry so it becomes most recent
+    assert store.get(skey, sigs[0]) is not None
+    # two more puts evict the two least-recently-used (sigs[1], sigs[2])
+    store.put(skey, sigs[4], costs[sigs[4]])
+    store.put(skey, sigs[5], costs[sigs[5]])
+    assert store.evicted == 2
+    assert store.get(skey, sigs[1]) is None
+    assert store.get(skey, sigs[2]) is None
+    assert store.get(skey, sigs[0]) is not None  # survived: recently used
+    assert store.flush() == 4  # disk tier holds exactly the cap
+
+    fresh = ResultStore(tmp_path / "s", max_entries_per_space=4)
+    kept = [s for s in sigs if fresh.get(skey, s) is not None]
+    assert len(kept) == 4
+    assert sigs[0] in kept and sigs[4] in kept and sigs[5] in kept
+
+    # an uncapped reader sees the same 4 surviving entries
+    uncapped = ResultStore(tmp_path / "s")
+    assert sum(uncapped.get(skey, s) is not None for s in sigs) == 4
+
+
+def test_store_concurrent_flush_union_of_survivors(tmp_path):
+    """Two writers sharing a directory: flush unions the disk tier with
+    the in-memory view before compacting, so below the cap NOTHING from
+    either writer is lost, and above it exactly ``cap`` entries survive
+    with the other writer's prior entries ranked least recent."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    skey = space_key(cm, GEMM, arch)
+    sigs = _sig_pool(GEMM, arch, 10)
+    costs = {s: cm.evaluate_signature(GEMM, arch, s) for s in sigs}
+
+    # both writers opened before either flushes (lazy loads see no file)
+    a = ResultStore(tmp_path / "s", max_entries_per_space=8)
+    b = ResultStore(tmp_path / "s", max_entries_per_space=8)
+    a.get(skey, sigs[0])  # force lazy load of the (absent) disk tier
+    b.get(skey, sigs[0])
+    for s in sigs[:4]:
+        a.put(skey, s, costs[s])
+    for s in sigs[4:8]:
+        b.put(skey, s, costs[s])
+    a.flush()
+    b.flush()  # must union a's flushed entries, not clobber them
+    merged = ResultStore(tmp_path / "s")
+    assert sum(merged.get(skey, s) is not None for s in sigs[:8]) == 8
+
+    # a third writer pushes the union past the cap: the oldest (on-disk,
+    # i.e. other writers') entries are compacted away, newest survive
+    c = ResultStore(tmp_path / "s", max_entries_per_space=8)
+    for s in sigs[8:]:
+        c.put(skey, s, costs[s])
+    c.flush()
+    final = ResultStore(tmp_path / "s")
+    survivors = [s for s in sigs if final.get(skey, s) is not None]
+    assert len(survivors) == 8
+    assert sigs[8] in survivors and sigs[9] in survivors
+
+
+def test_store_space_key_canonicalizes_numpy_scalars():
+    """numpy scalar arch attrs must not fork the space key: repr() of
+    np.float64(x) differs from repr(x) on numpy>=2, which silently
+    orphaned disk entries across writers."""
+    base = edge_accelerator()
+    k_base = space_key(TimeloopLikeModel(), GEMM, base)
+
+    npy = edge_accelerator()
+    npy.attrs["word_bytes"] = np.int64(npy.attrs["word_bytes"])
+    npy.attrs["extra_bw"] = np.float64(2.0)
+    plain = edge_accelerator()
+    plain.attrs["extra_bw"] = 2.0
+    assert space_key(TimeloopLikeModel(), GEMM, npy) == space_key(
+        TimeloopLikeModel(), GEMM, plain
+    )
+
+    # numpy scalar fill_bandwidth (incl. the inf encoding) is canonical too
+    npy_bw = edge_accelerator()
+    npy_bw.clusters = [
+        dataclasses.replace(c, fill_bandwidth=np.float64(c.fill_bandwidth))
+        for c in npy_bw.clusters
+    ]
+    assert space_key(TimeloopLikeModel(), GEMM, npy_bw) == k_base
+
+    # different VALUES still separate
+    other = edge_accelerator()
+    other.attrs["extra_bw"] = 3.0
+    assert space_key(TimeloopLikeModel(), GEMM, other) != space_key(
+        TimeloopLikeModel(), GEMM, plain
+    )
+
+
 def test_store_space_key_separates_configurations():
     arch = edge_accelerator()
     k1 = space_key(TimeloopLikeModel(), GEMM, arch)
@@ -281,13 +488,23 @@ def test_store_warm_search_identical_outputs(tmp_path):
         for sol in (cold, warm):
             assert sol.cost.edp == base.cost.edp, (mapper, cm)
             assert sol.mapping.to_dict() == base.mapping.to_dict(), (mapper, cm)
+        # the submitted-candidate total is warm/cold INVARIANT even though
+        # the evaluated/pruned split shifts (store hits bypass admission)
+        assert (
+            base.search.considered
+            == cold.search.considered
+            == warm.search.considered
+        ), (mapper, cm)
+        assert warm.search.considered > 0
 
 
 def test_search_counters_include_phases_and_store():
     sol = union_opt(GEMM, cloud_accelerator(), mapper="random",
                     cost_model="timeloop", samples=400)
     d = sol.search.stats_dict()
-    for key in ("store_hits", "admit_s", "score_s"):
+    for key in ("store_hits", "admit_s", "score_s", "considered",
+                "fused_dispatches"):
         assert key in d
     assert d["store_hits"] == 0  # no store attached
+    assert d["considered"] >= d["candidates"] > 0
     assert d["admit_s"] >= 0.0 and d["score_s"] > 0.0

@@ -1,0 +1,94 @@
+"""mappers_bench regression-gate bootstrap semantics.
+
+The smoke-mode evals/s gate must bootstrap cleanly on first runs: a
+missing ``BENCH_mappers.json`` is recorded (warn-and-record, no gate), a
+baseline lacking a row for a newly-benchmarked mapper/backend records
+that row without touching existing rows, a genuine regression still
+fails, and matrix mismatches skip the gate as before.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.mappers_bench import check_regression  # noqa: E402
+
+
+def _summary(rows: dict, smoke=True, backend="numpy") -> dict:
+    return {
+        "problem": "BERT-2",
+        "smoke": smoke,
+        "engine_backend": backend,
+        "evals_per_s": dict(rows),
+        "cache_hit_rate": {k: 0.1 for k in rows},
+        "pruned": {k: 5 for k in rows},
+        "store_hits": {k: 0 for k in rows},
+        "phase_s": {k: {"admit": 0.01, "score": 0.02} for k in rows},
+        "speedup_vs_seed": {},
+    }
+
+
+def test_missing_baseline_bootstraps(tmp_path, capsys):
+    path = tmp_path / "BENCH_mappers.json"
+    summary = _summary({"timeloop/random": 10000})
+    check_regression(summary, path, margin=0.5)  # must not raise
+    out = capsys.readouterr().out
+    assert "no baseline" in out and "recording" in out
+    assert json.loads(path.read_text())["evals_per_s"] == {"timeloop/random": 10000}
+
+
+def test_new_mapper_row_recorded_without_touching_existing(tmp_path, capsys):
+    path = tmp_path / "BENCH_mappers.json"
+    path.write_text(json.dumps(_summary({"timeloop/random": 10000})))
+    summary = _summary({"timeloop/random": 11000, "timeloop/heuristic": 7000})
+    check_regression(summary, path, margin=0.5)  # new row: warn, not fail
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "timeloop/heuristic" in out
+    base = json.loads(path.read_text())
+    # the first-run row was recorded; the committed floor was NOT ratcheted
+    assert base["evals_per_s"]["timeloop/heuristic"] == 7000
+    assert base["evals_per_s"]["timeloop/random"] == 10000
+    # a later regression on the recorded row now fails
+    with pytest.raises(SystemExit):
+        check_regression(
+            _summary({"timeloop/random": 11000, "timeloop/heuristic": 1000}),
+            path,
+            margin=0.5,
+        )
+
+
+def test_regression_still_fails(tmp_path):
+    path = tmp_path / "BENCH_mappers.json"
+    path.write_text(json.dumps(_summary({"timeloop/random": 10000})))
+    with pytest.raises(SystemExit):
+        check_regression(_summary({"timeloop/random": 1000}), path, margin=0.5)
+
+
+def test_regression_not_recorded_on_failure(tmp_path):
+    """A run that both regresses an existing row and introduces a new one
+    must fail WITHOUT recording the new row (a broken run is not a
+    trustworthy baseline)."""
+    path = tmp_path / "BENCH_mappers.json"
+    path.write_text(json.dumps(_summary({"timeloop/random": 10000})))
+    with pytest.raises(SystemExit):
+        check_regression(
+            _summary({"timeloop/random": 1000, "timeloop/heuristic": 7000}),
+            path,
+            margin=0.5,
+        )
+    assert "timeloop/heuristic" not in json.loads(path.read_text())["evals_per_s"]
+
+
+def test_matrix_mismatch_skips_gate(tmp_path, capsys):
+    path = tmp_path / "BENCH_mappers.json"
+    path.write_text(json.dumps(_summary({"timeloop/random": 10000}, backend="numpy")))
+    check_regression(
+        _summary({"timeloop/random": 1}, backend="jax"), path, margin=0.5
+    )
+    assert "matrix differs" in capsys.readouterr().out
+    # and the baseline was left alone
+    assert json.loads(path.read_text())["evals_per_s"] == {"timeloop/random": 10000}

@@ -87,3 +87,52 @@ def test_trajectory_monotone():
 def test_mapper_registry_complete():
     for m in MAPPERS:
         assert m in MAPPER_REGISTRY or get_mapper(m) is not None
+
+
+def test_heuristic_chunked_climb_matches_serial_walk():
+    """The speculative chunked climb (batched admission + StackedBatch
+    sharing) must reproduce the serial scalar walk's accepted-move
+    sequence and final best mapping exactly, for fixed seeds, across cost
+    models and chunk sizes. Engine-side work counters may differ (the
+    speculated tail past an accepted move is evaluated and cached), but
+    the walk itself -- every accepted score, in order -- may not."""
+    from repro.core.mappers.heuristic import HeuristicMapper
+
+    p = Problem.gemm(64, 32, 16, word_bytes=1)
+    for arch in (cloud_accelerator(), edge_accelerator()):
+        for cm in COST_MODELS:
+            for seed in (0, 7):
+                serial = union_opt(
+                    p, arch, mapper=HeuristicMapper(seed=seed, chunk=1),
+                    cost_model=cm,
+                )
+                for chunk in (4, 8, 16):
+                    batched = union_opt(
+                        p, arch, mapper=HeuristicMapper(seed=seed, chunk=chunk),
+                        cost_model=cm,
+                    )
+                    assert batched.cost.edp == serial.cost.edp, (cm, seed, chunk)
+                    assert (
+                        batched.mapping.to_dict() == serial.mapping.to_dict()
+                    ), (cm, seed, chunk)
+                    # accepted-move sequence: the ordered best-metric values
+                    assert [s for _, s in batched.search.trajectory] == [
+                        s for _, s in serial.search.trajectory
+                    ], (cm, seed, chunk)
+
+
+def test_heuristic_chunked_climb_uses_batched_admission():
+    """The chunked climb actually reaches evaluate_batch (batched bound +
+    shared StackedBatch): the engine records batches and, with pruning
+    active, a nonzero bound-pruned count on this workload."""
+    from repro.core.cost.engine import EvaluationEngine
+    from repro.core.mappers.heuristic import HeuristicMapper
+
+    p = Problem.gemm(64, 32, 16, word_bytes=1)
+    arch = cloud_accelerator()
+    cm = TimeloopLikeModel()
+    engine = EvaluationEngine(cm, p, arch, metric="edp")
+    HeuristicMapper(seed=0, chunk=8).search(MapSpace(p, arch), cm, engine=engine)
+    assert engine.stats.batches > 0
+    assert engine.stats.pruned > 0
+    assert engine.stats.considered > 0

@@ -17,35 +17,46 @@ from pathlib import Path
 from benchmarks.workloads import CLOUD_ASPECTS, EDGE_ASPECTS, dnn_layers
 from repro.core.architecture import cloud_accelerator, edge_accelerator
 from repro.core.cost import ResultStore
-from repro.core.optimizer import union_opt
+from repro.core.optimizer import SweepTask, union_opt_sweep
 
 OUT = Path("experiments/benchmarks")
 
 
-def run(store_dir: str | None = None, store_cap: int | None = None) -> dict:
+def run(store_dir: str | None = None, store_cap: int | None = None,
+        backend: str = "numpy") -> dict:
+    """The whole figure is ONE ``union_opt_sweep``: every
+    (deployment, workload, aspect) point becomes a task, so the sweep
+    shares the result store, aliases content-equal analysis contexts, and
+    (under ``--backend jax``) pre-traces each space's fused runner once
+    before its timed search."""
     layers = dnn_layers()
     store = (
         ResultStore(store_dir, max_entries_per_space=store_cap)
         if store_dir
         else None
     )
-    result = {"figure": "fig10", "edge": {}, "cloud": {}}
+    tasks = []
     for tag, mk, aspects in (
         ("edge", edge_accelerator, EDGE_ASPECTS),
         ("cloud", cloud_accelerator, CLOUD_ASPECTS),
     ):
         for wname, problem in layers.items():
-            row = {}
             for aspect in aspects:
-                arch = mk(aspect=aspect)
-                sol = union_opt(problem, arch, mapper="heuristic",
-                                cost_model="maestro", metric="edp",
-                                result_store=store)
-                row["x".join(map(str, aspect))] = {
-                    "edp": sol.cost.edp, "util": sol.cost.utilization,
-                    "search": sol.search.stats_dict(),
-                }
-            result[tag][wname] = row
+                tasks.append(SweepTask(
+                    problem, mk(aspect=aspect), mapper="heuristic",
+                    cost_model="maestro", metric="edp",
+                    tag=(tag, wname, "x".join(map(str, aspect))),
+                ))
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    result = {"figure": "fig10", "edge": {}, "cloud": {}, "sweep": sweep.stats}
+    for task, sol in zip(tasks, sweep):
+        tag, wname, aspect = task.tag
+        result[tag].setdefault(wname, {})[aspect] = {
+            "edp": sol.cost.edp, "util": sol.cost.utilization,
+            "search": sol.search.stats_dict(),
+        }
+    for tag in ("edge", "cloud"):
+        for wname, row in result[tag].items():
             best = min(row, key=lambda k: row[k]["edp"])
             print(f"[fig10] {tag:5s} {wname:10s} best aspect {best:8s} "
                   f"(util {row[best]['util']:.0%})")
@@ -65,5 +76,8 @@ if __name__ == "__main__":
     ap.add_argument("--store-cap", type=int, default=None, metavar="N",
                     help="per-space LRU entry cap for the result store "
                          "(disk tier compacted at flush; default unbounded)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "none"],
+                    help="evaluation-engine array backend for the sweep")
     args = ap.parse_args()
-    run(store_dir=args.store, store_cap=args.store_cap)
+    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend)

@@ -15,28 +15,43 @@ from pathlib import Path
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import chiplet_accelerator
 from repro.core.cost import ResultStore
-from repro.core.optimizer import union_opt
+from repro.core.optimizer import SweepTask, union_opt_sweep
 
 OUT = Path("experiments/benchmarks")
 BWS = [0.125e9, 0.25e9, 0.5e9, 1e9, 2e9, 4e9, 6e9, 8e9, 12e9, 16e9, 32e9]
 
 
-def run(store_dir: str | None = None, store_cap: int | None = None) -> dict:
+def run(store_dir: str | None = None, store_cap: int | None = None,
+        backend: str = "numpy") -> dict:
+    """One ``union_opt_sweep`` over every (workload, bandwidth) point:
+    shared store, content-aliased contexts, per-space bucketed warmup
+    under ``--backend jax``."""
     layers = dnn_layers()
     store = (
         ResultStore(store_dir, max_entries_per_space=store_cap)
         if store_dir
         else None
     )
-    result = {"figure": "fig11", "bandwidths_gbps": [b / 1e9 for b in BWS], "rows": {}}
+    tasks = [
+        SweepTask(problem, chiplet_accelerator(fill_bandwidth=bw),
+                  mapper="heuristic", cost_model="timeloop", metric="edp",
+                  tag=(wname, bw))
+        for wname, problem in layers.items()
+        for bw in BWS
+    ]
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    sols = {t.tag: s for t, s in zip(tasks, sweep)}
+    result = {
+        "figure": "fig11",
+        "bandwidths_gbps": [b / 1e9 for b in BWS],
+        "rows": {},
+        "sweep": sweep.stats,
+    }
     for wname, problem in layers.items():
         edps = []
         searches = []
         for bw in BWS:
-            arch = chiplet_accelerator(fill_bandwidth=bw)
-            sol = union_opt(problem, arch, mapper="heuristic",
-                            cost_model="timeloop", metric="edp",
-                            result_store=store)
+            sol = sols[(wname, bw)]
             edps.append(sol.cost.edp)
             searches.append(sol.search.stats_dict())
         # saturation point: first bw within 5% of the best (highest-bw) EDP
@@ -67,5 +82,8 @@ if __name__ == "__main__":
     ap.add_argument("--store-cap", type=int, default=None, metavar="N",
                     help="per-space LRU entry cap for the result store "
                          "(disk tier compacted at flush; default unbounded)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "none"],
+                    help="evaluation-engine array backend for the sweep")
     args = ap.parse_args()
-    run(store_dir=args.store, store_cap=args.store_cap)
+    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend)

@@ -3,6 +3,13 @@
 A DLRM layer on a 3-level spatial architecture with a 16x16 PE array:
 sample mappings from the Union map-space, report normalized energy /
 latency / EDP spread, and show the best mapping Union-opt finds.
+
+The sample population keeps the historical v1 candidate stream (so the
+reported spreads stay byte-comparable across releases) but is SCORED as
+one engine batch -- the same vectorized array program the searches use,
+bit-identical to per-candidate ``cm.evaluate`` -- and the search itself
+runs through :func:`union_opt_sweep` (shared store flush, bucketed jax
+warmup under ``--backend jax``).
 """
 
 from __future__ import annotations
@@ -14,15 +21,15 @@ from pathlib import Path
 
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import edge_accelerator
-from repro.core.cost import ResultStore, TimeloopLikeModel
+from repro.core.cost import EvaluationEngine, ResultStore, TimeloopLikeModel
 from repro.core.mapspace import MapSpace
-from repro.core.optimizer import union_opt
+from repro.core.optimizer import SweepTask, union_opt_sweep
 
 OUT = Path("experiments/benchmarks")
 
 
 def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
-        store_cap: int | None = None) -> dict:
+        store_cap: int | None = None, backend: str = "numpy") -> dict:
     problem = dnn_layers()["DLRM-1"]
     arch = edge_accelerator(aspect=(16, 16))
     cm = TimeloopLikeModel()
@@ -34,14 +41,23 @@ def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
         else None
     )
 
-    rows = []
-    for _ in range(samples):
-        m = space.random_mapping(rng)
-        c = cm.evaluate(problem, m, arch)
-        rows.append({"latency": c.latency_cycles, "energy": c.energy_pj,
-                     "edp": c.edp, "util": c.utilization})
-    best = union_opt(problem, arch, mapper="heuristic", cost_model=cm, metric="edp",
-                     result_store=store)
+    genomes = [space.random_genome(rng) for _ in range(samples)]
+    with EvaluationEngine(
+        cm, problem, arch, metric="edp", prune=False, backend=backend
+    ) as engine:
+        costs = engine.evaluate_batch(genomes)
+    rows = [
+        {"latency": c.latency_cycles, "energy": c.energy_pj,
+         "edp": c.edp, "util": c.utilization}
+        for c in costs
+    ]
+    sweep = union_opt_sweep(
+        [SweepTask(problem, arch, mapper="heuristic", cost_model=cm,
+                   metric="edp")],
+        engine_backend=backend,
+        result_store=store,
+    )
+    best = sweep[0]
     rows.sort(key=lambda r: r["edp"])
     e_min = min(r["energy"] for r in rows)
     l_min = min(r["latency"] for r in rows)
@@ -56,6 +72,7 @@ def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
         "union_opt_edp": best.cost.edp,
         "union_opt_util": best.cost.utilization,
         "search": best.search.stats_dict(),
+        "sweep": sweep.stats,
         "normalized": [
             {"energy": r["energy"] / e_min, "latency": r["latency"] / l_min}
             for r in rows[:: max(1, samples // 50)]
@@ -84,6 +101,11 @@ if __name__ == "__main__":
     ap.add_argument("--store-cap", type=int, default=None, metavar="N",
                     help="per-space LRU entry cap for the result store "
                          "(disk tier compacted at flush; default unbounded)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "none"],
+                    help="evaluation-engine array backend for sampling and "
+                         "search (jax = fused single-dispatch pipeline with "
+                         "bucketed warmup)")
     args = ap.parse_args()
     run(samples=args.samples, seed=args.seed, store_dir=args.store,
-        store_cap=args.store_cap)
+        store_cap=args.store_cap, backend=args.backend)

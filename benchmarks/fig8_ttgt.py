@@ -32,21 +32,14 @@ from repro.core.architecture import cloud_accelerator
 from repro.core.constraints import Constraints
 from repro.core.cost import ResultStore
 from repro.core.ir.ttgt import best_ttgt_plan, transpose_cost
-from repro.core.optimizer import union_opt
+from repro.core.optimizer import SweepTask, union_opt_sweep
 
 OUT = Path("experiments/benchmarks")
 PAPER_SPACE = Constraints(name="memory_target_like", max_concurrent_spatial=1)
 
-
-def _best(problem, arch, constraints=None, store=None):
-    """heuristic + random-sampling mappers (paper Sec. V-A), best of both."""
-    sols = [
-        union_opt(problem, arch, mapper="heuristic", cost_model="timeloop",
-                  metric="edp", constraints=constraints, result_store=store),
-        union_opt(problem, arch, mapper="random", cost_model="timeloop",
-                  metric="edp", constraints=constraints, result_store=store),
-    ]
-    return min(sols, key=lambda s: s.cost.edp)
+# paper Sec. V-A: every (problem, space-mode) point is searched by a
+# heuristic AND a random mapper, best of both reported
+_MAPPERS = ("heuristic", "random")
 
 
 def ttgt_total_edp(cost, plan, arch, include_transpose: bool = True,
@@ -66,19 +59,45 @@ def ttgt_total_edp(cost, plan, arch, include_transpose: bool = True,
 
 
 def run(include_transpose_cost: bool = True, store_dir: str | None = None,
-        store_cap: int | None = None) -> dict:
+        store_cap: int | None = None, backend: str = "numpy") -> dict:
+    """The whole figure is ONE ``union_opt_sweep``: every (problem, side,
+    space-mode, mapper) combination is a task. The heuristic and random
+    searches over the same (problem, space) SHARE one engine -- the
+    second mapper starts against a warm memo -- and the store/warmup are
+    sweep-wide."""
     arch = cloud_accelerator(aspect=(32, 64))
     store = (
         ResultStore(store_dir, max_entries_per_space=store_cap)
         if store_dir
         else None
     )
-    rows = []
-    mappings = {}
+    prob_rows = []
+    tasks = []
     for name, tds, problem in tc_problems():
         plan = best_ttgt_plan(problem)
         gemm = plan.gemm_problem(word_bytes=1)
         t_cyc, t_pj = transpose_cost(plan, arch, word_bytes=1)
+        prob_rows.append((name, tds, problem, gemm, plan, t_cyc, t_pj))
+        for mode, cons in (("paper", PAPER_SPACE), ("union", None)):
+            for side, prob in (("native", problem), ("ttgt", gemm)):
+                for mp in _MAPPERS:
+                    tasks.append(SweepTask(
+                        prob, arch, mapper=mp, cost_model="timeloop",
+                        metric="edp", constraints=cons,
+                        tag=(name, mode, side, mp),
+                    ))
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    by_tag = {t.tag: s for t, s in zip(tasks, sweep)}
+
+    def _best_of(name, mode, side):
+        return min(
+            (by_tag[(name, mode, side, mp)] for mp in _MAPPERS),
+            key=lambda s: s.cost.edp,
+        )
+
+    rows = []
+    mappings = {}
+    for name, tds, problem, gemm, plan, t_cyc, t_pj in prob_rows:
         row = {
             "problem": name, "tds": tds, "gemm_mnk": [plan.M, plan.N, plan.K],
             "transpose_elems": plan.transpose_elems,
@@ -86,8 +105,8 @@ def run(include_transpose_cost: bool = True, store_dir: str | None = None,
             "transpose_energy_pj": t_pj,
         }
         for mode, cons in (("paper", PAPER_SPACE), ("union", None)):
-            native = _best(problem, arch, cons, store=store)
-            ttgt = _best(gemm, arch, cons, store=store)
+            native = _best_of(name, mode, "native")
+            ttgt = _best_of(name, mode, "ttgt")
             ttgt_edp = ttgt_total_edp(ttgt.cost, plan, arch, include_transpose_cost,
                                       tcost=(t_cyc, t_pj))
             row[f"edp_native_{mode}"] = native.cost.edp
@@ -124,6 +143,7 @@ def run(include_transpose_cost: bool = True, store_dir: str | None = None,
             1 for r in rows if r["winner_paper"] != r["winner_union"]
         ),
         "fig9_mappings": mappings,
+        "sweep": sweep.stats,
     }
     if store is not None:
         store.flush()
@@ -152,6 +172,9 @@ if __name__ == "__main__":
     ap.add_argument("--store-cap", type=int, default=None, metavar="N",
                     help="per-space LRU entry cap for the result store "
                          "(disk tier compacted at flush; default unbounded)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax", "none"],
+                    help="evaluation-engine array backend for the sweep")
     args = ap.parse_args()
     run(include_transpose_cost=not args.no_transpose_cost, store_dir=args.store,
-        store_cap=args.store_cap)
+        store_cap=args.store_cap, backend=args.backend)

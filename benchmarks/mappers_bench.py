@@ -10,7 +10,13 @@ at the repo root (the CI-tracked throughput summary).
 
 Usage:
     python benchmarks/mappers_bench.py [--smoke] [--repeats N] [--workers W]
-                                       [--store DIR] [--no-regress-check]
+                                       [--backend numpy,jax] [--store DIR]
+                                       [--no-regress-check]
+
+``--backend`` takes a comma list; each backend runs the whole mapper
+matrix and its rows are keyed ``backend/cost_model/mapper`` in the
+summary, so the committed ``BENCH_mappers.json`` gates EVERY benchmarked
+backend's evals/s (CI runs ``numpy,jax``).
 
 ``--smoke`` runs a reduced matrix (one cost model, smaller budgets, now
 including ``heuristic`` so the batched/fused climb stays tracked) that
@@ -97,8 +103,10 @@ def record_baseline_rows(summary: dict, base: dict, new_keys, baseline_path: Pat
 
 def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
     """Fail (SystemExit) when any evals/s row regresses below ``margin`` x
-    the committed baseline. Only rows present in both files are compared,
-    and only when both were produced by the same (smoke) matrix.
+    the committed baseline. Only rows present in both files are compared
+    (rows carry their backend in the key, so a jax row never gates a
+    numpy row), and only when both were produced by the same (smoke)
+    matrix.
 
     First-run and new-row cases bootstrap cleanly (warn-and-record, never
     crash or false-fail): a MISSING baseline file is written from this
@@ -117,10 +125,8 @@ def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
     except Exception as e:  # pragma: no cover - unreadable baseline
         print(f"[mappers] unreadable baseline ({e}); skipping regression gate")
         return
-    if base.get("smoke") != summary["smoke"] or base.get("engine_backend") != summary[
-        "engine_backend"
-    ]:
-        print("[mappers] baseline matrix differs (smoke/backend); skipping gate")
+    if base.get("smoke") != summary["smoke"]:
+        print("[mappers] baseline matrix differs (smoke); skipping gate")
         return
     failures = []
     new_keys = []
@@ -155,78 +161,83 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
     arch = cloud_accelerator()
     cost_models = COST_MODELS[:1] if smoke else COST_MODELS
     mappers = ["random", "exhaustive", "genetic", "heuristic"] if smoke else MAPPERS
+    backends = [b.strip() for b in backend.split(",") if b.strip()]
     store = ResultStore(store_dir) if store_dir else None
     rows = []
-    for cm in cost_models:
-        for mp in mappers:
-            kw = {}
-            if mp == "exhaustive":
-                kw["max_mappings"] = 3000
-            if smoke:
-                if mp == "random":
-                    kw["samples"] = 800
-                if mp == "genetic":
-                    kw["generations"] = 8
+    for be in backends:
+        for cm in cost_models:
+            for mp in mappers:
+                kw = {}
                 if mp == "exhaustive":
-                    kw["max_mappings"] = 1500
-            best_s = float("inf")
-            sol = None
-            for _ in range(max(1, repeats)):
-                t0 = time.time()
-                sol = union_opt(
-                    problem, arch, mapper=mp, cost_model=cm, metric="edp",
-                    engine_workers=workers, engine_backend=backend,
-                    result_store=store, **kw,
+                    kw["max_mappings"] = 3000
+                if smoke:
+                    if mp == "random":
+                        kw["samples"] = 800
+                    if mp == "genetic":
+                        kw["generations"] = 8
+                    if mp == "exhaustive":
+                        kw["max_mappings"] = 1500
+                best_s = float("inf")
+                sol = None
+                for _ in range(max(1, repeats)):
+                    t0 = time.time()
+                    sol = union_opt(
+                        problem, arch, mapper=mp, cost_model=cm, metric="edp",
+                        engine_workers=workers, engine_backend=be,
+                        result_store=store, **kw,
+                    )
+                    best_s = min(best_s, time.time() - t0)
+                res = sol.search
+                candidates = res.evaluated + res.pruned
+                # Throughput numerator = SearchResult.scored (warm/cold-
+                # invariant submitted total minus store-served candidates;
+                # cold runs stay comparable with historical numbers), over
+                # the best-of-repeats wall clock.
+                scored = res.scored
+                evals_per_s = scored / best_s
+                seen = res.analyzed + res.cache_hits + res.store_hits
+                row = {
+                    "mapper": mp, "cost_model": cm, "backend": be,
+                    "edp": sol.cost.edp, "util": sol.cost.utilization,
+                    "evaluated": res.evaluated,
+                    "analyzed": res.analyzed,
+                    "cache_hits": res.cache_hits,
+                    "store_hits": res.store_hits,
+                    "pruned": res.pruned,
+                    "candidates": candidates,
+                    "considered": res.considered,
+                    "fused_dispatches": res.fused_dispatches,
+                    "cache_hit_rate": res.cache_hits / seen if seen else 0.0,
+                    "seconds": best_s,
+                    "evals_per_s": evals_per_s,
+                    # per-phase engine wall-clock of the LAST repeat:
+                    # admission (bound stage) vs scoring (miss evaluation)
+                    "admit_s": res.admit_s,
+                    "score_s": res.score_s,
+                    "speedup_vs_seed": (
+                        evals_per_s / SEED_EVALS_PER_S[(cm, mp)]
+                        if (cm, mp) in SEED_EVALS_PER_S
+                        and not smoke and be == "numpy"
+                        else None
+                    ),
+                }
+                rows.append(row)
+                print(
+                    f"[mappers] {be:5s} {cm:9s} x {mp:10s}: "
+                    f"EDP {sol.cost.edp:.3e} "
+                    f"util {sol.cost.utilization:5.0%} "
+                    f"({scored} scored, {best_s:.2f}s, "
+                    f"{evals_per_s:,.0f} evals/s, "
+                    f"hit {row['cache_hit_rate']:.0%}, pruned {res.pruned}, "
+                    f"store {res.store_hits}, admit {res.admit_s*1e3:.1f}ms, "
+                    f"score {res.score_s*1e3:.1f}ms)"
                 )
-                best_s = min(best_s, time.time() - t0)
-            res = sol.search
-            candidates = res.evaluated + res.pruned
-            # Throughput numerator = SearchResult.scored (warm/cold-
-            # invariant submitted total minus store-served candidates;
-            # cold runs stay comparable with historical numbers), over the
-            # best-of-repeats wall clock.
-            scored = res.scored
-            evals_per_s = scored / best_s
-            seen = res.analyzed + res.cache_hits + res.store_hits
-            row = {
-                "mapper": mp, "cost_model": cm,
-                "edp": sol.cost.edp, "util": sol.cost.utilization,
-                "evaluated": res.evaluated,
-                "analyzed": res.analyzed,
-                "cache_hits": res.cache_hits,
-                "store_hits": res.store_hits,
-                "pruned": res.pruned,
-                "candidates": candidates,
-                "considered": res.considered,
-                "fused_dispatches": res.fused_dispatches,
-                "cache_hit_rate": res.cache_hits / seen if seen else 0.0,
-                "seconds": best_s,
-                "evals_per_s": evals_per_s,
-                # per-phase engine wall-clock of the LAST repeat: admission
-                # (bound stage) vs scoring (miss evaluation)
-                "admit_s": res.admit_s,
-                "score_s": res.score_s,
-                "speedup_vs_seed": (
-                    evals_per_s / SEED_EVALS_PER_S[(cm, mp)]
-                    if (cm, mp) in SEED_EVALS_PER_S and not smoke
-                    else None
-                ),
-            }
-            rows.append(row)
-            print(
-                f"[mappers] {cm:9s} x {mp:10s}: EDP {sol.cost.edp:.3e} "
-                f"util {sol.cost.utilization:5.0%} "
-                f"({scored} scored, {best_s:.2f}s, {evals_per_s:,.0f} evals/s, "
-                f"hit {row['cache_hit_rate']:.0%}, pruned {res.pruned}, "
-                f"store {res.store_hits}, admit {res.admit_s*1e3:.1f}ms, "
-                f"score {res.score_s*1e3:.1f}ms)"
-            )
     result = {
         "figure": "mappers",
         "problem": "BERT-2",
         "smoke": smoke,
         "engine_workers": workers,
-        "engine_backend": backend,
+        "engine_backends": backends,
         "rows": rows,
     }
     if store is not None:
@@ -235,11 +246,11 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
         print(f"[mappers] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "mappers.json").write_text(json.dumps(result, indent=1))
-    key_of = lambda r: f"{r['cost_model']}/{r['mapper']}"  # noqa: E731
+    key_of = lambda r: f"{r['backend']}/{r['cost_model']}/{r['mapper']}"  # noqa: E731
     summary = {
         "problem": "BERT-2",
         "smoke": smoke,
-        "engine_backend": backend,
+        "engine_backends": backends,
         "evals_per_s": {key_of(r): round(r["evals_per_s"]) for r in rows},
         "cache_hit_rate": {key_of(r): round(r["cache_hit_rate"], 3) for r in rows},
         "pruned": {key_of(r): r["pruned"] for r in rows},
@@ -290,8 +301,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true", help="reduced CI matrix")
     ap.add_argument("--repeats", type=int, default=5, help="take best-of-N per row")
     ap.add_argument("--workers", type=int, default=0, help="engine process-pool size")
-    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax", "none"],
-                    help="vectorized miss-batch backend (none = scalar path)")
+    ap.add_argument("--backend", default="numpy",
+                    help="comma list of miss-batch backends to benchmark "
+                         "(numpy, jax, none = scalar path); each backend "
+                         "runs the whole matrix and gates its own "
+                         "evals/s rows")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persistent cross-search ResultStore directory")
     ap.add_argument("--no-regress-check", action="store_true",

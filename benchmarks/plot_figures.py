@@ -1,0 +1,248 @@
+"""Cross-figure aggregation + plots over the uniform ``stats_dict()`` JSON.
+
+Every figure benchmark (fig3/fig8/fig10/fig11) and ``mappers_bench`` writes
+its results to ``experiments/benchmarks/*.json`` with engine-counter blocks
+in one shared schema (``SearchResult.stats_dict()``: evals_per_s, admit_s /
+score_s phase split, cache/store/pruned counters). This script walks those
+files, flattens every embedded search block into rows tagged with its
+figure and experimental point, and renders:
+
+  * ``evals_per_s.png``   -- throughput distribution per figure (plus the
+    mappers-bench per-(backend, mapper) bars);
+  * ``edp_summary.png``   -- EDP comparisons per figure (fig8 native vs
+    TTGT per mode; fig10 best-aspect EDP per workload; fig11 EDP vs
+    bandwidth curves);
+  * ``figures_summary.json`` -- the flattened rows + per-figure throughput
+    aggregates (always written, even without matplotlib).
+
+Usage:
+    python benchmarks/plot_figures.py [--dir experiments/benchmarks]
+                                      [--out experiments/benchmarks/plots]
+
+Plots degrade gracefully: a missing figure JSON is skipped with a note,
+and without matplotlib only the JSON summary is produced.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+def _search_rows(figure: str, payload: dict) -> List[dict]:
+    """Flatten every stats_dict block in one figure's JSON into tagged
+    rows ``{figure, point, evals_per_s, ...}``."""
+    rows: List[dict] = []
+
+    def add(point: str, block: Optional[dict], extra: Optional[dict] = None):
+        if not isinstance(block, dict) or "evals_per_s" not in block:
+            return
+        row = {"figure": figure, "point": point}
+        row.update(block)
+        if extra:
+            row.update(extra)
+        rows.append(row)
+
+    if figure == "fig3":
+        add("union_opt", payload.get("search"),
+            {"edp": payload.get("union_opt_edp")})
+    elif figure == "fig8":
+        for r in payload.get("rows", []):
+            for mode in ("paper", "union"):
+                for side in ("native", "ttgt"):
+                    add(
+                        f"{r['problem']}/{mode}/{side}",
+                        r.get(f"search_{side}_{mode}"),
+                        {"edp": r.get(f"edp_{side}_{mode}")},
+                    )
+    elif figure == "fig10":
+        for tag in ("edge", "cloud"):
+            for wname, row in payload.get(tag, {}).items():
+                for aspect, cell in row.items():
+                    add(f"{tag}/{wname}/{aspect}", cell.get("search"),
+                        {"edp": cell.get("edp")})
+    elif figure == "fig11":
+        bws = payload.get("bandwidths_gbps", [])
+        for wname, row in payload.get("rows", {}).items():
+            for i, blk in enumerate(row.get("search", [])):
+                bw = bws[i] if i < len(bws) else i
+                add(f"{wname}/{bw}gbps", blk,
+                    {"edp": row["edp"][i] if i < len(row.get("edp", [])) else None})
+    elif figure == "mappers":
+        for r in payload.get("rows", []):
+            point = f"{r.get('backend', '?')}/{r['cost_model']}/{r['mapper']}"
+            keys = (
+                "evals_per_s", "cache_hit_rate", "pruned", "store_hits",
+                "admit_s", "score_s", "considered", "edp",
+            )
+            rows.append(
+                {"figure": "mappers", "point": point}
+                | {k: r.get(k) for k in keys}
+            )
+    return rows
+
+
+def collect(bench_dir: Path) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = {}
+    for figure in ("fig3", "fig8", "fig10", "fig11", "mappers"):
+        f = bench_dir / f"{figure}.json"
+        if not f.exists():
+            print(f"[plots] {f} missing -- run its benchmark first; skipped")
+            continue
+        try:
+            payload = json.loads(f.read_text())
+        except Exception as e:
+            print(f"[plots] {f} unreadable ({e}); skipped")
+            continue
+        rows = _search_rows(figure, payload)
+        if rows:
+            out[figure] = rows
+    return out
+
+
+def _aggregate(rows_by_fig: Dict[str, List[dict]]) -> dict:
+    agg = {}
+    for figure, rows in rows_by_fig.items():
+        vals = [r["evals_per_s"] for r in rows if r.get("evals_per_s")]
+        if not vals:
+            continue
+        agg[figure] = {
+            "searches": len(rows),
+            "evals_per_s_min": min(vals),
+            "evals_per_s_max": max(vals),
+            "evals_per_s_mean": round(sum(vals) / len(vals), 1),
+            "store_hits": sum(int(r.get("store_hits") or 0) for r in rows),
+            "pruned": sum(int(r.get("pruned") or 0) for r in rows),
+        }
+    return agg
+
+
+def _plot(rows_by_fig: Dict[str, List[dict]], out_dir: Path) -> List[str]:
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception as e:  # pragma: no cover - plotting is best-effort
+        print(f"[plots] matplotlib unavailable ({e}); JSON summary only")
+        return []
+    written = []
+
+    # ---- throughput overview -------------------------------------- #
+    fig, axes = plt.subplots(1, 2, figsize=(13, 4.5))
+    names = [f for f in rows_by_fig if f != "mappers"]
+    series = [
+        [r["evals_per_s"] for r in rows_by_fig[f] if r.get("evals_per_s")]
+        for f in names
+    ]
+    if names:
+        axes[0].boxplot(series, tick_labels=names)
+        axes[0].set_ylabel("evals / s")
+        axes[0].set_title("search throughput per figure benchmark")
+        axes[0].grid(axis="y", alpha=0.3)
+    mrows = rows_by_fig.get("mappers", [])
+    if mrows:
+        pts = [r["point"] for r in mrows]
+        axes[1].barh(pts, [r["evals_per_s"] for r in mrows])
+        axes[1].set_xlabel("evals / s")
+        axes[1].set_title("mappers_bench rows (backend/model/mapper)")
+        axes[1].grid(axis="x", alpha=0.3)
+    fig.tight_layout()
+    p = out_dir / "evals_per_s.png"
+    fig.savefig(p, dpi=120)
+    plt.close(fig)
+    written.append(str(p))
+
+    # ---- EDP comparisons ------------------------------------------- #
+    fig, axes = plt.subplots(1, 3, figsize=(16, 4.5))
+    f8 = rows_by_fig.get("fig8", [])
+    if f8:
+        by = {r["point"]: r.get("edp") for r in f8}
+        probs = sorted({p.split("/")[0] for p in by})
+        x = range(len(probs))
+        for i, (mode, side, style) in enumerate(
+            (("paper", "native", "o-"), ("paper", "ttgt", "o--"),
+             ("union", "native", "s-"), ("union", "ttgt", "s--"))
+        ):
+            ys = [by.get(f"{p}/{mode}/{side}") for p in probs]
+            axes[0].plot(x, ys, style, label=f"{side} ({mode} space)")
+        axes[0].set_xticks(list(x), probs, rotation=30, ha="right")
+        axes[0].set_yscale("log")
+        axes[0].set_ylabel("EDP (J*s)")
+        axes[0].set_title("fig8: native vs TTGT")
+        axes[0].legend(fontsize=8)
+    f10 = rows_by_fig.get("fig10", [])
+    if f10:
+        best: Dict[str, float] = {}
+        for r in f10:
+            tag, wname, _aspect = r["point"].split("/")
+            k = f"{tag}/{wname}"
+            if r.get("edp") is not None:
+                best[k] = min(best.get(k, float("inf")), r["edp"])
+        axes[1].barh(list(best), list(best.values()))
+        axes[1].set_xscale("log")
+        axes[1].set_xlabel("best-aspect EDP (J*s)")
+        axes[1].set_title("fig10: best aspect per workload")
+    f11 = rows_by_fig.get("fig11", [])
+    if f11:
+        curves: Dict[str, List[tuple]] = {}
+        for r in f11:
+            wname, bw = r["point"].rsplit("/", 1)
+            curves.setdefault(wname, []).append(
+                (float(bw.replace("gbps", "")), r.get("edp"))
+            )
+        for wname, pts in curves.items():
+            pts.sort()
+            axes[2].plot([b for b, _ in pts], [e for _, e in pts], "o-",
+                         label=wname)
+        axes[2].set_xscale("log")
+        axes[2].set_yscale("log")
+        axes[2].set_xlabel("fill bandwidth (GB/s)")
+        axes[2].set_ylabel("EDP (J*s)")
+        axes[2].set_title("fig11: EDP vs chiplet bandwidth")
+        axes[2].legend(fontsize=8)
+    fig.tight_layout()
+    p = out_dir / "edp_summary.png"
+    fig.savefig(p, dpi=120)
+    plt.close(fig)
+    written.append(str(p))
+    return written
+
+
+def run(bench_dir: str = "experiments/benchmarks",
+        out_dir: str | None = None) -> dict:
+    bdir = Path(bench_dir)
+    odir = Path(out_dir) if out_dir else bdir / "plots"
+    odir.mkdir(parents=True, exist_ok=True)
+    rows_by_fig = collect(bdir)
+    agg = _aggregate(rows_by_fig)
+    summary = {
+        "figures": sorted(rows_by_fig),
+        "aggregates": agg,
+        "rows": [r for rows in rows_by_fig.values() for r in rows],
+    }
+    (odir / "figures_summary.json").write_text(json.dumps(summary, indent=1))
+    plots = _plot(rows_by_fig, odir)
+    summary["plots"] = plots
+    for figure, a in agg.items():
+        print(
+            f"[plots] {figure:8s} {a['searches']:3d} searches, evals/s "
+            f"{a['evals_per_s_min']:>9,.0f} .. {a['evals_per_s_max']:>9,.0f} "
+            f"(mean {a['evals_per_s_mean']:>9,.0f}), store hits "
+            f"{a['store_hits']}, pruned {a['pruned']}"
+        )
+    print(f"[plots] summary -> {odir / 'figures_summary.json'}"
+          + (f", plots -> {', '.join(plots)}" if plots else " (no plots)"))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/benchmarks",
+                    help="directory holding the figure JSONs")
+    ap.add_argument("--out", default=None,
+                    help="output directory (default <dir>/plots)")
+    args = ap.parse_args()
+    run(bench_dir=args.dir, out_dir=args.out)

@@ -35,10 +35,13 @@ from dataclasses import dataclass, replace
 from time import perf_counter
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.architecture import Architecture
-from repro.core.cost.analysis import BATCH_EXACT_LIMIT, get_context
+from repro.core.cost.analysis import BATCH_EXACT_LIMIT, StackedBatch, get_context
 from repro.core.cost.base import Cost, CostModel
 from repro.core.cost.store import ResultStore
+from repro.core.genome_batch import GenomeBatch, RowCandidate
 from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-export)
 from repro.core.problem import Problem
 
@@ -63,9 +66,6 @@ class _FusedOutcome(NamedTuple):
     select: Optional[List[int]]  # admitted row indices into the batch
     stacked: Optional[object]  # StackedBatch to reuse on any fallback
     arrays: Optional[tuple]  # (latency, energy, util, extras) or None
-
-
-_FUSED_UNAVAILABLE = _FusedOutcome(False, None, None, None, None)
 
 
 @dataclass
@@ -326,6 +326,70 @@ class EvaluationEngine:
         self._store_put(cand, c)
         return c
 
+    def evaluate_genome_batch(
+        self,
+        gb: GenomeBatch,
+        incumbent: float = math.inf,
+        probe: int = 0,
+    ) -> List[Optional[Cost]]:
+        """Array-native :meth:`evaluate_batch` over a dense
+        :class:`GenomeBatch`: in-batch dedup is one ``np.unique`` row-hash
+        program, memo keys are raw row bytes (same granularity as the
+        per-genome tuple keys), and the miss-batch's ``StackedBatch`` is a
+        row SLICE of the batch matrices -- no per-candidate signature
+        tuples, Genome or Mapping objects are built on the batched
+        backends (scalar fallbacks materialize rows lazily). Counter
+        semantics match the list path exactly: every occurrence of a
+        memo-cached candidate counts a cache hit, a store hit counts once
+        and promotes (duplicates become cache hits), duplicates of a miss
+        or pruned candidate count once per batch.
+        """
+        if probe and incumbent == math.inf and len(gb) > probe:
+            head = self.evaluate_genome_batch(gb.select(slice(0, probe)))
+            inc = incumbent
+            for c in head:
+                if c is not None:
+                    s = c.metric(self.metric)
+                    if s < inc:
+                        inc = s
+            return head + self.evaluate_genome_batch(
+                gb.select(slice(probe, len(gb))), incumbent=inc
+            )
+
+        self.stats.batches += 1
+        self.stats.considered += len(gb)
+        results: List[Optional[Cost]] = [None] * len(gb)
+        rows2d = gb.key_rows()
+        pending: Dict = {}
+        order: List[Tuple[object, object]] = []
+        miss_rows: List[int] = []
+        for idx in range(len(gb)):
+            key = rows2d[idx].tobytes()
+            c = self._cache_get(key)
+            if c is not None:
+                results[idx] = c
+                continue
+            dup = pending.get(key)
+            if dup is not None:
+                dup.append(idx)
+                continue
+            cand = RowCandidate(gb, idx)
+            c = self._store_get(key, cand)
+            if c is not None:
+                results[idx] = c
+                continue
+            pending[key] = [idx]
+            order.append((key, cand))
+            miss_rows.append(idx)
+
+        stacked = (
+            gb.stacked(miss_rows)
+            if (order and self.backend is not None)
+            else None
+        )
+        self._serve_order(order, incumbent, results, pending, stacked=stacked)
+        return results
+
     def evaluate_batch(
         self,
         candidates: Sequence,
@@ -352,7 +416,13 @@ class EvaluationEngine:
         duplicates of a miss are: the bound runs once and ``stats.pruned``
         counts the candidate once per batch, mirroring the dedup semantics
         of ``evaluated``.
+
+        A :class:`GenomeBatch` is dispatched to the array-native
+        :meth:`evaluate_genome_batch` (identical semantics, dedup and
+        stacking as array programs).
         """
+        if isinstance(candidates, GenomeBatch):
+            return self.evaluate_genome_batch(candidates, incumbent, probe)
         if probe and incumbent == math.inf and len(candidates) > probe:
             head = self.evaluate_batch(candidates[:probe])
             inc = incumbent
@@ -385,6 +455,23 @@ class EvaluationEngine:
             pending[key] = [idx]
             order.append((key, cand))
 
+        self._serve_order(order, incumbent, results, pending)
+        return results
+
+    def _serve_order(
+        self,
+        order: List[Tuple[object, object]],
+        incumbent: float,
+        results: List[Optional[Cost]],
+        pending: Dict,
+        stacked=None,
+    ) -> None:
+        """Admission + scoring for one batch's unique non-hit candidates:
+        the shared tail of :meth:`evaluate_batch` (which stacks lazily
+        from signatures) and :meth:`evaluate_genome_batch` (which hands in
+        the row-sliced ``StackedBatch``). ``pending`` maps each key to its
+        duplicate result slots."""
+
         def commit(misses, costs):
             for (key, cand), c in zip(misses, costs):
                 self.stats.evaluated += 1
@@ -394,12 +481,11 @@ class EvaluationEngine:
                     results[idx] = c
 
         misses = order
-        stacked = None
         select: Optional[List[int]] = None
         decided = False  # admission decisions already made by the fused path
 
         if order and self.backend == "jax" and len(order) >= _BATCH_MIN:
-            fused = self._fused_admit_score(order, incumbent)
+            fused = self._fused_admit_score(order, incumbent, stacked=stacked)
             stacked = fused.stacked  # reused by every fallback below
             if fused.decided:
                 decided = True
@@ -420,7 +506,7 @@ class EvaluationEngine:
                         ),
                     )
                     self.stats.score_s += perf_counter() - t0
-                    return results
+                    return
                 # score guard tripped (arrays is None): the decisions
                 # stand and the shared scoring path below re-scores the
                 # admitted subset through the numpy/scalar flow.
@@ -442,7 +528,6 @@ class EvaluationEngine:
                 ),
             )
             self.stats.score_s += perf_counter() - t0
-        return results
 
     def _partition_admitted(self, order, admit):
         """Split a batch's unique candidates by admit flag, counting one
@@ -458,7 +543,9 @@ class EvaluationEngine:
                 self.stats.pruned += 1
         return misses, select
 
-    def _fused_admit_score(self, order, incumbent: float) -> "_FusedOutcome":
+    def _fused_admit_score(
+        self, order, incumbent: float, stacked=None
+    ) -> "_FusedOutcome":
         """Single-dispatch fused admit+score for one miss-batch (jax
         backend): one jitted program covers bound -> admit mask ->
         traffic -> energy; only per-candidate scalars return to host, and
@@ -477,10 +564,12 @@ class EvaluationEngine:
         """
         runner = self._get_fused_runner()
         if runner is None:
-            return _FUSED_UNAVAILABLE
+            return _FusedOutcome(False, None, None, stacked, None)
         t0 = perf_counter()
-        sigs = [self.signature(cand) for _key, cand in order]
-        sb = self._ctx.stacked_batch(sigs)
+        sb = stacked
+        if sb is None:
+            sigs = [self.signature(cand) for _key, cand in order]
+            sb = self._ctx.stacked_batch(sigs)
         inc = incumbent if (self.prune and incumbent != math.inf) else math.inf
         out = runner(sb, inc)
         if out is None:
@@ -526,6 +615,41 @@ class EvaluationEngine:
             self._fused_runner = runner
         return self._fused_runner
 
+    def warmup(self, batch_sizes: Sequence[int]) -> int:
+        """Bucketed warmup: pre-trace the fused jax admit+score program at
+        the pow2 buckets the given miss-batch sizes pad to, so first-batch
+        retrace stalls disappear from ``admit_s``/``score_s`` during the
+        timed search. No-op on non-jax backends or when the model has no
+        fused path. Warmup rows are synthetic (the all-serial trivial
+        candidate, tiled): results are discarded and neither the memo, the
+        store nor the engine counters are touched -- only the context's
+        ``jax_dispatches`` advances. Returns the number of buckets traced
+        (already-compiled buckets re-dispatch in microseconds, so calling
+        this repeatedly is safe)."""
+        if self.backend != "jax":
+            return 0
+        runner = self._get_fused_runner()
+        if runner is None:
+            return 0
+        n = self.arch.n_levels
+        D = len(self._dims)
+        buckets = sorted(
+            {
+                1 << max(0, (int(b) - 1).bit_length())
+                for b in batch_sizes
+                if b and int(b) >= _BATCH_MIN
+            }
+        )
+        done = 0
+        for b in buckets:
+            tt = np.ones((b, n, D), dtype=np.int64)
+            st = np.ones((b, n, D), dtype=np.int64)
+            perm = np.tile(np.arange(D, dtype=np.int64), (b, n, 1))
+            if runner(StackedBatch(tt, st, perm), math.inf) is None:
+                break  # jax broke mid-flight; the engine will fall back
+            done += 1
+        return done
+
     def _admit_batch(self, order, incumbent: float, stacked=None):
         """Admission decisions for the unique non-hit candidates of one
         batch: True = evaluate, False = prune. One vectorized bound program
@@ -538,10 +662,11 @@ class EvaluationEngine:
             and self._lb_batch_fn is not None
             and len(order) >= _BATCH_MIN
         ):
-            sigs = [self.signature(cand) for _key, cand in order]
             if sb is None:
-                sb = self._ctx.stacked_batch(sigs)
-            lb = self._lb_batch_fn(sigs, backend=self.backend, stacked=sb)
+                sb = self._ctx.stacked_batch(
+                    [self.signature(cand) for _key, cand in order]
+                )
+            lb = self._lb_batch_fn(None, backend=self.backend, stacked=sb)
             if lb is not None:
                 scal = self._scalarize_batch(*lb)
                 return [bool(v < incumbent) for v in scal], sb
@@ -562,7 +687,13 @@ class EvaluationEngine:
             if self.backend is not None and (
                 stacked is not None or len(misses) >= _BATCH_MIN
             ):
-                sigs = [self.signature(cand) for _key, cand in misses]
+                # with a pre-stacked batch the models never touch the
+                # signatures -- the array program runs off the matrices
+                sigs = (
+                    None
+                    if stacked is not None
+                    else [self.signature(cand) for _key, cand in misses]
+                )
                 costs = self.cost_model.evaluate_signature_batch(
                     self.problem,
                     self.arch,

@@ -300,15 +300,21 @@ class ResultStore:
                 fcntl.flock(lf, fcntl.LOCK_UN)
 
     def flush(self) -> int:
-        """Write dirty spaces to the disk tier (atomic per space); returns
-        the number of entries persisted. No-op without a path.
+        """Write dirty spaces to the disk tier as ONE atomic write pass:
+        the directory lock is acquired once and every dirty space is
+        merged and atomically replaced under it -- a figure sweep touching
+        many (problem, arch, model) spaces pays one lock round-trip
+        instead of one per space, and no interleaving writer can observe
+        (or race into) a half-flushed set of spaces. Returns the number of
+        entries persisted. No-op without a path.
 
-        Concurrent writers sharing a directory are lossless: under an
-        advisory per-space lock, the on-disk file is re-read and UNIONED
-        with the in-memory view right before the atomic replace, so
-        entries another process flushed since our lazy load are preserved
-        (identical keys are identical Costs by construction, so merge
-        order is immaterial).
+        Concurrent writers sharing a directory are lossless: under the
+        lock, each space's on-disk file is re-read and UNIONED with the
+        in-memory view right before its atomic replace, so entries another
+        process flushed since our lazy load are preserved (identical keys
+        are identical Costs by construction, so merge order is
+        immaterial) -- including writers whose dirty sets cover DIFFERENT
+        spaces (disjoint files never collide; shared ones union).
 
         With ``max_entries_per_space`` set, the merged union is LRU-
         compacted to the cap before the replace: prior-file entries not
@@ -319,13 +325,16 @@ class ResultStore:
         if self.path is None:
             self._dirty.clear()
             return 0
+        dirty = sorted(self._dirty)
+        if not dirty:
+            return 0
         self.path.mkdir(parents=True, exist_ok=True)
         cap = self.max_entries_per_space
         written = 0
-        for skey in sorted(self._dirty):
-            d = self._spaces[skey]
-            mem = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
-            with self._store_lock():
+        with self._store_lock():
+            for skey in dirty:
+                d = self._spaces[skey]
+                mem = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
                 merged: "OrderedDict[str, object]" = OrderedDict()
                 try:
                     prior = json.loads((self.path / f"{skey}.json").read_text())
@@ -350,7 +359,7 @@ class ResultStore:
                 tmp = self.path / f".{skey}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
                 tmp.write_text(json.dumps(payload, separators=(",", ":")))
                 tmp.replace(self.path / f"{skey}.json")
-            written += len(merged)
+                written += len(merged)
         self._dirty.clear()
         return written
 

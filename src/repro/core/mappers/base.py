@@ -122,13 +122,28 @@ class Mapper(abc.ABC):
     ) -> "_Tracker":
         return _Tracker(metric, engine)
 
+    def batch_hints(self) -> List[int]:
+        """Miss-batch sizes this mapper's searches are likely to dispatch
+        -- consumed by ``EvaluationEngine.warmup`` (bucketed pre-tracing
+        of the fused jax program) before a sweep's timed searches. Purely
+        advisory: an empty list just skips warmup."""
+        return []
+
 
 class _Tracker:
-    """Shared incumbent tracking for all mappers."""
+    """Shared incumbent tracking for all mappers.
+
+    The engine's counters are snapshotted at construction and reported as
+    DIFFS, so a shared engine (``union_opt_sweep`` reuses one engine --
+    memo cache, compiled runners and all -- across every search over the
+    same space) still yields correct per-search stats. For the classic
+    one-engine-per-search flow the snapshot is all zeros and nothing
+    changes."""
 
     def __init__(self, metric: str, engine: Optional[EvaluationEngine] = None) -> None:
         self.metric = metric
         self.engine = engine
+        self._stats_base = engine.stats.snapshot() if engine is not None else None
         self.best_mapping: Optional[Mapping] = None
         self.best_cost: Optional[Cost] = None
         self.best_metric_value: float = math.inf
@@ -147,8 +162,33 @@ class _Tracker:
             return True
         return False
 
+    def offer_lazy(self, make, cost: Cost, score: Optional[float] = None) -> bool:
+        """:meth:`offer` for array-native batches: ``make()`` materializes
+        the candidate (a GenomeBatch row -> Genome) ONLY when it improves
+        the incumbent, so scanning a batch's costs touches no per-row
+        Python objects for the non-improving majority. ``score`` passes an
+        already-computed metric value (callers that also need the fitness
+        avoid scoring twice)."""
+        self.evaluated += 1
+        if score is None:
+            score = cost.metric(self.metric)
+        if self.best_cost is None or score < self.best_metric_value:
+            self.best_mapping = make()
+            self.best_cost = cost
+            self.best_metric_value = score
+            self.trajectory.append((self.evaluated, score))
+            return True
+        return False
+
     def result(self) -> SearchResult:
         stats = self.engine.stats if self.engine is not None else None
+        base = self._stats_base
+
+        def delta(attr, zero=0):
+            if stats is None:
+                return zero
+            return getattr(stats, attr) - getattr(base, attr)
+
         best = self.best_mapping
         if best is not None and not isinstance(best, Mapping):
             best = best.to_mapping()  # chain-level genome -> Mapping
@@ -159,12 +199,12 @@ class _Tracker:
             evaluated=self.evaluated,
             elapsed_s=time.time() - self.t0,
             trajectory=self.trajectory,
-            cache_hits=stats.cache_hits if stats else 0,
-            pruned=stats.pruned if stats else 0,
-            analyzed=stats.evaluated if stats else 0,
-            store_hits=stats.store_hits if stats else 0,
-            considered=stats.considered if stats else 0,
-            fused_dispatches=stats.fused_dispatches if stats else 0,
-            admit_s=stats.admit_s if stats else 0.0,
-            score_s=stats.score_s if stats else 0.0,
+            cache_hits=delta("cache_hits"),
+            pruned=delta("pruned"),
+            analyzed=delta("evaluated"),
+            store_hits=delta("store_hits"),
+            considered=delta("considered"),
+            fused_dispatches=delta("fused_dispatches"),
+            admit_s=delta("admit_s", 0.0),
+            score_s=delta("score_s", 0.0),
         )

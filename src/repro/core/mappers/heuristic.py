@@ -21,6 +21,16 @@ speculated candidates past an accepted move were evaluated and cached,
 so a later re-draw the serial walk would bound-prune can instead be
 served from cache and offered -- ``SearchResult.evaluated`` and
 trajectory step indices may differ slightly from ``chunk=1``.
+
+The neighbor batches themselves are ARRAY-NATIVE: mutations are drawn at
+the genome level (``mutate_genome`` -- the identical RNG stream
+``space.mutate`` consumes, so the serial-equivalence contract is
+untouched) and each chunk is submitted as one dense
+:class:`~repro.core.genome_batch.GenomeBatch`, so the engine dedups by
+row hash and slices the admission/scoring StackedBatch straight out of
+the chunk matrices instead of building per-candidate signature tuples.
+No seed-versioning applies here: the climb's stream is pinned by the
+accepted-move contract.
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ from typing import Dict, List, Optional
 
 from repro.core.cost.base import CostModel
 from repro.core.cost.engine import EvaluationEngine
+from repro.core.genome_batch import GenomeBatch
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapping import LevelMapping, Mapping
 from repro.core.mapspace import MapSpace
@@ -58,6 +69,9 @@ class HeuristicMapper(Mapper):
         self.seed = seed
         self.chunk = chunk
         self.probe = probe
+
+    def batch_hints(self):
+        return [self.chunk, self.probe]
 
     # ------------------------------------------------------------------ #
     def _greedy_seed(self, space: MapSpace, rng: random.Random) -> Mapping:
@@ -172,21 +186,25 @@ class HeuristicMapper(Mapper):
                     if s < best_s:
                         m, best, best_s = cand, c, s
                 continue
+            g = space._genome_of(m)
             steps = 0
             while steps < steps_per_restart:
                 k = min(self.chunk, steps_per_restart - steps)
                 # Speculate k mutations of the CURRENT incumbent. The RNG
                 # state before each draw is recorded so an accepted move
                 # can rewind to exactly where the serial walk would be
-                # (mutate is deterministic in (mapping, rng state), so the
-                # replayed prefix is byte-identical).
+                # (mutate is deterministic in (genome, rng state), so the
+                # replayed prefix is byte-identical). Genome-level draws
+                # consume the identical stream ``space.mutate`` would.
                 states = []
                 cands = []
                 for _ in range(k):
                     states.append(rng.getstate())
-                    cands.append(space.mutate(m, rng))
+                    cands.append(space.mutate_genome(g, rng))
                 costs = engine.evaluate_batch(
-                    cands, incumbent=best_s, probe=self.probe
+                    GenomeBatch.from_genomes(space, cands),
+                    incumbent=best_s,
+                    probe=self.probe,
                 )
                 accepted = None
                 for j, (cand, c) in enumerate(zip(cands, costs)):
@@ -196,7 +214,7 @@ class HeuristicMapper(Mapper):
                     s = c.metric(metric)
                     if s < best_s:
                         accepted = j
-                        m, best, best_s = cand, c, s
+                        g, best, best_s = cand, c, s
                         break
                 if accepted is None:
                     steps += k

@@ -2,19 +2,34 @@
 
 Samples are drawn in chunks and scored through the evaluation engine:
 bound-dominated candidates are pruned before the reuse analysis, the rest
-are batch-evaluated (pool fan-out when the engine has workers). Candidate
-generation touches only the RNG, so chunking preserves the exact sample
-stream -- and a pruned candidate provably cannot improve the incumbent --
-which keeps results identical to one-at-a-time evaluation for fixed seeds.
+are batch-evaluated (pool fan-out when the engine has workers).
+
+``seed_version`` selects the candidate generator:
+
+  * ``2`` (default) -- ARRAY-NATIVE: each chunk is one
+    :class:`~repro.core.genome_batch.GenomeBatch` drawn by the vectorized
+    counter-based (Philox) sampler -- chain choices, fanout repair,
+    order shuffles and legality run as array programs over the whole
+    chunk, and the engine consumes the dense rows directly (row-hash
+    dedup, sliced StackedBatch). Candidates depend only on
+    ``(seed, chunk sequence)``; generation never touches the engine
+    backend, so results are bit-identical across scalar/numpy/jax.
+  * ``1`` -- the historical per-candidate ``random.Random`` stream
+    (bit-exact with every pre-batch release for fixed seeds).
+
+Within a version, chunking preserves the exact sample stream -- and a
+pruned candidate provably cannot improve the incumbent -- so results are
+identical to one-at-a-time evaluation for fixed seeds.
 """
 
 from __future__ import annotations
 
 import random
-from typing import Optional
+from typing import List, Optional
 
 from repro.core.cost.base import CostModel
 from repro.core.cost.engine import EvaluationEngine
+from repro.core.genome_batch import philox_rng, random_genome_batch
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapspace import MapSpace
 
@@ -29,6 +44,7 @@ class RandomMapper(Mapper):
         patience: int = 0,
         batch_size: int = 128,
         probe: int = 8,
+        seed_version: int = 2,
     ) -> None:
         """``patience``: stop after this many consecutive non-improving
         samples (0 = never early-stop), mirroring Timeloop's victory
@@ -37,12 +53,20 @@ class RandomMapper(Mapper):
         the first ``probe`` candidates of a batch are scored unpruned and
         their best seeds the bound filter for the rest (0 disables). The
         sample stream is independent of chunking and pruning is exact, so
-        results are identical for any ``probe``."""
+        results are identical for any ``probe``. ``seed_version``: 2 for
+        the vectorized batch sampler (default), 1 for the historical
+        scalar stream."""
         self.samples = samples
         self.seed = seed
         self.patience = patience
         self.batch_size = batch_size
         self.probe = probe
+        self.seed_version = seed_version
+
+    def batch_hints(self) -> List[int]:
+        first = min(self.batch_size, self.samples)
+        tail = self.samples % self.batch_size
+        return [self.probe, first - self.probe, first, tail]
 
     def search(
         self,
@@ -52,20 +76,28 @@ class RandomMapper(Mapper):
         engine: Optional[EvaluationEngine] = None,
     ) -> SearchResult:
         engine = self._mk_engine(space, cost_model, metric, engine)
-        rng = random.Random(self.seed)
         tr = self._mk_result(metric, engine)
+        v2 = self.seed_version >= 2
+        rng = philox_rng(self.seed) if v2 else random.Random(self.seed)
         stale = 0
         remaining = self.samples
         while remaining > 0:
             k = min(self.batch_size, remaining)
             remaining -= k
-            batch = [space.random_genome(rng) for _ in range(k)]
+            if v2:
+                batch = random_genome_batch(space, rng, k)
+            else:
+                batch = [space.random_genome(rng) for _ in range(k)]
             costs = engine.evaluate_batch(
                 batch, incumbent=tr.best_metric_value, probe=self.probe
             )
             stop = False
-            for m, c in zip(batch, costs):
-                if c is not None and tr.offer(m, c):
+            for i, c in enumerate(costs):
+                if c is not None and (
+                    tr.offer_lazy(lambda b=i: batch.genome(b), c)
+                    if v2
+                    else tr.offer(batch[i], c)
+                ):
                     stale = 0
                 else:
                     # pruned candidates are provably non-improving

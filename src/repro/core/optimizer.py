@@ -12,12 +12,20 @@ constraint file, a mapper choice and a cost-model choice, Union-opt:
 This is the single entry point used by the case-study benchmarks AND by
 the sharding auto-tuner (repro/sharding/auto.py) that turns mappings into
 PartitionSpecs/BlockSpecs -- the co-design loop closure.
+
+:func:`union_opt_sweep` is the MULTI-SEARCH form figure runs go through:
+a list of :class:`SweepTask` points shares one
+:class:`~repro.core.cost.engine.EvaluationEngine` per distinct
+(cost model, problem, arch, metric) space -- memo cache, compiled array
+programs and fused jitted runners included -- plus one optional
+:class:`ResultStore` and a bucketed jax warmup pass, so retraces and
+repeated scoring amortize across the whole sweep instead of per call.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Union as TUnion
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union as TUnion
 
 from repro.core.architecture import Architecture
 from repro.core.constraints import Constraints
@@ -132,3 +140,184 @@ def union_opt(
         cost_model=cm.name,
         metric=metric,
     )
+
+
+# --------------------------------------------------------------------- #
+# Multi-problem fused sweeps
+# --------------------------------------------------------------------- #
+@dataclass
+class SweepTask:
+    """One point of a :func:`union_opt_sweep`: the same knobs one
+    ``union_opt`` call takes, as data. ``tag`` is an opaque caller label:
+    solutions come back in task order, so callers recover it by zipping
+    tasks with the result (``zip(tasks, sweep)`` -- how the figure
+    benchmarks key their tables)."""
+
+    workload: "TUnion[Problem, LayerOp]"
+    arch: Architecture
+    mapper: "TUnion[str, Mapper]" = "heuristic"
+    cost_model: "TUnion[str, CostModel]" = "timeloop"
+    metric: str = "edp"
+    constraints: Optional[Constraints] = None
+    mapper_kw: dict = field(default_factory=dict)
+    tag: Optional[object] = None
+
+
+@dataclass
+class SweepResult:
+    """Solutions (in task order) + sweep-level sharing/throughput stats."""
+
+    solutions: List[UnionSolution]
+    stats: dict
+
+    def __iter__(self):
+        return iter(self.solutions)
+
+    def __getitem__(self, i):
+        return self.solutions[i]
+
+    def __len__(self):
+        return len(self.solutions)
+
+
+def union_opt_sweep(
+    tasks: Sequence["TUnion[SweepTask, dict]"],
+    *,
+    engine_backend: Optional[str] = "numpy",
+    engine_workers: int = 0,
+    engine_cache: int = 1 << 16,
+    engine_prune: bool = True,
+    result_store: Optional[ResultStore] = None,
+    warmup: bool = True,
+) -> SweepResult:
+    """Run a whole figure sweep through SHARED evaluation machinery.
+
+    Tasks are grouped by their persistent-store space key -- the digest of
+    (cost model config, problem content, arch content) -- plus metric and
+    backend, and each group shares ONE :class:`EvaluationEngine`: its memo
+    cache carries results between that group's searches (e.g. fig8 scores
+    each problem with a heuristic AND a random mapper -- the second search
+    starts warm), and its compiled array programs / fused jitted runners
+    are built once. Content-equal problems and archs from different
+    constructor calls alias the same analysis context (see
+    ``get_context``), so even cross-group tasks reuse traced programs
+    where shapes and constants agree. Per-task ``SearchResult`` counters
+    stay per-search (the tracker diffs engine snapshots).
+
+    ``warmup=True`` pre-traces each group's fused jax runner at the pow2
+    buckets its mappers' ``batch_hints`` pad to (no-op on numpy/scalar
+    backends), so first-batch retrace stalls disappear from the timed
+    searches' ``admit_s``/``score_s``.
+
+    ``result_store`` is shared by every task and flushed ONCE at the end
+    (one atomic multi-space write pass; see ``ResultStore.flush``) --
+    callers that keep the store open may flush again later, flushing here
+    is not destructive.
+    """
+    from repro.core.cost.store import space_key as _space_key
+
+    resolved = []
+    for t in tasks:
+        if isinstance(t, dict):
+            t = SweepTask(**t)
+        problem = (
+            lower_layer_to_problem(t.workload)
+            if isinstance(t.workload, LayerOp)
+            else t.workload
+        )
+        cm = (
+            COST_MODEL_REGISTRY[t.cost_model]()
+            if isinstance(t.cost_model, str)
+            else t.cost_model
+        )
+        rep = conformable_models(problem, [cm])
+        ok, why = rep.results.get(cm.name, (cm.conformable(problem), "model check"))
+        if not ok:
+            raise ValueError(
+                f"problem {problem.name!r} is not conformable to cost model "
+                f"{cm.name!r}: {why}"
+            )
+        mp = (
+            MAPPER_REGISTRY[t.mapper](**t.mapper_kw)
+            if isinstance(t.mapper, str)
+            else t.mapper
+        )
+        resolved.append((t, problem, cm, mp))
+
+    engines: Dict[object, tuple] = {}
+    solutions: List[UnionSolution] = []
+    warmed = 0
+    try:
+        for t, problem, cm, mp in resolved:
+            gkey = (
+                _space_key(cm, problem, t.arch),
+                t.metric,
+                engine_backend,
+                engine_prune,
+            )
+            ent = engines.get(gkey)
+            if ent is None:
+                engine = EvaluationEngine(
+                    cm,
+                    problem,
+                    t.arch,
+                    metric=t.metric,
+                    cache_size=engine_cache,
+                    prune=engine_prune,
+                    workers=engine_workers,
+                    backend=engine_backend,
+                    store=result_store,
+                )
+                engines[gkey] = ent = (engine, problem, t.arch)
+            engine, gproblem, garch = ent
+            if warmup:
+                # idempotent per bucket: already-traced sizes re-dispatch
+                # in microseconds
+                warmed += engine.warmup(mp.batch_hints())
+            # the search runs over the group's canonical objects (their
+            # content is identical by the space key), but the solution
+            # keeps the TASK's own problem identity -- space_key excludes
+            # names, so content-equal workloads with different names must
+            # not swap identities
+            space = MapSpace(gproblem, garch, t.constraints)
+            res = mp.search(space, engine.cost_model, t.metric, engine=engine)
+            if res.best_mapping is None:
+                raise RuntimeError(
+                    f"mapper {mp.name} found no legal mapping for {problem.name}"
+                )
+            solutions.append(
+                UnionSolution(
+                    problem=problem,
+                    mapping=res.best_mapping,
+                    cost=res.best_cost,
+                    search=res,
+                    mapper=mp.name,
+                    cost_model=engine.cost_model.name,
+                    metric=t.metric,
+                )
+            )
+    finally:
+        for engine, _p, _a in engines.values():
+            engine.close()
+        if result_store is not None:
+            # flush even when a task raises: every completed task's fresh
+            # Costs persist (flushing is never destructive)
+            result_store.flush()
+    agg = {
+        "tasks": len(solutions),
+        "engines": len(engines),
+        "engine_backend": engine_backend,
+        "warmed_buckets": warmed,
+        "considered": sum(s.search.considered for s in solutions),
+        "analyzed": sum(s.search.analyzed for s in solutions),
+        "cache_hits": sum(s.search.cache_hits for s in solutions),
+        "store_hits": sum(s.search.store_hits for s in solutions),
+        "pruned": sum(s.search.pruned for s in solutions),
+        "fused_dispatches": sum(s.search.fused_dispatches for s in solutions),
+        "elapsed_s": round(sum(s.search.elapsed_s for s in solutions), 4),
+    }
+    scored = sum(s.search.scored for s in solutions)
+    agg["evals_per_s"] = (
+        round(scored / agg["elapsed_s"], 1) if agg["elapsed_s"] > 0 else 0.0
+    )
+    return SweepResult(solutions, agg)

@@ -422,6 +422,63 @@ def test_store_concurrent_flush_union_of_survivors(tmp_path):
     assert sigs[8] in survivors and sigs[9] in survivors
 
 
+def test_store_multi_space_flush_concurrent_writers_union(tmp_path):
+    """Multi-space flush batching: one flush call writes ALL dirty spaces
+    in a single atomic pass (one lock acquisition), and concurrent
+    writers whose dirty sets cover DIFFERENT spaces -- plus one shared
+    space -- still union losslessly on disk."""
+    import threading
+
+    arch_e, arch_c = edge_accelerator(), cloud_accelerator()
+    cm = TimeloopLikeModel()
+    key_e = space_key(cm, GEMM, arch_e)
+    key_c = space_key(cm, GEMM, arch_c)
+    key_conv = space_key(cm, CONV, arch_e)
+    sigs_e = _sig_pool(GEMM, arch_e, 6)
+    sigs_c = _sig_pool(GEMM, arch_c, 6)
+    sigs_v = _sig_pool(CONV, arch_e, 6)
+    ce = {s: cm.evaluate_signature(GEMM, arch_e, s) for s in sigs_e}
+    cc = {s: cm.evaluate_signature(GEMM, arch_c, s) for s in sigs_c}
+    cv = {s: cm.evaluate_signature(CONV, arch_e, s) for s in sigs_v}
+
+    a = ResultStore(tmp_path / "s")
+    b = ResultStore(tmp_path / "s")
+    # writer a: edge space + half the shared conv space
+    for s in sigs_e:
+        a.put(key_e, s, ce[s])
+    for s in sigs_v[:3]:
+        a.put(key_conv, s, cv[s])
+    # writer b: cloud space + the other half of the shared conv space
+    for s in sigs_c:
+        b.put(key_c, s, cc[s])
+    for s in sigs_v[3:]:
+        b.put(key_conv, s, cv[s])
+    assert len(a._dirty) == 2 and len(b._dirty) == 2
+
+    errs = []
+
+    def flush(st):
+        try:
+            st.flush()
+        except Exception as e:  # pragma: no cover - diagnostic
+            errs.append(e)
+
+    ta, tb = threading.Thread(target=flush, args=(a,)), threading.Thread(
+        target=flush, args=(b,)
+    )
+    ta.start(), tb.start()
+    ta.join(), tb.join()
+    assert not errs
+    assert not a._dirty and not b._dirty
+
+    merged = ResultStore(tmp_path / "s")
+    assert all(merged.get(key_e, s) is not None for s in sigs_e)
+    assert all(merged.get(key_c, s) is not None for s in sigs_c)
+    assert all(merged.get(key_conv, s) is not None for s in sigs_v)
+    # flush with no dirty spaces is a cheap no-op
+    assert a.flush() == 0
+
+
 def test_store_space_key_canonicalizes_numpy_scalars():
     """numpy scalar arch attrs must not fork the space key: repr() of
     np.float64(x) differs from repr(x) on numpy>=2, which silently

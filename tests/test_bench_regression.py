@@ -18,11 +18,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.mappers_bench import check_regression  # noqa: E402
 
 
-def _summary(rows: dict, smoke=True, backend="numpy") -> dict:
+def _summary(rows: dict, smoke=True, backends=("numpy",)) -> dict:
     return {
         "problem": "BERT-2",
         "smoke": smoke,
-        "engine_backend": backend,
+        "engine_backends": list(backends),
         "evals_per_s": dict(rows),
         "cache_hit_rate": {k: 0.1 for k in rows},
         "pruned": {k: 5 for k in rows},
@@ -85,10 +85,41 @@ def test_regression_not_recorded_on_failure(tmp_path):
 
 def test_matrix_mismatch_skips_gate(tmp_path, capsys):
     path = tmp_path / "BENCH_mappers.json"
-    path.write_text(json.dumps(_summary({"timeloop/random": 10000}, backend="numpy")))
+    path.write_text(json.dumps(_summary({"numpy/timeloop/random": 10000})))
     check_regression(
-        _summary({"timeloop/random": 1}, backend="jax"), path, margin=0.5
+        _summary({"numpy/timeloop/random": 1}, smoke=False), path, margin=0.5
     )
     assert "matrix differs" in capsys.readouterr().out
     # and the baseline was left alone
-    assert json.loads(path.read_text())["evals_per_s"] == {"timeloop/random": 10000}
+    assert json.loads(path.read_text())["evals_per_s"] == {
+        "numpy/timeloop/random": 10000
+    }
+
+
+def test_backend_rows_gate_independently(tmp_path, capsys):
+    """Per-backend keys: a jax row never gates a numpy row; a first-run
+    backend's rows bootstrap (warn-and-record) while existing backends
+    keep their floors."""
+    path = tmp_path / "BENCH_mappers.json"
+    path.write_text(json.dumps(_summary({"numpy/timeloop/random": 10000})))
+    summary = _summary(
+        {"numpy/timeloop/random": 11000, "jax/timeloop/random": 7000},
+        backends=("numpy", "jax"),
+    )
+    check_regression(summary, path, margin=0.5)  # new backend: warn, record
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "jax/timeloop/random" in out
+    base = json.loads(path.read_text())
+    assert base["evals_per_s"]["jax/timeloop/random"] == 7000
+    assert base["evals_per_s"]["numpy/timeloop/random"] == 10000
+    # the recorded jax floor now gates jax runs
+    import pytest as _pytest
+    with _pytest.raises(SystemExit):
+        check_regression(
+            _summary(
+                {"numpy/timeloop/random": 11000, "jax/timeloop/random": 1000},
+                backends=("numpy", "jax"),
+            ),
+            path,
+            margin=0.5,
+        )

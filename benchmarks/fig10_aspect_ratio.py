@@ -14,6 +14,7 @@ import argparse
 import json
 from pathlib import Path
 
+from benchmarks.sweep_cli import add_sweep_args, deterministic_stats, sweep_kwargs
 from benchmarks.workloads import CLOUD_ASPECTS, EDGE_ASPECTS, dnn_layers
 from repro.core.architecture import cloud_accelerator, edge_accelerator
 from repro.core.cost import ResultStore
@@ -23,7 +24,7 @@ OUT = Path("experiments/benchmarks")
 
 
 def run(store_dir: str | None = None, store_cap: int | None = None,
-        backend: str = "numpy") -> dict:
+        backend: str = "numpy", sweep_kw: dict | None = None) -> dict:
     """The whole figure is ONE ``union_opt_sweep``: every
     (deployment, workload, aspect) point becomes a task, so the sweep
     shares the result store, aliases content-equal analysis contexts, and
@@ -47,7 +48,8 @@ def run(store_dir: str | None = None, store_cap: int | None = None,
                     cost_model="maestro", metric="edp",
                     tag=(tag, wname, "x".join(map(str, aspect))),
                 ))
-    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store,
+                            **(sweep_kw or {}))
     result = {"figure": "fig10", "edge": {}, "cloud": {}, "sweep": sweep.stats}
     for task, sol in zip(tasks, sweep):
         tag, wname, aspect = task.tag
@@ -62,8 +64,9 @@ def run(store_dir: str | None = None, store_cap: int | None = None,
                   f"(util {row[best]['util']:.0%})")
     if store is not None:
         store.flush()
-        result["result_store"] = store.stats_dict()
-        print(f"[fig10] result store: {result['result_store']}")
+        if not deterministic_stats():  # hit counts shift with store warmth
+            result["result_store"] = store.stats_dict()
+            print(f"[fig10] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig10.json").write_text(json.dumps(result, indent=1))
     return result
@@ -79,5 +82,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="numpy",
                     choices=["numpy", "jax", "none"],
                     help="evaluation-engine array backend for the sweep")
+    add_sweep_args(ap)
     args = ap.parse_args()
-    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend)
+    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend,
+        sweep_kw=sweep_kwargs(args))

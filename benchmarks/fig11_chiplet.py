@@ -12,6 +12,7 @@ import argparse
 import json
 from pathlib import Path
 
+from benchmarks.sweep_cli import add_sweep_args, deterministic_stats, sweep_kwargs
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import chiplet_accelerator
 from repro.core.cost import ResultStore
@@ -22,7 +23,7 @@ BWS = [0.125e9, 0.25e9, 0.5e9, 1e9, 2e9, 4e9, 6e9, 8e9, 12e9, 16e9, 32e9]
 
 
 def run(store_dir: str | None = None, store_cap: int | None = None,
-        backend: str = "numpy") -> dict:
+        backend: str = "numpy", sweep_kw: dict | None = None) -> dict:
     """One ``union_opt_sweep`` over every (workload, bandwidth) point:
     shared store, content-aliased contexts, per-space bucketed warmup
     under ``--backend jax``."""
@@ -39,7 +40,8 @@ def run(store_dir: str | None = None, store_cap: int | None = None,
         for wname, problem in layers.items()
         for bw in BWS
     ]
-    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store,
+                            **(sweep_kw or {}))
     sols = {t.tag: s for t, s in zip(tasks, sweep)}
     result = {
         "figure": "fig11",
@@ -68,8 +70,9 @@ def run(store_dir: str | None = None, store_cap: int | None = None,
               f"saturates at ~{sat/1e9:g} GB/s")
     if store is not None:
         store.flush()
-        result["result_store"] = store.stats_dict()
-        print(f"[fig11] result store: {result['result_store']}")
+        if not deterministic_stats():  # hit counts shift with store warmth
+            result["result_store"] = store.stats_dict()
+            print(f"[fig11] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig11.json").write_text(json.dumps(result, indent=1))
     return result
@@ -85,5 +88,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="numpy",
                     choices=["numpy", "jax", "none"],
                     help="evaluation-engine array backend for the sweep")
+    add_sweep_args(ap)
     args = ap.parse_args()
-    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend)
+    run(store_dir=args.store, store_cap=args.store_cap, backend=args.backend,
+        sweep_kw=sweep_kwargs(args))

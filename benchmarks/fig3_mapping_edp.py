@@ -19,6 +19,7 @@ import json
 import random
 from pathlib import Path
 
+from benchmarks.sweep_cli import add_sweep_args, deterministic_stats, sweep_kwargs
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import edge_accelerator
 from repro.core.cost import EvaluationEngine, ResultStore, TimeloopLikeModel
@@ -29,7 +30,8 @@ OUT = Path("experiments/benchmarks")
 
 
 def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
-        store_cap: int | None = None, backend: str = "numpy") -> dict:
+        store_cap: int | None = None, backend: str = "numpy",
+        sweep_kw: dict | None = None) -> dict:
     problem = dnn_layers()["DLRM-1"]
     arch = edge_accelerator(aspect=(16, 16))
     cm = TimeloopLikeModel()
@@ -56,6 +58,7 @@ def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
                    metric="edp")],
         engine_backend=backend,
         result_store=store,
+        **(sweep_kw or {}),
     )
     best = sweep[0]
     rows.sort(key=lambda r: r["edp"])
@@ -80,7 +83,8 @@ def run(samples: int = 300, seed: int = 0, store_dir: str | None = None,
     }
     if store is not None:
         store.flush()
-        result["result_store"] = store.stats_dict()
+        if not deterministic_stats():  # hit counts shift with store warmth
+            result["result_store"] = store.stats_dict()
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig3.json").write_text(json.dumps(result, indent=1))
     print(f"[fig3] DLRM-1 on 16x16: EDP spread x{result['edp_spread']:.1f} "
@@ -106,6 +110,8 @@ if __name__ == "__main__":
                     help="evaluation-engine array backend for sampling and "
                          "search (jax = fused single-dispatch pipeline with "
                          "bucketed warmup)")
+    add_sweep_args(ap)
     args = ap.parse_args()
     run(samples=args.samples, seed=args.seed, store_dir=args.store,
-        store_cap=args.store_cap, backend=args.backend)
+        store_cap=args.store_cap, backend=args.backend,
+        sweep_kw=sweep_kwargs(args))

@@ -27,6 +27,7 @@ import argparse
 import json
 from pathlib import Path
 
+from benchmarks.sweep_cli import add_sweep_args, deterministic_stats, sweep_kwargs
 from benchmarks.workloads import tc_problems
 from repro.core.architecture import cloud_accelerator
 from repro.core.constraints import Constraints
@@ -59,7 +60,8 @@ def ttgt_total_edp(cost, plan, arch, include_transpose: bool = True,
 
 
 def run(include_transpose_cost: bool = True, store_dir: str | None = None,
-        store_cap: int | None = None, backend: str = "numpy") -> dict:
+        store_cap: int | None = None, backend: str = "numpy",
+        sweep_kw: dict | None = None) -> dict:
     """The whole figure is ONE ``union_opt_sweep``: every (problem, side,
     space-mode, mapper) combination is a task. The heuristic and random
     searches over the same (problem, space) SHARE one engine -- the
@@ -86,7 +88,8 @@ def run(include_transpose_cost: bool = True, store_dir: str | None = None,
                         metric="edp", constraints=cons,
                         tag=(name, mode, side, mp),
                     ))
-    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store)
+    sweep = union_opt_sweep(tasks, engine_backend=backend, result_store=store,
+                            **(sweep_kw or {}))
     by_tag = {t.tag: s for t, s in zip(tasks, sweep)}
 
     def _best_of(name, mode, side):
@@ -147,8 +150,9 @@ def run(include_transpose_cost: bool = True, store_dir: str | None = None,
     }
     if store is not None:
         store.flush()
-        result["result_store"] = store.stats_dict()
-        print(f"[fig8] result store: {result['result_store']}")
+        if not deterministic_stats():  # hit counts shift with store warmth
+            result["result_store"] = store.stats_dict()
+            print(f"[fig8] result store: {result['result_store']}")
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig8.json").write_text(json.dumps(result, indent=1))
     print(f"[fig8] paper claim (TTGT wins at TDS=16, memory-target space): "
@@ -175,6 +179,8 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="numpy",
                     choices=["numpy", "jax", "none"],
                     help="evaluation-engine array backend for the sweep")
+    add_sweep_args(ap)
     args = ap.parse_args()
     run(include_transpose_cost=not args.no_transpose_cost, store_dir=args.store,
-        store_cap=args.store_cap, backend=args.backend)
+        store_cap=args.store_cap, backend=args.backend,
+        sweep_kw=sweep_kwargs(args))

@@ -12,6 +12,15 @@ Usage:
     python benchmarks/mappers_bench.py [--smoke] [--repeats N] [--workers W]
                                        [--backend numpy,jax] [--store DIR]
                                        [--no-regress-check]
+                                       [--group-timeout SECS] [--group-retries N]
+                                       [--journal FILE] [--resume]
+
+``--group-timeout``/``--journal``/``--resume`` route every row through the
+fault-tolerant sweep executor (watchdogged dispatch, crash-safe journal,
+``docs/sweep_service.md``); those runs are robustness drills and skip the
+evals/s gate -- journal replays finish in microseconds and watchdogged
+dispatch adds per-group overhead, so their timings are incomparable to
+the committed cold floors.
 
 ``--backend`` takes a comma list; each backend runs the whole mapper
 matrix and its rows are keyed ``backend/cost_model/mapper`` in the
@@ -57,7 +66,7 @@ from pathlib import Path
 from benchmarks.workloads import dnn_layers
 from repro.core.architecture import cloud_accelerator
 from repro.core.cost import ResultStore
-from repro.core.optimizer import union_opt
+from repro.core.optimizer import SweepTask, union_opt, union_opt_sweep
 
 OUT = Path("experiments/benchmarks")
 ROOT_BENCH = Path("BENCH_mappers.json")
@@ -156,9 +165,19 @@ def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
 def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
         backend: str = "numpy", store_dir: str | None = None,
         regress_check: bool = True, regress_margin: float = 0.5,
-        update_baseline: bool = False) -> dict:
+        update_baseline: bool = False, group_timeout_s: float | None = None,
+        group_retries: int = 2, journal: str | None = None,
+        resume: bool = False) -> dict:
     problem = dnn_layers()["BERT-2"]
     arch = cloud_accelerator()
+    # any fault-tolerance knob routes rows through the sweep executor
+    # (per-group watchdog/retries/journal); the default path stays the
+    # direct union_opt call whose timing the committed floors gate
+    use_executor = group_timeout_s is not None or journal is not None
+    # each row is its own sweep; after the first, open the shared journal
+    # in resume mode so rows ACCUMULATE (a fresh sweep otherwise starts a
+    # fresh journal) and a re-invocation with --resume can replay them all
+    journal_seeded = False
     cost_models = COST_MODELS[:1] if smoke else COST_MODELS
     mappers = ["random", "exhaustive", "genetic", "heuristic"] if smoke else MAPPERS
     backends = [b.strip() for b in backend.split(",") if b.strip()]
@@ -181,11 +200,26 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                 sol = None
                 for _ in range(max(1, repeats)):
                     t0 = time.time()
-                    sol = union_opt(
-                        problem, arch, mapper=mp, cost_model=cm, metric="edp",
-                        engine_workers=workers, engine_backend=be,
-                        result_store=store, **kw,
-                    )
+                    if use_executor:
+                        sol = union_opt_sweep(
+                            [SweepTask(problem, arch, mapper=mp,
+                                       cost_model=cm, metric="edp",
+                                       mapper_kw=kw)],
+                            engine_workers=workers, engine_backend=be,
+                            result_store=store,
+                            group_timeout_s=group_timeout_s,
+                            max_group_retries=group_retries,
+                            journal=journal,
+                            resume=resume or (journal is not None
+                                              and journal_seeded),
+                        )[0]
+                        journal_seeded = True
+                    else:
+                        sol = union_opt(
+                            problem, arch, mapper=mp, cost_model=cm, metric="edp",
+                            engine_workers=workers, engine_backend=be,
+                            result_store=store, **kw,
+                        )
                     best_s = min(best_s, time.time() - t0)
                 res = sol.search
                 candidates = res.evaluated + res.pruned
@@ -265,7 +299,14 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
             if r["speedup_vs_seed"] is not None
         },
     }
-    if smoke and regress_check and store is None and not update_baseline:
+    if use_executor:
+        # journal replays finish in microseconds and watchdogged dispatch
+        # adds per-group overhead: rows are for robustness drills, not
+        # comparable to the committed cold floors
+        print("[mappers] regression gate skipped: executor rows "
+              "(--group-timeout/--journal) are not comparable to the "
+              "direct-call baseline")
+    elif smoke and regress_check and store is None and not update_baseline:
         check_regression(summary, ROOT_BENCH, regress_margin)
     elif smoke and update_baseline:
         print("[mappers] regression gate skipped: --update-baseline is a "
@@ -279,8 +320,8 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
     # and a full-matrix run must not clobber a committed SMOKE baseline
     # (the gate would then skip forever on 'matrix differs'). Explicit
     # --update-baseline overrides the matrix guard, never the store one.
-    write_baseline = store is None and update_baseline
-    if store is None and not update_baseline and not smoke:
+    write_baseline = store is None and update_baseline and not use_executor
+    if store is None and not update_baseline and not smoke and not use_executor:
         try:
             write_baseline = not json.loads(ROOT_BENCH.read_text()).get("smoke", False)
         except Exception:
@@ -317,9 +358,26 @@ if __name__ == "__main__":
                     help="rewrite BENCH_mappers.json from this (smoke) run; "
                          "without it, smoke runs leave the committed "
                          "baseline untouched")
+    ap.add_argument("--group-timeout", type=float, default=None, metavar="SECS",
+                    help="route rows through the fault-tolerant sweep "
+                         "executor with this per-group deadline "
+                         "(robustness drill; disables the evals/s gate)")
+    ap.add_argument("--group-retries", type=int, default=2, metavar="N",
+                    help="retry budget per group when the executor path "
+                         "is active (default 2)")
+    ap.add_argument("--journal", default=None, metavar="FILE",
+                    help="sweep journal for the executor path; completed "
+                         "rows survive a crash and --resume replays them")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay rows already completed in --journal "
+                         "instead of re-searching them")
     args = ap.parse_args()
+    if args.resume and not args.journal:
+        raise SystemExit("[mappers] --resume requires --journal FILE")
     run(smoke=args.smoke, repeats=args.repeats, workers=args.workers,
         backend=args.backend, store_dir=args.store,
         regress_check=not args.no_regress_check,
         regress_margin=args.regress_margin,
-        update_baseline=args.update_baseline)
+        update_baseline=args.update_baseline,
+        group_timeout_s=args.group_timeout, group_retries=args.group_retries,
+        journal=args.journal, resume=args.resume)

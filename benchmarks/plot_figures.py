@@ -13,7 +13,11 @@ figure and experimental point, and renders:
     TTGT per mode; fig10 best-aspect EDP per workload; fig11 EDP vs
     bandwidth curves);
   * ``figures_summary.json`` -- the flattened rows + per-figure throughput
-    aggregates (always written, even without matplotlib).
+    aggregates (always written, even without matplotlib), plus a
+    ``robustness`` section with the fault-tolerant sweep executor's
+    ledger per figure (workers/pool, retries, timeouts,
+    backend_fallbacks, stragglers, replayed groups, per-group
+    wall-clock; see ``docs/sweep_service.md``).
 
 Usage:
     python benchmarks/plot_figures.py [--dir experiments/benchmarks]
@@ -84,8 +88,39 @@ def _search_rows(figure: str, payload: dict) -> List[dict]:
     return rows
 
 
-def collect(bench_dir: Path) -> Dict[str, List[dict]]:
+_ROBUSTNESS_KEYS = (
+    "workers", "pool", "attempts", "retries", "timeouts",
+    "backend_fallbacks", "stragglers", "replayed_groups",
+)
+
+
+def _robustness(figure: str, sweep: Optional[dict]) -> Optional[dict]:
+    """Pull the fault-tolerant executor's ledger out of a figure's
+    ``sweep`` stats block (``union_opt_sweep``; see
+    ``docs/sweep_service.md``). Deterministic-stats runs strip most of
+    the ledger; whatever survives is reported."""
+    if not isinstance(sweep, dict):
+        return None
+    row = {"figure": figure, "groups": sweep.get("engines")}
+    row.update({k: sweep[k] for k in _ROBUSTNESS_KEYS if k in sweep})
+    walls = [
+        g["wall_s"] for g in sweep.get("group_wall") or []
+        if isinstance(g, dict) and "wall_s" in g
+    ]
+    if walls:
+        row["group_wall_max_s"] = round(max(walls), 3)
+        row["group_wall_mean_s"] = round(sum(walls) / len(walls), 3)
+        row["group_stragglers"] = sum(
+            1 for g in sweep.get("group_wall") or [] if g.get("straggler")
+        )
+    if len(row) <= 2 and row.get("groups") is None:
+        return None
+    return row
+
+
+def collect(bench_dir: Path):
     out: Dict[str, List[dict]] = {}
+    robustness: List[dict] = []
     for figure in ("fig3", "fig8", "fig10", "fig11", "mappers"):
         f = bench_dir / f"{figure}.json"
         if not f.exists():
@@ -99,7 +134,26 @@ def collect(bench_dir: Path) -> Dict[str, List[dict]]:
         rows = _search_rows(figure, payload)
         if rows:
             out[figure] = rows
-    return out
+        rob = _robustness(figure, payload.get("sweep"))
+        if rob:
+            robustness.append(rob)
+    # the concurrent-sweep bench reports its ledger at the top level
+    f = bench_dir / "sweep_service.json"
+    if f.exists():
+        try:
+            payload = json.loads(f.read_text())
+            row = {"figure": "sweep_bench"}
+            row.update({
+                k: payload[k]
+                for k in ("groups", "cores", "workers", "pool", "retries",
+                          "timeouts", "backend_fallbacks", "stragglers",
+                          "ratio")
+                if k in payload
+            })
+            robustness.append(row)
+        except Exception as e:
+            print(f"[plots] {f} unreadable ({e}); skipped")
+    return out, robustness
 
 
 def _aggregate(rows_by_fig: Dict[str, List[dict]]) -> dict:
@@ -216,11 +270,12 @@ def run(bench_dir: str = "experiments/benchmarks",
     bdir = Path(bench_dir)
     odir = Path(out_dir) if out_dir else bdir / "plots"
     odir.mkdir(parents=True, exist_ok=True)
-    rows_by_fig = collect(bdir)
+    rows_by_fig, robustness = collect(bdir)
     agg = _aggregate(rows_by_fig)
     summary = {
         "figures": sorted(rows_by_fig),
         "aggregates": agg,
+        "robustness": robustness,
         "rows": [r for rows in rows_by_fig.values() for r in rows],
     }
     (odir / "figures_summary.json").write_text(json.dumps(summary, indent=1))
@@ -233,6 +288,17 @@ def run(bench_dir: str = "experiments/benchmarks",
             f"(mean {a['evals_per_s_mean']:>9,.0f}), store hits "
             f"{a['store_hits']}, pruned {a['pruned']}"
         )
+    for r in robustness:
+        counters = ", ".join(
+            f"{k} {r[k]}" for k in ("retries", "timeouts",
+                                    "backend_fallbacks", "stragglers",
+                                    "replayed_groups")
+            if k in r
+        )
+        print(f"[plots] robustness {r['figure']:12s} "
+              f"groups {r.get('groups', '?')}, workers "
+              f"{r.get('workers', '?')} ({r.get('pool', '?')})"
+              + (f", {counters}" if counters else ""))
     print(f"[plots] summary -> {odir / 'figures_summary.json'}"
           + (f", plots -> {', '.join(plots)}" if plots else " (no plots)"))
     return summary

@@ -1,0 +1,166 @@
+"""Kill-and-resume smoke drill: SIGKILL a sweep mid-flight, resume it,
+and assert the resumed figure JSON is BYTE-IDENTICAL to an uninterrupted
+run's.
+
+Three child runs of the same fig10-style multi-group sweep (this script
+re-execs itself with ``--emit``):
+
+  1. reference  -- uninterrupted, ``UNION_DETERMINISTIC_STATS=1``.
+  2. killed     -- same sweep with a journal and
+                   ``UNION_FAULT_SPEC=kill-after:N``: the executor
+                   SIGKILLs its own process after the Nth completed
+                   group's store flush but BEFORE its journal record --
+                   the worst crash ordering, exactly the window the
+                   journal's atomic-replace discipline protects.
+  3. resumed    -- same journal with ``--resume``: journaled groups are
+                   replayed from their records, the rest re-searched.
+
+The parent asserts the killed run actually died by SIGKILL, the resumed
+run replayed at least one group, and ``cmp``-style byte equality of the
+reference and resumed JSONs. Deterministic stats mode strips the
+warm/cold-variant counters (timings, store hit counts) from the emitted
+JSON so the comparison is exact -- see ``docs/sweep_service.md``.
+
+Usage:
+    python benchmarks/resume_smoke.py [--kill-after N] [--keep]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+from benchmarks.workloads import dnn_layers
+from repro.core.architecture import edge_accelerator
+from repro.core.optimizer import SweepTask, union_opt_sweep
+
+_NAMES = ["DLRM-1", "BERT-1", "DLRM-2", "BERT-2"]
+
+
+def build_tasks() -> list:
+    layers = dnn_layers()
+    tasks = []
+    for wname in _NAMES:
+        problem = layers[wname]
+        arch = edge_accelerator(aspect=(16, 16))
+        tasks.append(SweepTask(problem, arch, mapper="heuristic",
+                               cost_model="timeloop", metric="edp",
+                               tag=(wname, "heuristic")))
+        tasks.append(SweepTask(problem, arch, mapper="random",
+                               cost_model="timeloop", metric="edp",
+                               mapper_kw={"samples": 2000},
+                               tag=(wname, "random")))
+    return tasks
+
+
+def emit(out_path: str, journal: str | None, resume: bool) -> None:
+    """Child mode: run the sweep and write the figure-style JSON."""
+    tasks = build_tasks()
+    sweep = union_opt_sweep(tasks, journal=journal, resume=resume)
+    result = {
+        "figure": "resume_smoke",
+        "rows": {
+            "/".join(t.tag): {
+                "edp": s.cost.edp,
+                "util": s.cost.utilization,
+                "mapping": s.mapping.to_dict(),
+                "search": s.search.stats_dict(),
+            }
+            for t, s in zip(tasks, sweep)
+        },
+        "sweep": sweep.stats,
+    }
+    Path(out_path).write_text(json.dumps(result, indent=1))
+
+
+def _child(extra: list, env_extra: dict, workdir: str):
+    env = dict(os.environ)
+    env["UNION_DETERMINISTIC_STATS"] = "1"
+    env.update(env_extra)
+    root = Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root)]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    )
+    return subprocess.run(
+        [sys.executable, str(Path(__file__).resolve())] + extra,
+        env=env, cwd=workdir, capture_output=True, text=True, timeout=600,
+    )
+
+
+def run(kill_after: int = 2, keep: bool = False) -> None:
+    work = tempfile.mkdtemp(prefix="union_resume_smoke_")
+    try:
+        ref, out = f"{work}/ref.json", f"{work}/resumed.json"
+        journal = f"{work}/sweep_journal.json"
+
+        r = _child(["--emit", ref], {}, work)
+        if r.returncode != 0:
+            raise SystemExit(
+                f"[resume_smoke] reference run failed:\n{r.stderr[-2000:]}")
+        print("[resume_smoke] reference run OK")
+
+        r = _child(["--emit", f"{work}/never.json", "--journal", journal],
+                   {"UNION_FAULT_SPEC": f"kill-after:{kill_after}"}, work)
+        if r.returncode != -signal.SIGKILL:
+            raise SystemExit(
+                f"[resume_smoke] expected the child to die by SIGKILL "
+                f"(rc {-signal.SIGKILL}), got rc {r.returncode}:\n"
+                f"{r.stderr[-2000:]}")
+        if not Path(journal).exists():
+            raise SystemExit("[resume_smoke] killed run left no journal")
+        print(f"[resume_smoke] child SIGKILLed after {kill_after} "
+              f"completed group(s) ({kill_after - 1} journaled); "
+              f"journal survived")
+
+        r = _child(["--emit", out, "--journal", journal, "--resume"], {}, work)
+        if r.returncode != 0:
+            raise SystemExit(
+                f"[resume_smoke] resumed run failed:\n{r.stderr[-2000:]}")
+        m = re.search(r"replaying (\d+)/(\d+)", r.stdout + r.stderr)
+        replayed = int(m.group(1)) if m else 0
+        if replayed < 1:
+            raise SystemExit(
+                "[resume_smoke] resumed run replayed no groups -- the "
+                f"journal did not take:\n{(r.stdout + r.stderr)[-2000:]}")
+
+        ref_bytes = Path(ref).read_bytes()
+        out_bytes = Path(out).read_bytes()
+        if ref_bytes != out_bytes:
+            raise SystemExit(
+                "[resume_smoke] BYTE MISMATCH between the uninterrupted "
+                f"and resumed figure JSONs ({ref} vs {out}); kept at {work}")
+        print(f"[resume_smoke] OK: resumed run replayed {replayed} group(s) "
+              f"and its figure JSON is byte-identical to the uninterrupted "
+              f"run ({len(ref_bytes)} bytes)")
+    finally:
+        if keep:
+            print(f"[resume_smoke] artifacts kept at {work}")
+        else:
+            shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit", default=None, metavar="OUT.json",
+                    help="(child mode) run the sweep and write the figure "
+                         "JSON instead of orchestrating the drill")
+    ap.add_argument("--journal", default=None, metavar="FILE")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kill-after", type=int, default=2, metavar="N",
+                    help="SIGKILL the child after N journaled groups")
+    ap.add_argument("--keep", action="store_true",
+                    help="keep the work dir (journals + JSONs) for debugging")
+    args = ap.parse_args()
+    if args.emit:
+        emit(args.emit, args.journal, args.resume)
+    else:
+        run(kill_after=args.kill_after, keep=args.keep)

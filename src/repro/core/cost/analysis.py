@@ -27,6 +27,7 @@ results are exactly the ones the naive nested-loop formulation produces.
 from __future__ import annotations
 
 import math
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -733,7 +734,17 @@ class AnalysisContext:
         return core
 
     def _ensure_jax(self):
-        """Import JAX lazily; memoized on the context."""
+        """Import JAX lazily; memoized on the context.
+
+        ``UNION_FAULT_JAX=1`` simulates a broken jax install (import/trace
+        failure) at the exact point every jax path funnels through: the
+        raise is caught by the callers' degradation handling, which sets
+        ``_jax_failed`` and falls back to numpy -- the path the sweep
+        executor's ``jaxfail`` fault spec and the CI fault-injection tests
+        exercise without needing a genuinely broken toolchain.
+        """
+        if os.environ.get("UNION_FAULT_JAX"):
+            raise RuntimeError("injected jax backend failure (UNION_FAULT_JAX)")
         if self._jax is None:
             import jax
 

@@ -28,6 +28,7 @@ through ``SearchResult`` so speedups stay observable.
 
 from __future__ import annotations
 
+import logging
 import math
 import pickle
 from collections import OrderedDict
@@ -44,6 +45,8 @@ from repro.core.cost.store import ResultStore
 from repro.core.genome_batch import GenomeBatch, RowCandidate
 from repro.core.mapping import Mapping, mapping_signature  # noqa: F401 (re-export)
 from repro.core.problem import Problem
+
+log = logging.getLogger("repro.engine")
 
 Signature = Tuple[Tuple[Tuple[str, ...], Tuple[int, ...], Tuple[int, ...]], ...]
 
@@ -86,6 +89,11 @@ class EngineStats:
     # (jax backend): one jitted dispatch covered bound + mask + traffic +
     # energy for the whole batch.
     fused_dispatches: int = 0
+    # jax backend broke mid-flight (trace/compile/dispatch failure or a
+    # missing install) and the engine degraded itself to the numpy batch
+    # path -- results are bit-identical by the backend contract, so this
+    # is a warning-level event, not an error (at most 1 per engine).
+    backend_fallbacks: int = 0
     admit_s: float = 0.0  # wall-clock spent in the admission (bound) stage
     score_s: float = 0.0  # wall-clock spent scoring admitted misses
 
@@ -487,6 +495,7 @@ class EvaluationEngine:
         if order and self.backend == "jax" and len(order) >= _BATCH_MIN:
             fused = self._fused_admit_score(order, incumbent, stacked=stacked)
             stacked = fused.stacked  # reused by every fallback below
+            self._check_backend_degraded()  # fused path may have broken jax
             if fused.decided:
                 decided = True
                 misses, select = fused.misses, fused.select
@@ -528,6 +537,32 @@ class EvaluationEngine:
                 ),
             )
             self.stats.score_s += perf_counter() - t0
+        # scoring (or the batched bound) may have tripped the context's jax
+        # flag: degrade now so subsequent batches skip the broken path
+        self._check_backend_degraded()
+
+    def _check_backend_degraded(self) -> bool:
+        """Degrade a jax engine to the numpy batch path once the analysis
+        context has flagged a jax failure (import, trace, compile, or
+        dispatch -- the context records all of them as ``_jax_failed``).
+
+        The numpy and jax array programs are bit-identical by the repo's
+        backend contract, so the search continues with unchanged results;
+        the event is counted (``stats.backend_fallbacks``) and warned once
+        per engine so sweep summaries surface the degradation instead of
+        it hiding behind silent per-batch fallbacks.
+        """
+        if self.backend == "jax" and getattr(self._ctx, "_jax_failed", False):
+            self.backend = "numpy"
+            self.stats.backend_fallbacks += 1
+            log.warning(
+                "jax backend failed for engine (%s on %s); degraded to the "
+                "numpy path -- results identical by the backend contract",
+                type(self.cost_model).__name__,
+                getattr(self.problem, "name", "?"),
+            )
+            return True
+        return False
 
     def _partition_admitted(self, order, admit):
         """Split a batch's unique candidates by admit flag, counting one
@@ -630,6 +665,8 @@ class EvaluationEngine:
             return 0
         runner = self._get_fused_runner()
         if runner is None:
+            # missing/broken jax surfaces here first in warmed-up sweeps
+            self._check_backend_degraded()
             return 0
         n = self.arch.n_levels
         D = len(self._dims)
@@ -646,7 +683,11 @@ class EvaluationEngine:
             st = np.ones((b, n, D), dtype=np.int64)
             perm = np.tile(np.arange(D, dtype=np.int64), (b, n, 1))
             if runner(StackedBatch(tt, st, perm), math.inf) is None:
-                break  # jax broke mid-flight; the engine will fall back
+                # jax broke mid-flight: degrade immediately rather than
+                # rediscovering the failure on the first timed batch
+                self._fused_failed = True
+                self._check_backend_degraded()
+                break
             done += 1
         return done
 

@@ -47,8 +47,10 @@ from __future__ import annotations
 import contextlib
 import hashlib
 import json
+import logging
 import math
 import os
+import time
 import uuid
 from collections import OrderedDict
 from pathlib import Path
@@ -65,9 +67,15 @@ from repro.core.architecture import Architecture
 from repro.core.cost.base import Cost, CostModel
 from repro.core.problem import Problem
 
+log = logging.getLogger("repro.store")
+
 # Bump whenever the Cost record layout or any scoring semantics change in a
 # way older entries cannot represent: mismatched files are discarded whole.
 STORE_VERSION = 1
+
+# Journal file format version (see SweepJournal); independent of the Cost
+# record layout so store entries survive journal-schema changes.
+JOURNAL_VERSION = 1
 
 
 def _canon_num(v):
@@ -222,6 +230,7 @@ class ResultStore:
         self.disk_loaded = 0  # entries brought in from disk
         self.corrupt = 0  # unreadable or version-mismatched files skipped
         self.evicted = 0  # entries dropped by the per-space LRU cap
+        self.stale_tmps = 0  # crashed writers' scratch files cleaned at flush
 
     # -------------------------------------------------------------- #
     def space_key(
@@ -299,6 +308,37 @@ class ResultStore:
             finally:
                 fcntl.flock(lf, fcntl.LOCK_UN)
 
+    def _clean_stale_tmps(self) -> int:
+        """Remove scratch ``.tmp`` files a crashed writer left behind.
+
+        Every tmp is created and renamed away UNDER the directory lock, so
+        any tmp visible at lock acquisition belongs to a writer that died
+        between write and rename -- a crash window that must not
+        accumulate litter in a long-lived shared store. Where flock is
+        unavailable (non-POSIX, so writers are not serialized) only tmps
+        older than 60s are removed, keeping a live writer's in-flight
+        scratch file safe. Returns the number of files removed (also
+        accumulated in ``stale_tmps``)."""
+        removed = 0
+        try:
+            candidates = list(self.path.glob(".*.tmp"))
+        except OSError:
+            return 0
+        now = time.time()
+        for tmp in candidates:
+            try:
+                if fcntl is None and now - tmp.stat().st_mtime < 60.0:
+                    continue
+                tmp.unlink()
+                removed += 1
+            except OSError:
+                pass  # already gone (or unreadable): someone else cleaned it
+        if removed:
+            self.stale_tmps += removed
+            log.warning("result store %s: cleaned %d stale tmp file(s) left "
+                        "by crashed writer(s)", self.path, removed)
+        return removed
+
     def flush(self) -> int:
         """Write dirty spaces to the disk tier as ONE atomic write pass:
         the directory lock is acquired once and every dirty space is
@@ -332,6 +372,7 @@ class ResultStore:
         cap = self.max_entries_per_space
         written = 0
         with self._store_lock():
+            self._clean_stale_tmps()
             for skey in dirty:
                 d = self._spaces[skey]
                 mem = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
@@ -371,6 +412,7 @@ class ResultStore:
             "disk_loaded": self.disk_loaded,
             "corrupt": self.corrupt,
             "evicted": self.evicted,
+            "stale_tmps": self.stale_tmps,
             "spaces": len(self._spaces),
             "entries": sum(len(d) for d in self._spaces.values()),
         }
@@ -380,3 +422,132 @@ class ResultStore:
 
     def __exit__(self, *exc) -> None:
         self.flush()
+
+
+# --------------------------------------------------------------------- #
+# Sweep journal (crash-safe resume)
+# --------------------------------------------------------------------- #
+class SweepJournal:
+    """Crash-safe progress journal for one named sweep.
+
+    The concurrent sweep executor (``repro.core.sweep_exec``) records every
+    completed task's SOLUTION RECORD (mapping dict + Cost record + search
+    stats -- the exact data a solution is rebuilt from) keyed by a stable
+    task fingerprint, plus per-group attempt counts. A sweep killed
+    mid-flight and restarted with ``resume=True`` replays the journaled
+    records verbatim -- completed groups are skipped entirely, in-flight
+    groups re-run warm against the shared :class:`ResultStore` -- so the
+    restarted sweep's outputs match an uninterrupted run's.
+
+    File layout (single JSON file, usually next to the store's space
+    files)::
+
+        {"version": 1,
+         "groups": {group_key: {"attempts": int, "done": bool}},
+         "tasks":  {fingerprint: <opaque solution record>}}
+
+    Flush discipline matches :meth:`ResultStore.flush`: writer-unique tmp
+    + atomic rename under an advisory flock (``<journal>.lock``), stale
+    ``.jtmp`` scratch files cleaned under the lock. The journal is
+    flushed at every group START (attempts survive a crash, so "fail
+    group N on attempt K" fault specs stay deterministic across restarts)
+    and at every group COMPLETION -- a SIGKILL can lose at most the
+    in-flight group's work, never corrupt the file.
+
+    A journal opened without ``resume`` IGNORES any existing file and
+    starts fresh (first flush replaces it): attempts and done flags from
+    an unrelated earlier sweep must not leak into a new cold run.
+    Corrupt or version-mismatched files are discarded (counted in
+    ``corrupt``), mirroring the store's tolerance.
+    """
+
+    def __init__(self, path, resume: bool = False) -> None:
+        self.path = Path(path)
+        self.groups: Dict[str, dict] = {}
+        self.tasks: Dict[str, object] = {}
+        self.corrupt = 0
+        self.resumed = False  # a prior journal was actually loaded
+        if resume:
+            try:
+                payload = json.loads(self.path.read_text())
+                if (
+                    isinstance(payload, dict)
+                    and payload.get("version") == JOURNAL_VERSION
+                ):
+                    self.groups = dict(payload.get("groups", {}))
+                    self.tasks = dict(payload.get("tasks", {}))
+                    self.resumed = True
+                else:
+                    self.corrupt += 1
+            except FileNotFoundError:
+                pass  # nothing to resume: behaves like a fresh journal
+            except Exception:
+                self.corrupt += 1
+
+    # -------------------------------------------------------------- #
+    def group_attempts(self, gkey: str) -> int:
+        return int(self.groups.get(gkey, {}).get("attempts", 0))
+
+    def group_done(self, gkey: str) -> bool:
+        return bool(self.groups.get(gkey, {}).get("done", False))
+
+    def note_group_start(self, gkey: str) -> None:
+        g = self.groups.setdefault(gkey, {"attempts": 0, "done": False})
+        g["attempts"] = int(g["attempts"]) + 1
+        self.flush()
+
+    def record_group(self, gkey: str, records: Dict[str, object]) -> None:
+        """Mark ``gkey`` complete with its tasks' solution records."""
+        self.tasks.update(records)
+        g = self.groups.setdefault(gkey, {"attempts": 0, "done": False})
+        g["done"] = True
+        self.flush()
+
+    def get_task(self, fingerprint: str):
+        return self.tasks.get(fingerprint)
+
+    # -------------------------------------------------------------- #
+    @contextlib.contextmanager
+    def _lock(self):
+        """Advisory flock on ``<journal>.lock`` (constant file, never
+        unlinked -- same rationale as the store's directory lock)."""
+        if fcntl is None:
+            yield
+            return
+        with open(self.path.with_name(self.path.name + ".lock"), "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def flush(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "version": JOURNAL_VERSION,
+            "groups": self.groups,
+            "tasks": self.tasks,
+        }
+        with self._lock():
+            now = time.time()
+            for tmp in self.path.parent.glob(f".{self.path.name}.*.jtmp"):
+                try:
+                    if fcntl is None and now - tmp.stat().st_mtime < 60.0:
+                        continue
+                    tmp.unlink()  # crashed writer's scratch: clean it
+                except OSError:
+                    pass
+            tmp = self.path.with_name(
+                f".{self.path.name}.{os.getpid()}.{uuid.uuid4().hex[:8]}.jtmp"
+            )
+            tmp.write_text(json.dumps(payload, separators=(",", ":")))
+            tmp.replace(self.path)
+
+    def stats_dict(self) -> dict:
+        return {
+            "groups": len(self.groups),
+            "groups_done": sum(1 for g in self.groups.values() if g.get("done")),
+            "tasks": len(self.tasks),
+            "corrupt": self.corrupt,
+            "resumed": self.resumed,
+        }

@@ -189,6 +189,14 @@ def union_opt_sweep(
     engine_prune: bool = True,
     result_store: Optional[ResultStore] = None,
     warmup: bool = True,
+    workers: int = 0,
+    pool: str = "auto",
+    group_timeout_s: Optional[float] = None,
+    max_group_retries: int = 2,
+    group_backoff_s: float = 0.05,
+    journal=None,
+    resume: bool = False,
+    fault_spec: Optional[str] = None,
 ) -> SweepResult:
     """Run a whole figure sweep through SHARED evaluation machinery.
 
@@ -213,8 +221,33 @@ def union_opt_sweep(
     (one atomic multi-space write pass; see ``ResultStore.flush``) --
     callers that keep the store open may flush again later, flushing here
     is not destructive.
+
+    Execution is delegated to the fault-tolerant
+    :class:`~repro.core.sweep_exec.SweepExecutor` (see that module for
+    the failure taxonomy and ``docs/sweep_service.md`` for the service
+    model):
+
+    ``workers``/``pool``
+        ``workers > 1`` dispatches independent groups concurrently --
+        ``pool="process"`` (the ``"auto"`` default; spawned interpreters,
+        the load-bearing path since the numpy engine is GIL-bound) or
+        ``pool="thread"``.
+    ``group_timeout_s``/``max_group_retries``/``group_backoff_s``
+        per-group watchdog deadline and bounded retries with exponential
+        backoff + deterministic jitter; a hung or failed group attempt is
+        abandoned and re-run instead of killing the sweep.
+    ``journal``/``resume``
+        a :class:`~repro.core.cost.store.SweepJournal` (or a path) makes
+        the sweep crash-safe: completed groups' solution records are
+        flushed atomically, and ``resume=True`` replays them instead of
+        re-searching. All solutions round-trip through the journal's
+        record form either way, so resumed and uninterrupted sweeps are
+        identical by construction.
+    ``fault_spec``
+        deterministic fault injection (defaults to ``UNION_FAULT_SPEC``
+        from the environment), e.g. ``"fail:1@0;hang:2@0:3"``.
     """
-    from repro.core.cost.store import space_key as _space_key
+    from repro.core.sweep_exec import SweepExecutor
 
     resolved = []
     for t in tasks:
@@ -237,87 +270,46 @@ def union_opt_sweep(
                 f"problem {problem.name!r} is not conformable to cost model "
                 f"{cm.name!r}: {why}"
             )
-        mp = (
-            MAPPER_REGISTRY[t.mapper](**t.mapper_kw)
-            if isinstance(t.mapper, str)
-            else t.mapper
-        )
-        resolved.append((t, problem, cm, mp))
+        if isinstance(t.mapper, str):
+            # fail fast on unknown mappers / bad kwargs, then ship the SPEC:
+            # the executor builds a FRESH instance per group attempt so a
+            # retried group replays the exact seeded candidate stream
+            mp_name = MAPPER_REGISTRY[t.mapper](**t.mapper_kw).name
+            mapper_spec = (t.mapper, dict(t.mapper_kw))
+        else:
+            mp_name = t.mapper.name
+            mapper_spec = t.mapper
+        resolved.append((t, problem, cm, mapper_spec))
+        t.__dict__["_mapper_name"] = mp_name  # for solution labeling below
 
-    engines: Dict[object, tuple] = {}
-    solutions: List[UnionSolution] = []
-    warmed = 0
-    try:
-        for t, problem, cm, mp in resolved:
-            gkey = (
-                _space_key(cm, problem, t.arch),
-                t.metric,
-                engine_backend,
-                engine_prune,
-            )
-            ent = engines.get(gkey)
-            if ent is None:
-                engine = EvaluationEngine(
-                    cm,
-                    problem,
-                    t.arch,
-                    metric=t.metric,
-                    cache_size=engine_cache,
-                    prune=engine_prune,
-                    workers=engine_workers,
-                    backend=engine_backend,
-                    store=result_store,
-                )
-                engines[gkey] = ent = (engine, problem, t.arch)
-            engine, gproblem, garch = ent
-            if warmup:
-                # idempotent per bucket: already-traced sizes re-dispatch
-                # in microseconds
-                warmed += engine.warmup(mp.batch_hints())
-            # the search runs over the group's canonical objects (their
-            # content is identical by the space key), but the solution
-            # keeps the TASK's own problem identity -- space_key excludes
-            # names, so content-equal workloads with different names must
-            # not swap identities
-            space = MapSpace(gproblem, garch, t.constraints)
-            res = mp.search(space, engine.cost_model, t.metric, engine=engine)
-            if res.best_mapping is None:
-                raise RuntimeError(
-                    f"mapper {mp.name} found no legal mapping for {problem.name}"
-                )
-            solutions.append(
-                UnionSolution(
-                    problem=problem,
-                    mapping=res.best_mapping,
-                    cost=res.best_cost,
-                    search=res,
-                    mapper=mp.name,
-                    cost_model=engine.cost_model.name,
-                    metric=t.metric,
-                )
-            )
-    finally:
-        for engine, _p, _a in engines.values():
-            engine.close()
-        if result_store is not None:
-            # flush even when a task raises: every completed task's fresh
-            # Costs persist (flushing is never destructive)
-            result_store.flush()
-    agg = {
-        "tasks": len(solutions),
-        "engines": len(engines),
-        "engine_backend": engine_backend,
-        "warmed_buckets": warmed,
-        "considered": sum(s.search.considered for s in solutions),
-        "analyzed": sum(s.search.analyzed for s in solutions),
-        "cache_hits": sum(s.search.cache_hits for s in solutions),
-        "store_hits": sum(s.search.store_hits for s in solutions),
-        "pruned": sum(s.search.pruned for s in solutions),
-        "fused_dispatches": sum(s.search.fused_dispatches for s in solutions),
-        "elapsed_s": round(sum(s.search.elapsed_s for s in solutions), 4),
-    }
-    scored = sum(s.search.scored for s in solutions)
-    agg["evals_per_s"] = (
-        round(scored / agg["elapsed_s"], 1) if agg["elapsed_s"] > 0 else 0.0
+    executor = SweepExecutor(
+        engine_backend=engine_backend,
+        engine_workers=engine_workers,
+        engine_cache=engine_cache,
+        engine_prune=engine_prune,
+        result_store=result_store,
+        warmup=warmup,
+        workers=workers,
+        pool=pool,
+        group_timeout_s=group_timeout_s,
+        max_group_retries=max_group_retries,
+        group_backoff_s=group_backoff_s,
+        journal=journal,
+        resume=resume,
+        fault_spec=fault_spec,
     )
+    results, agg = executor.run(resolved)
+
+    solutions = [
+        UnionSolution(
+            problem=problem,
+            mapping=res.best_mapping,
+            cost=res.best_cost,
+            search=res,
+            mapper=t.__dict__["_mapper_name"],
+            cost_model=cm.name,
+            metric=t.metric,
+        )
+        for (t, problem, cm, _spec), res in zip(resolved, results)
+    ]
     return SweepResult(solutions, agg)

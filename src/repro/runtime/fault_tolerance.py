@@ -1,35 +1,214 @@
-"""Fault tolerance: retry-on-failure, heartbeats, straggler mitigation.
+"""Fault tolerance: retry-on-failure, deadlines, straggler mitigation.
 
-At 1000+-node scale the failure model is: (a) a step raises (device OOM,
-preempted host, interconnect error) -> retry from the last good state, a
-bounded number of times, then restore from checkpoint; (b) a step hangs or
-straggles -> a watchdog thread detects a missed deadline, the runner
-cancels/abandons the dispatch and re-runs (on a real cluster this is where
-the workload manager would also re-slice the mesh -- see elastic.plan_mesh).
+At 1000+-node scale the failure model is: (a) a unit of work raises
+(device OOM, preempted host, interconnect error) -> retry from the last
+good state, a bounded number of times, then restore from checkpoint;
+(b) a unit of work hangs or straggles -> a watchdog detects a missed
+deadline, the caller abandons the dispatch and re-runs (on a real cluster
+this is where the workload manager would also re-slice the mesh -- see
+elastic.plan_mesh).
 
-This is the single-controller analogue of what multi-controller JAX does
-with coordinator heartbeats; the control flow is identical and exercised
-on CPU by the tests via fault injection hooks.
+The module is split into a GENERIC core and the train-step wrapper built
+on it:
+
+  * :func:`call_with_deadline` -- run any callable under a watchdog
+    deadline (raises :class:`CallTimeoutError` on a miss);
+  * :class:`RetryPolicy` / :func:`retry_call` -- bounded retries with
+    exponential backoff and DETERMINISTIC jitter (hashed from the call
+    label + attempt, so concurrent retry storms de-synchronize without
+    randomness that would break reproducible tests);
+  * :class:`StragglerMeter` -- moving-average straggler detection;
+  * :class:`FaultTolerantRunner` -- the training-loop shape (step_fn +
+    checkpoint restore) expressed through the core above.
+
+The same core drives the mapping-sweep executor
+(``repro.core.sweep_exec``): group dispatches are wrapped in
+``retry_call`` with a per-group deadline, which is why the core lives
+here rather than inside the runner. This is the single-controller
+analogue of what multi-controller JAX does with coordinator heartbeats;
+the control flow is identical and exercised on CPU by the tests via
+fault injection hooks.
+
+This module deliberately does NOT import jax at module scope: sweep
+worker processes import the retry core on the numpy-only path, and a
+multi-second jax import per spawned worker would erase the concurrency
+win.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import hashlib
 import logging
 import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
-
-import jax
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
 
 log = logging.getLogger("repro.runtime")
 
 
-class StepTimeoutError(RuntimeError):
-    pass
+class CallTimeoutError(RuntimeError):
+    """A watchdogged callable missed its deadline."""
 
 
+class StepTimeoutError(CallTimeoutError):
+    """Back-compat alias: a training step missed its deadline."""
+
+
+# ------------------------------------------------------------------ #
+# Generic watchdog / retry core
+# ------------------------------------------------------------------ #
+def call_with_deadline(fn: Callable[[], Any], deadline_s: Optional[float],
+                       label: str = "call"):
+    """Run ``fn()`` under a watchdog deadline.
+
+    ``deadline_s=None`` calls inline (no thread). Otherwise the callable
+    runs in a named daemon thread; a missed deadline raises
+    :class:`CallTimeoutError` and the thread is ABANDONED (there is no
+    portable way to cancel arbitrary Python work -- the thread keeps the
+    GIL-yielding work alive until it returns, which is why hung work must
+    itself be bounded, e.g. an injected hang sleeps past the deadline but
+    not forever). On a completed call the thread is joined promptly, so
+    an early exit never leaves a live watchdog behind.
+    """
+    if deadline_s is None:
+        return fn()
+    done = threading.Event()
+    box: Dict[str, Any] = {}
+
+    def work():
+        try:
+            box["out"] = fn()
+        except BaseException as e:  # re-raised in the caller below
+            box["err"] = e
+        finally:
+            done.set()
+
+    th = threading.Thread(target=work, name=f"deadline:{label}", daemon=True)
+    th.start()
+    if not done.wait(deadline_s):
+        raise CallTimeoutError(f"{label} exceeded {deadline_s}s deadline")
+    th.join()  # finished: reap promptly, no lingering thread on early exit
+    if "err" in box:
+        raise box["err"]
+    return box.get("out")
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded-retry + deadline + backoff policy for one unit of work."""
+
+    max_retries: int = 2                 # re-runs after the first attempt
+    deadline_s: Optional[float] = None   # per-attempt watchdog (None = off)
+    backoff_s: float = 0.0               # base backoff; exponential per retry
+    backoff_cap_s: float = 30.0
+    jitter: float = 0.25                 # +/- fraction of the backoff
+
+
+@dataclass
+class RetryStats:
+    """Counters accumulated by :func:`retry_call` (shareable across calls)."""
+
+    attempts: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    backoff_total_s: float = 0.0
+    errors: List[str] = field(default_factory=list)
+
+
+def backoff_delay(policy: RetryPolicy, attempt: int, label: str) -> float:
+    """Exponential backoff with deterministic jitter.
+
+    The jitter is hashed from (label, attempt), NOT drawn from a global
+    RNG: retrying groups of a sweep de-synchronize from each other (their
+    labels differ) while every run of the same sweep behaves identically
+    -- a requirement for the crash/resume byte-identity tests.
+    """
+    base = min(policy.backoff_cap_s, policy.backoff_s * (2 ** (attempt - 1)))
+    if base <= 0:
+        return 0.0
+    h = hashlib.sha256(f"{label}:{attempt}".encode()).digest()
+    u = int.from_bytes(h[:8], "big") / 2**64
+    return base * (1.0 + policy.jitter * (2.0 * u - 1.0))
+
+
+def retry_call(
+    fn: Callable[[int], Any],
+    policy: Optional[RetryPolicy] = None,
+    *,
+    label: str = "call",
+    attempt_hook: Optional[Callable[[int], None]] = None,
+    on_error: Optional[Callable[[int, BaseException], None]] = None,
+    stats: Optional[RetryStats] = None,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Run ``fn(attempt)`` under ``policy``: per-attempt deadline, bounded
+    retries, exponential backoff with deterministic jitter.
+
+    ``attempt_hook(attempt)`` runs before each attempt and may raise --
+    the fault-injection point the tests (and ``UNION_FAULT_SPEC``) use.
+    ``on_error(attempt, exc)`` observes each failure before the retry
+    decision. Returns ``(result, RetryStats)``; raises the last error
+    once retries are exhausted. Pass ``stats`` to accumulate counters
+    across several calls (e.g. one sweep-wide ledger).
+    """
+    policy = policy or RetryPolicy()
+    st = stats if stats is not None else RetryStats()
+    attempt = 0
+    while True:
+        st.attempts += 1
+        try:
+            if attempt_hook is not None:
+                attempt_hook(attempt)
+            out = call_with_deadline(
+                lambda: fn(attempt), policy.deadline_s, label=f"{label}#{attempt}"
+            )
+            return out, st
+        except Exception as e:  # noqa: BLE001 -- deliberate catch-all
+            if isinstance(e, CallTimeoutError):
+                st.timeouts += 1
+            st.errors.append(f"{type(e).__name__}: {e}")
+            if on_error is not None:
+                on_error(attempt, e)
+            log.warning("%s failed (%s: %s), attempt %d/%d", label,
+                        type(e).__name__, e, attempt + 1,
+                        policy.max_retries + 1)
+            if attempt >= policy.max_retries:
+                raise
+            st.retries += 1
+            attempt += 1
+            d = backoff_delay(policy, attempt, label)
+            if d > 0:
+                st.backoff_total_s += d
+                sleep(d)
+
+
+class StragglerMeter:
+    """Moving-average straggler detection: flags a duration slower than
+    ``slack`` x the average of the last ``window`` durations."""
+
+    def __init__(self, window: int = 20, slack: float = 3.0) -> None:
+        self.window = window
+        self.slack = slack
+        self._durations: List[float] = []
+        self.flagged = 0
+
+    def note(self, dt: float) -> bool:
+        w = self._durations[-self.window:]
+        straggler = bool(w) and dt > self.slack * (sum(w) / len(w))
+        self._durations.append(dt)
+        if straggler:
+            self.flagged += 1
+        return straggler
+
+    def avg(self) -> float:
+        w = self._durations[-self.window:]
+        return sum(w) / max(1, len(w))
+
+
+# ------------------------------------------------------------------ #
+# Train-step runner (the original shape, now on the shared core)
+# ------------------------------------------------------------------ #
 @dataclass
 class RunnerConfig:
     max_retries_per_step: int = 2       # transient-failure retries
@@ -45,7 +224,10 @@ class RunnerConfig:
 class StepStats:
     step: int
     seconds: float
-    retried: int
+    retried: int       # failed attempts before this success (CUMULATIVE
+    #                    across checkpoint restores -- a step that burned
+    #                    its retry budget, restored, then succeeded reports
+    #                    every failed attempt, not the post-restore count)
     straggler: bool
 
 
@@ -57,6 +239,13 @@ class FaultTolerantRunner:
     donated buffers a failed dispatch may have invalidated ``state``, so
     the runner keeps ``state`` alive via a host-side keepalive policy:
     donation is only enabled when a checkpoint manager is provided.
+
+    The watchdog/retry mechanics live in the module-level core
+    (:func:`call_with_deadline`); this class adds the training-specific
+    parts: checkpoint restore as the last line of defense, and per-step
+    stats. The runner is reusable across steps: per-step retry budgets
+    reset at every ``run_step`` call, and a completed (or failed) step
+    leaves no live watchdog thread behind.
     """
 
     def __init__(
@@ -73,12 +262,14 @@ class FaultTolerantRunner:
         self.ckpt = checkpoint_manager
         self.restore_fn = restore_fn
         self.fault_hook = fault_hook
-        self._durations: list[float] = []
+        self._meter = StragglerMeter(cfg.straggler_window, cfg.straggler_slack)
         self._restores = 0
         self.stats: list[StepStats] = []
 
     # ---------------------------------------------------------------- #
     def _block(self, tree) -> None:
+        import jax  # deferred: keeps the retry core importable without jax
+
         for leaf in jax.tree.leaves(tree):
             if hasattr(leaf, "block_until_ready"):
                 leaf.block_until_ready()
@@ -87,70 +278,49 @@ class FaultTolerantRunner:
         """One dispatch with an optional watchdog deadline."""
         if self.fault_hook is not None:
             self.fault_hook(step)  # may raise (injected fault)
-        timeout = self.cfg.step_timeout_s
-        if timeout is None:
+
+        def dispatch():
             out = self.step_fn(state, batch)
             self._block(out)
             return out
-        result: Dict[str, Any] = {}
-        err: Dict[str, BaseException] = {}
 
-        def work():
-            try:
-                out = self.step_fn(state, batch)
-                self._block(out)
-                result["out"] = out
-            except BaseException as e:  # propagated below
-                err["e"] = e
-
-        th = threading.Thread(target=work, daemon=True)
-        th.start()
-        th.join(timeout)
-        if th.is_alive():
-            raise StepTimeoutError(f"step {step} exceeded {timeout}s deadline")
-        if "e" in err:
-            raise err["e"]
-        return result["out"]
+        try:
+            return call_with_deadline(
+                dispatch, self.cfg.step_timeout_s, label=f"step{step}"
+            )
+        except CallTimeoutError as e:
+            raise StepTimeoutError(str(e)) from None
 
     # ---------------------------------------------------------------- #
     def run_step(self, state, batch, step: int):
         """Returns (new_state, metrics). Raises only after exhausting both
         retries and checkpoint restores."""
-        retries = 0
+        budget_used = 0     # retries since the last restore (the budget)
+        failed_attempts = 0  # cumulative, for stats
         while True:
             t0 = time.time()
             try:
                 out = self._run_once(state, batch, step)
                 dt = time.time() - t0
-                straggler = self._note_duration(dt)
+                straggler = self._meter.note(dt)
                 if straggler:
                     log.warning("step %d straggled: %.2fs (avg %.2fs)",
-                                step, dt, self._avg())
-                self.stats.append(StepStats(step, dt, retries, straggler))
+                                step, dt, self._meter.avg())
+                self.stats.append(StepStats(step, dt, failed_attempts, straggler))
                 return out
             except Exception as e:  # noqa: BLE001 -- deliberate catch-all
-                retries += 1
+                budget_used += 1
+                failed_attempts += 1
                 log.warning("step %d failed (%s: %s), retry %d/%d",
-                            step, type(e).__name__, e, retries,
+                            step, type(e).__name__, e, budget_used,
                             self.cfg.max_retries_per_step)
-                if retries <= self.cfg.max_retries_per_step:
+                if budget_used <= self.cfg.max_retries_per_step:
                     continue
                 if self.restore_fn is not None and self._restores < self.cfg.max_restores:
                     self._restores += 1
                     log.warning("restoring from checkpoint (restore %d/%d)",
                                 self._restores, self.cfg.max_restores)
                     state, _ = self.restore_fn()
-                    retries = 0
+                    budget_used = 0  # fresh budget; failed_attempts keeps history
                     continue
                 raise
-
-    # ---------------------------------------------------------------- #
-    def _note_duration(self, dt: float) -> bool:
-        w = self._durations[-self.cfg.straggler_window:]
-        straggler = bool(w) and dt > self.cfg.straggler_slack * (sum(w) / len(w))
-        self._durations.append(dt)
-        return straggler
-
-    def _avg(self) -> float:
-        w = self._durations[-self.cfg.straggler_window:]
-        return sum(w) / max(1, len(w))

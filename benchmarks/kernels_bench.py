@@ -1,0 +1,292 @@
+"""Kernel co-design benchmark: planned-vs-default block configs + the
+measured-vs-modeled calibration report (docs/codesign.md).
+
+For every (kernel, shape) cell the bench plans a BlockConfig through the
+unified ``codesign.plan`` path, predicts model cycles for BOTH the
+planned and the legalized-default config (does the planner actually beat
+the safe defaults in the model's own eyes?), MEASURES the emitted Pallas
+kernel (interpret mode on CPU -- the CI configuration; real timing on a
+TPU container), and records each measurement next to its prediction in a
+:class:`~repro.codesign.calibrate.CalibrationTable`. The table's
+per-kernel x shape model-error report (residual % after the per-kernel
+calibration scale) is the validation artifact this bench publishes.
+
+Output goes to ``experiments/benchmarks/kernels.json`` (full rows) and
+``BENCH_kernels.json`` at the repo root (the CI-tracked summary,
+uploaded as an artifact alongside the figure plots).
+
+Usage:
+    python benchmarks/kernels_bench.py [--smoke] [--repeats N]
+                                       [--store DIR] [--calibration FILE]
+                                       [--no-regress-check]
+                                       [--regress-margin F]
+                                       [--update-baseline]
+
+``--smoke`` runs a reduced shape matrix that finishes in about a minute
+and gates the DETERMINISTIC summary rows against the committed
+``BENCH_kernels.json`` (warn-and-record bootstrap like
+``mappers_bench``): the gate compares ``cycles_ratio`` (planned/default
+predicted cycles -- pure model output, no timing noise) and fails when a
+cell regresses past ``--regress-margin``; a missing baseline is recorded
+from the run, and first-run cells are warned about and appended without
+touching existing rows. Measured time and model-error rows are reported
+and recorded but never gated -- interpret-mode wall time is container
+noise. Smoke runs never replace existing baseline rows; pass
+``--update-baseline`` to rewrite deliberately.
+
+``--store DIR`` persists the plan cache across invocations (warm cells
+skip the mapper search); ``--calibration FILE`` persists the calibration
+table (CI uploads both artifacts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+OUT = Path("experiments/benchmarks")
+ROOT_BENCH = Path("BENCH_kernels.json")
+
+# (kernel, [shapes]) -- shape meaning is per KernelSpace: matmul (M,N,K),
+# flash_attention (Sq,Skv,D), ssd_scan (hp,n)
+SMOKE_MATRIX = [
+    ("matmul", [(128, 128, 128), (256, 256, 128)]),
+    ("flash_attention", [(128, 128, 64), (256, 256, 64)]),
+    ("ssd_scan", [(64, 64), (64, 128)]),
+]
+FULL_MATRIX = [
+    ("matmul", [(128, 128, 128), (256, 256, 128), (512, 512, 512),
+                (1024, 1024, 1024)]),
+    ("flash_attention", [(128, 128, 64), (256, 256, 64), (512, 512, 128),
+                         (1024, 1024, 128)]),
+    ("ssd_scan", [(64, 64), (64, 128), (128, 128), (256, 64)]),
+]
+
+_GATED_SECTION = "cycles_ratio"  # deterministic: pure model output
+_SUMMARY_ROW_SECTIONS = (
+    "cycles_ratio", "model_error_pct", "measured_s", "planned_config",
+)
+
+
+def _key(kernel: str, shape) -> str:
+    return f"{kernel}/{'x'.join(map(str, shape))}"
+
+
+def record_baseline_rows(summary: dict, base: dict, new_keys, baseline_path: Path):
+    """Merge first-run cells into the committed baseline WITHOUT touching
+    existing rows -- the bootstrap half of the warn-and-record contract."""
+    for section in _SUMMARY_ROW_SECTIONS:
+        rows = summary.get(section, {})
+        dst = base.setdefault(section, {})
+        for key in new_keys:
+            if key in rows:
+                dst[key] = rows[key]
+    baseline_path.write_text(json.dumps(base, indent=1))
+    return base
+
+
+def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
+    """Fail (SystemExit) when a planned config's model cycles regress past
+    ``margin`` x the committed planned/default ratio. First runs bootstrap
+    (warn-and-record, never crash or false-fail): a missing baseline file
+    is recorded from this run; cells benchmarked for the first time are
+    warned about and appended; existing rows are never overwritten."""
+    if not baseline_path.exists():
+        print(
+            f"[kernels] no baseline at {baseline_path}; recording this run "
+            "as the first baseline (no gate on a first run)"
+        )
+        baseline_path.write_text(json.dumps(summary, indent=1))
+        return
+    try:
+        base = json.loads(baseline_path.read_text())
+    except Exception as e:  # pragma: no cover - unreadable baseline
+        print(f"[kernels] unreadable baseline ({e}); skipping regression gate")
+        return
+    if base.get("smoke") != summary["smoke"]:
+        print("[kernels] baseline matrix differs (smoke); skipping gate")
+        return
+    failures = []
+    new_keys = []
+    for key, new_v in summary[_GATED_SECTION].items():
+        old_v = base.get(_GATED_SECTION, {}).get(key)
+        if old_v is None:
+            new_keys.append(key)
+        elif old_v and new_v > old_v * margin:
+            failures.append(
+                f"  {key}: planned/default cycles {new_v:.3f} > "
+                f"{margin:.2f} x committed {old_v:.3f}"
+            )
+    if failures:
+        raise SystemExit(
+            "[kernels] planned-config REGRESSION vs committed "
+            f"BENCH_kernels.json (margin {margin:.2f}):\n" + "\n".join(failures)
+        )
+    print(f"[kernels] regression gate OK (margin {margin:.2f} vs {baseline_path})")
+    if new_keys:
+        print(
+            f"[kernels] WARNING: no committed baseline row for {new_keys} "
+            "(first run of this kernel/shape); recording these rows"
+        )
+        record_baseline_rows(summary, base, new_keys, baseline_path)
+
+
+def run(smoke: bool = False, repeats: int = 3, store_dir: str | None = None,
+        calibration: str | None = None, regress_check: bool = True,
+        regress_margin: float = 1.25, update_baseline: bool = False) -> dict:
+    from repro import codesign
+    from repro.codesign.calibrate import CalibrationTable, measure_kernel
+    from repro.core.cost.store import ResultStore
+
+    spaces = codesign.all_spaces()
+    matrix = SMOKE_MATRIX if smoke else FULL_MATRIX
+    store = ResultStore(store_dir) if store_dir else None
+    table = CalibrationTable(calibration)
+    codesign.reset_planner_stats()
+    rows = []
+    for kname, shapes in matrix:
+        space = spaces[kname]
+        for shape in shapes:
+            p = codesign.plan(space, shape, store=store)
+            default_cfg = space.legalize(space.default_config(shape), shape)
+            d_cost = codesign.predict_cost(space, shape, default_cfg)
+            p_cost = p.cost or codesign.predict_cost(space, shape, p.config)
+            measured = measure_kernel(
+                space, shape, p.config, interpret=True, repeats=repeats
+            )
+            table.record(
+                kname, shape, p.config,
+                codesign.planner._resolve_model(space, None).store_key_parts(),
+                p_cost.latency_cycles, p_cost.frequency_hz, measured,
+                interpret=True, repeats=repeats,
+            )
+            rows.append({
+                "kernel": kname,
+                "shape": list(shape),
+                "planned_config": list(p.config),
+                "default_config": list(default_cfg),
+                "plan_source": p.source,
+                "planned_cycles": p_cost.latency_cycles,
+                "default_cycles": d_cost.latency_cycles,
+                "cycles_ratio": p_cost.latency_cycles / d_cost.latency_cycles,
+                "predicted_s": p_cost.latency_s,
+                "measured_interpret_s": measured,
+            })
+    # per-kernel x shape model error AFTER the per-kernel calibration scale
+    err_by_key = {
+        _key(r["kernel"], r["shape"]): r["abs_error_pct"]
+        for r in table.model_error_report()
+    }
+    scales = {
+        k: (table.scale_for(k).scale if table.scale_for(k) else None)
+        for k, _shapes in matrix
+    }
+    for r in rows:
+        r["model_error_pct"] = err_by_key.get(_key(r["kernel"], r["shape"]))
+        r["calibration_scale"] = scales[r["kernel"]]
+        print(
+            f"[kernels] {r['kernel']:16s} {str(tuple(r['shape'])):18s} "
+            f"planned {str(tuple(r['planned_config'])):18s} "
+            f"({r['plan_source']}) "
+            f"cycles {r['planned_cycles']:.3e} "
+            f"(default x{r['cycles_ratio']:.2f}) "
+            f"measured {r['measured_interpret_s']*1e3:8.2f}ms "
+            f"err {r['model_error_pct']:6.1f}%"
+        )
+    stats = codesign.planner_stats()
+    print(f"[kernels] planner: {stats}")
+    result = {
+        "figure": "kernels",
+        "smoke": smoke,
+        "interpret": True,
+        "rows": rows,
+        "planner_stats": stats,
+        "calibration": table.stats_dict(),
+        "calibration_scales": scales,
+    }
+    if store is not None:
+        store.flush()
+        result["plan_store"] = store.stats_dict()
+        print(f"[kernels] plan store: {result['plan_store']}")
+    if calibration:
+        table.flush()
+        print(f"[kernels] calibration table: {calibration} "
+              f"({table.stats_dict()})")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "kernels.json").write_text(json.dumps(result, indent=1))
+    summary = {
+        "smoke": smoke,
+        "interpret": True,
+        "cycles_ratio": {
+            _key(r["kernel"], r["shape"]): round(r["cycles_ratio"], 4)
+            for r in rows
+        },
+        "model_error_pct": {
+            _key(r["kernel"], r["shape"]): (
+                round(r["model_error_pct"], 2)
+                if r["model_error_pct"] is not None else None
+            )
+            for r in rows
+        },
+        "measured_s": {
+            _key(r["kernel"], r["shape"]): round(r["measured_interpret_s"], 5)
+            for r in rows
+        },
+        "planned_config": {
+            _key(r["kernel"], r["shape"]): list(r["planned_config"])
+            for r in rows
+        },
+        "calibration_scale": {
+            k: (round(v, 5) if v is not None else None)
+            for k, v in scales.items()
+        },
+        "plan_fallbacks": stats["plan_fallbacks"],
+    }
+    ROOT_BENCH_exists = ROOT_BENCH.exists()
+    if smoke and regress_check and not update_baseline:
+        check_regression(summary, ROOT_BENCH, regress_margin)
+    elif smoke and update_baseline:
+        print("[kernels] regression gate skipped: --update-baseline is a "
+              "deliberate baseline rewrite")
+    # Baseline rewrite rules mirror mappers_bench: a merely-passing smoke
+    # run never replaces existing rows; full runs refuse to clobber a
+    # committed smoke baseline unless --update-baseline.
+    write_baseline = update_baseline
+    if not update_baseline and not smoke:
+        try:
+            write_baseline = not json.loads(ROOT_BENCH.read_text()).get("smoke", False)
+        except Exception:
+            write_baseline = True  # absent/unreadable baseline: establish one
+    if write_baseline:
+        ROOT_BENCH.write_text(json.dumps(summary, indent=1))
+    elif not smoke and ROOT_BENCH_exists:
+        print(f"[kernels] baseline untouched ({ROOT_BENCH} is a smoke "
+              "baseline; pass --update-baseline to replace it)")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shape matrix + regression gate (CI)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N timing per cell")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent plan-cache ResultStore directory")
+    ap.add_argument("--calibration", default=None, metavar="FILE",
+                    help="persist the calibration table to FILE")
+    ap.add_argument("--no-regress-check", action="store_true",
+                    help="skip the smoke-mode cycles_ratio gate vs "
+                         "BENCH_kernels.json")
+    ap.add_argument("--regress-margin", type=float, default=1.25,
+                    help="fail when planned/default cycles exceed this "
+                         "multiple of the committed ratio (smoke only)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite BENCH_kernels.json from this run")
+    args = ap.parse_args()
+    run(smoke=args.smoke, repeats=args.repeats, store_dir=args.store,
+        calibration=args.calibration,
+        regress_check=not args.no_regress_check,
+        regress_margin=args.regress_margin,
+        update_baseline=args.update_baseline)

@@ -1,0 +1,389 @@
+"""Measured-vs-modeled calibration: the feedback half of the co-design
+loop.
+
+The cost models predict cycles from a mapping; nothing in the original
+stack ever checked those predictions against the kernels we actually
+emit. This module benchmarks the emitted Pallas kernel per
+(kernel, shape, BlockConfig) -- interpret mode on CPU for CI, real device
+timing when available -- and records the measured wall time next to the
+model's predicted cycles in a :class:`CalibrationTable`.
+
+The table persists as ONE versioned JSON file with the same discipline as
+``core/cost/store.py``: plain-data JSON (never pickle -- a table is meant
+to be shared as a CI artifact, and loading it must never be a
+code-execution surface), writer-unique tmp + atomic rename under an
+advisory flock, stale-tmp cleanup, and corrupt/version-mismatched
+payloads tolerated (counted, then overwritten on next flush) rather than
+fatal.
+
+From the table two things flow back into the stack:
+
+  * :meth:`CalibrationTable.scale_for` distills the records into a
+    :class:`CalibrationScale` -- the geometric-mean ratio of measured to
+    predicted seconds -- which plugs into any
+    :class:`~repro.core.cost.base.CostModel` via ``set_calibration()``.
+    A calibrated model rescales every latency prediction by that factor
+    and reports the calibration in ``store_key_parts()``, so calibrated
+    and raw results never alias in a ``ResultStore``.
+  * :meth:`CalibrationTable.model_error_report` summarizes the residual
+    per-kernel x shape model error AFTER applying the scale -- the
+    validation artifact ``kernels_bench`` publishes.
+
+Interpret-mode wall time is a CPU emulation, not device time; the scale
+it produces is still a perfectly valid regression target for CI (it is
+deterministic enough to catch model drift), which is why the ``interpret``
+flag is recorded on every row and :meth:`scale_for` never mixes interpret
+and device rows.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import math
+import os
+import time
+import uuid
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platform
+    fcntl = None
+
+from repro.codesign.space import BlockConfig, KernelSpace
+
+log = logging.getLogger("repro.codesign")
+
+CALIBRATION_VERSION = 1
+
+
+@dataclass(frozen=True)
+class CalibrationScale:
+    """A distilled calibration: multiply predicted latency by ``scale``.
+
+    ``key_parts()`` is what a calibrated :class:`CostModel` appends to its
+    ``store_key_parts()`` -- it identifies the calibration (value +
+    provenance), so results computed under different calibrations can
+    never alias in a ResultStore."""
+
+    scale: float
+    n_records: int = 0
+    source: str = ""  # e.g. "interpret:matmul" or "device:*"
+
+    def __post_init__(self):
+        if not (self.scale > 0.0 and math.isfinite(self.scale)):
+            raise ValueError(
+                f"calibration scale must be a finite positive number, "
+                f"got {self.scale!r}"
+            )
+
+    def key_parts(self) -> Tuple[object, ...]:
+        return ("calibrated", f"{self.scale:.6e}", self.source)
+
+
+def _measured_key(kernel: str, shape, config) -> str:
+    return f"{kernel}|{','.join(map(str, shape))}|{','.join(map(str, config))}"
+
+
+class CalibrationTable:
+    """Append-mostly table of measured-vs-predicted rows.
+
+    Each row: ``{kernel, shape, config, model, predicted_cycles,
+    frequency_hz, predicted_s, measured_s, interpret, repeats, ts}``.
+    Re-recording the same (kernel, shape, config, model, interpret) cell
+    replaces the old row -- measurements supersede, they do not
+    accumulate. ``path=None`` keeps the table purely in memory."""
+
+    def __init__(self, path: Optional[object] = None) -> None:
+        self.path = Path(path) if path is not None else None
+        self.rows: List[dict] = []
+        # store.py-style health counters
+        self.corrupt_payloads = 0
+        self.version_mismatches = 0
+        self.stale_tmps = 0
+        if self.path is not None and self.path.exists():
+            self._load()
+
+    # -------------------------------------------------------------- #
+    def _load(self) -> None:
+        try:
+            payload = json.loads(self.path.read_text())
+            if not isinstance(payload, dict):
+                raise ValueError("payload is not an object")
+            if payload.get("version") != CALIBRATION_VERSION:
+                self.version_mismatches += 1
+                log.warning(
+                    "calibration table %s: version %r != %d; starting "
+                    "empty (file will be rewritten on flush)",
+                    self.path, payload.get("version"), CALIBRATION_VERSION,
+                )
+                return
+            rows = payload.get("rows")
+            if not isinstance(rows, list):
+                raise ValueError("rows is not a list")
+            self.rows = [r for r in rows if self._row_ok(r)]
+            dropped = len(rows) - len(self.rows)
+            if dropped:
+                self.corrupt_payloads += dropped
+        except (OSError, ValueError):
+            self.corrupt_payloads += 1
+            log.warning(
+                "calibration table %s: corrupt payload; starting empty",
+                self.path,
+            )
+
+    @staticmethod
+    def _row_ok(r) -> bool:
+        try:
+            return (
+                isinstance(r, dict)
+                and isinstance(r["kernel"], str)
+                and float(r["predicted_s"]) > 0.0
+                and float(r["measured_s"]) > 0.0
+            )
+        except (KeyError, TypeError, ValueError):
+            return False
+
+    # -------------------------------------------------------------- #
+    def record(
+        self,
+        kernel: str,
+        shape: Sequence[int],
+        config: BlockConfig,
+        model: Sequence[object],
+        predicted_cycles: float,
+        frequency_hz: float,
+        measured_s: float,
+        *,
+        interpret: bool = True,
+        repeats: int = 1,
+    ) -> dict:
+        row = {
+            "kernel": str(kernel),
+            "shape": [int(s) for s in shape],
+            "config": [int(c) for c in config],
+            "model": [repr(p) for p in model],
+            "predicted_cycles": float(predicted_cycles),
+            "frequency_hz": float(frequency_hz),
+            "predicted_s": float(predicted_cycles) / float(frequency_hz),
+            "measured_s": float(measured_s),
+            "interpret": bool(interpret),
+            "repeats": int(repeats),
+            "ts": time.time(),
+        }
+        cell = (row["kernel"], row["shape"], row["config"], row["model"],
+                row["interpret"])
+        self.rows = [
+            r for r in self.rows
+            if (r["kernel"], r["shape"], r["config"], r["model"],
+                r.get("interpret", True)) != cell
+        ]
+        self.rows.append(row)
+        return row
+
+    def _select(
+        self, kernel: Optional[str], interpret: Optional[bool]
+    ) -> List[dict]:
+        out = []
+        for r in self.rows:
+            if kernel is not None and r["kernel"] != kernel:
+                continue
+            if interpret is not None and bool(r.get("interpret", True)) != interpret:
+                continue
+            out.append(r)
+        return out
+
+    # -------------------------------------------------------------- #
+    def scale_for(
+        self,
+        kernel: Optional[str] = None,
+        *,
+        interpret: bool = True,
+    ) -> Optional[CalibrationScale]:
+        """Geometric-mean measured/predicted seconds over the matching
+        rows (``kernel=None`` pools every kernel). Geomean, not mean:
+        ratios compose multiplicatively and a geomean is insensitive to
+        which side of the ratio you average. Returns ``None`` when no
+        usable rows exist -- callers then simply leave the model
+        uncalibrated."""
+        rows = self._select(kernel, interpret)
+        logs = [
+            math.log(r["measured_s"] / r["predicted_s"])
+            for r in rows
+            if r["predicted_s"] > 0.0 and r["measured_s"] > 0.0
+        ]
+        if not logs:
+            return None
+        mode = "interpret" if interpret else "device"
+        return CalibrationScale(
+            scale=math.exp(sum(logs) / len(logs)),
+            n_records=len(logs),
+            source=f"{mode}:{kernel or '*'}",
+        )
+
+    def model_error_report(
+        self,
+        kernel: Optional[str] = None,
+        *,
+        interpret: bool = True,
+    ) -> List[dict]:
+        """Residual model error per (kernel, shape) AFTER applying this
+        table's scale: ``error_pct = 100 * (scale*predicted_s -
+        measured_s) / measured_s``. The per-kernel scale is used when that
+        kernel has rows, the pooled scale otherwise."""
+        report = []
+        kernels = sorted({r["kernel"] for r in self._select(kernel, interpret)})
+        for k in kernels:
+            cal = self.scale_for(k, interpret=interpret) or self.scale_for(
+                None, interpret=interpret
+            )
+            s = cal.scale if cal else 1.0
+            for r in self._select(k, interpret):
+                err = 100.0 * (s * r["predicted_s"] - r["measured_s"]) / r[
+                    "measured_s"
+                ]
+                report.append(
+                    {
+                        "kernel": k,
+                        "shape": list(r["shape"]),
+                        "config": list(r["config"]),
+                        "predicted_s": r["predicted_s"],
+                        "measured_s": r["measured_s"],
+                        "scale": s,
+                        "error_pct": err,
+                        "abs_error_pct": abs(err),
+                        "interpret": bool(r.get("interpret", True)),
+                    }
+                )
+        return report
+
+    # -------------------------------------------------------------- #
+    def _lock(self):
+        """Advisory flock on ``<table>.lock`` (constant file, never
+        unlinked -- same rationale as the ResultStore directory lock)."""
+        import contextlib
+
+        @contextlib.contextmanager
+        def cm():
+            if fcntl is None or self.path is None:
+                yield
+                return
+            with open(self.path.with_name(self.path.name + ".lock"), "w") as lf:
+                fcntl.flock(lf, fcntl.LOCK_EX)
+                try:
+                    yield
+                finally:
+                    fcntl.flock(lf, fcntl.LOCK_UN)
+
+        return cm()
+
+    def flush(self) -> int:
+        """Atomically write the table (writer-unique tmp + rename under
+        the lock, stale ``.ctmp`` scratch cleaned). No-op in-memory."""
+        if self.path is None:
+            return 0
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": CALIBRATION_VERSION, "rows": self.rows}
+        with self._lock():
+            now = time.time()
+            for tmp in self.path.parent.glob(f".{self.path.name}.*.ctmp"):
+                try:
+                    if fcntl is None and now - tmp.stat().st_mtime < 60.0:
+                        continue
+                    tmp.unlink()  # crashed writer's scratch
+                    self.stale_tmps += 1
+                except OSError:
+                    pass
+            tmp = self.path.with_name(
+                f".{self.path.name}.{os.getpid()}.{uuid.uuid4().hex[:8]}.ctmp"
+            )
+            tmp.write_text(json.dumps(payload, separators=(",", ":")))
+            tmp.replace(self.path)
+        return len(self.rows)
+
+    def stats_dict(self) -> dict:
+        return {
+            "rows": len(self.rows),
+            "kernels": sorted({r["kernel"] for r in self.rows}),
+            "corrupt_payloads": self.corrupt_payloads,
+            "version_mismatches": self.version_mismatches,
+            "stale_tmps": self.stale_tmps,
+        }
+
+
+# ---------------------------------------------------------------------- #
+# measurement
+# ---------------------------------------------------------------------- #
+def measure_kernel(
+    space: KernelSpace,
+    shape: Sequence[int],
+    config: BlockConfig,
+    *,
+    interpret: bool = True,
+    repeats: int = 3,
+    seed: int = 0,
+) -> float:
+    """Best-of-``repeats`` wall seconds for one kernel launch at
+    ``config`` (after one untimed warmup to exclude trace/compile time).
+    Best-of-N, not mean: scheduling noise only ever ADDS time, so the
+    minimum is the least-noisy estimator of the kernel itself."""
+    import jax
+
+    inputs = space.example_inputs(shape, seed=seed)
+    out = space.run(inputs, config, interpret=interpret)  # warmup
+    jax.block_until_ready(out)
+    best = math.inf
+    for _ in range(max(1, int(repeats))):
+        t0 = time.perf_counter()
+        out = space.run(inputs, config, interpret=interpret)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate_kernel(
+    space: KernelSpace,
+    shapes: Sequence[Sequence[int]],
+    table: Optional[CalibrationTable] = None,
+    *,
+    model: Optional[object] = None,
+    interpret: bool = True,
+    repeats: int = 3,
+    **plan_kwargs,
+) -> CalibrationTable:
+    """Plan, predict, measure, and record each shape; returns the table.
+
+    Each shape goes through the unified :func:`~repro.codesign.planner.
+    plan` path (so calibration benchmarks exactly the BlockConfig the
+    kernel would launch), the model's predicted cost for the legalized
+    config is read off the plan, and the measured time lands next to it
+    in the table. Caller owns ``table.flush()``."""
+    from repro.codesign.planner import _resolve_model, plan
+
+    table = table if table is not None else CalibrationTable()
+    cm = _resolve_model(space, model)
+    for shape in shapes:
+        p = plan(space, shape, model=cm, **plan_kwargs)
+        cost = p.cost
+        if cost is None:
+            from repro.codesign.planner import predict_cost
+
+            cost = predict_cost(space, shape, p.config, cm)
+        measured = measure_kernel(
+            space, shape, p.config, interpret=interpret, repeats=repeats
+        )
+        table.record(
+            space.name,
+            shape,
+            p.config,
+            cm.store_key_parts(),
+            cost.latency_cycles,
+            cost.frequency_hz,
+            measured,
+            interpret=interpret,
+            repeats=repeats,
+        )
+    return table

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import abc
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -52,13 +53,89 @@ class Cost:
 
 
 class CostModel(abc.ABC):
-    """Every cost model: conformability check + evaluate (+ lower bound)."""
+    """Every cost model: conformability check + evaluate (+ lower bound).
+
+    **Calibration hook.** A model may carry an optional calibration (a
+    measured-vs-modeled latency scale produced by
+    ``repro.codesign.calibrate``; any object with a positive-float
+    ``scale`` and a ``key_parts()`` tuple works). A calibrated model
+    multiplies every latency prediction by that scale as the FINAL
+    operation of the scalar paths (``evaluate``, ``evaluate_signature``,
+    the ``lower_bound*`` family) -- a uniform positive final multiply
+    keeps the admission invariant (bound <= evaluate, since IEEE multiply
+    by the same positive factor is monotone) and never changes which
+    mapping is argmin. The vectorized fast paths
+    (``lower_bound_batch_fn``, ``batch_admit_core_builder``,
+    ``batch_cost_terms_fn``, ``evaluate_signature_batch``) instead return
+    None while calibrated -- the engine's documented fallback to the
+    scalar path -- so their bit-identity contracts stay trivially true.
+    ``store_key_parts()`` includes ``calibration_key_parts()``, so
+    calibrated and raw results never alias in a ResultStore.
+    """
 
     name: str = "base"
+    #: optional calibration scale (None = raw model, byte-identical to
+    #: the pre-calibration behavior); set via :meth:`set_calibration`
+    calibration = None
 
     @abc.abstractmethod
     def evaluate(self, problem: Problem, mapping: Mapping, arch: Architecture) -> Cost:
         ...
+
+    # ------------------------------------------------------------------ #
+    # calibration
+    # ------------------------------------------------------------------ #
+    def set_calibration(self, calibration) -> "CostModel":
+        """Attach (or with None, remove) a calibration; returns self for
+        chaining: ``TimeloopLikeModel().set_calibration(scale)``."""
+        if calibration is not None:
+            s = float(calibration.scale)
+            if not (s > 0.0 and math.isfinite(s)):
+                raise ValueError(
+                    f"calibration scale must be finite and positive, got {s!r}"
+                )
+            calibration.key_parts()  # fail fast on a malformed object
+        self.calibration = calibration
+        return self
+
+    @property
+    def calibration_scale(self) -> float:
+        """The latency multiplier in effect (1.0 when uncalibrated)."""
+        return float(self.calibration.scale) if self.calibration is not None else 1.0
+
+    def calibration_key_parts(self) -> "tuple":
+        """Store-key suffix identifying the active calibration (empty when
+        uncalibrated, so raw-model keys are unchanged by this feature)."""
+        if self.calibration is None:
+            return ()
+        return tuple(self.calibration.key_parts())
+
+    def apply_calibration(self, cost: Cost) -> Cost:
+        """Rescale a raw Cost's latency by the calibration scale (identity
+        when uncalibrated -- the raw object passes through untouched). The
+        scale is recorded in the breakdown for provenance."""
+        if self.calibration is None:
+            return cost
+        s = float(self.calibration.scale)
+        breakdown = dict(cost.breakdown)
+        breakdown["calibration_scale"] = s
+        return Cost(
+            latency_cycles=cost.latency_cycles * s,
+            energy_pj=cost.energy_pj,
+            utilization=cost.utilization,
+            macs=cost.macs,
+            frequency_hz=cost.frequency_hz,
+            breakdown=breakdown,
+        )
+
+    def _calibrate_bound(self, bound: "tuple[float, float]") -> "tuple[float, float]":
+        """Apply the calibration scale to a ``(cycles, energy_pj)`` lower
+        bound -- same final multiply as :meth:`apply_calibration`, so the
+        admission invariant (bound <= evaluate) survives calibration."""
+        if self.calibration is None:
+            return bound
+        cycles, energy = bound
+        return cycles * float(self.calibration.scale), energy
 
     def lower_bound(
         self,
@@ -184,8 +261,10 @@ class CostModel(abc.ABC):
         ``repro.core.cost.store``). Two model instances with equal parts
         MUST produce bit-identical Costs for every (problem, arch,
         signature); models with scoring-relevant configuration override
-        this to include it."""
-        return (self.name,)
+        this to include it (and must append ``calibration_key_parts()``
+        like this default does, so calibrated results never alias raw
+        ones)."""
+        return (self.name,) + self.calibration_key_parts()
 
     def conformable(self, problem: Problem) -> bool:
         """Whether this model can evaluate the problem at all.

@@ -52,28 +52,47 @@ class MaestroLikeModel(CostModel):
         return problem.operation in _SUPPORTED_OPS and problem.unit_op == "mac2"
 
     def lower_bound(self, problem: Problem, mapping, arch: Architecture, sig=None):
-        return hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+        return self._calibrate_bound(
+            hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+        )
 
     def lower_bound_fn(self, problem: Problem, arch: Architecture):
-        return get_context(problem, arch).signature_lower_bound
+        fn = get_context(problem, arch).signature_lower_bound
+        if self.calibration is None:
+            return fn
+        return lambda sig: self._calibrate_bound(fn(sig))
 
     def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
-        return get_context(problem, arch).chains_lower_bound
+        fn = get_context(problem, arch).chains_lower_bound
+        if self.calibration is None:
+            return fn
+        # drop the optional (incumbent, scalarize) early-exit hints: they
+        # live in CALIBRATED metric space while fn computes raw bounds --
+        # computing the full raw bound and scaling it keeps the bound exact
+        return lambda chain_list, orders, *_hints: self._calibrate_bound(
+            fn(chain_list, orders)
+        )
 
     def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         return get_context(problem, arch).lower_bound_batch
 
     def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         return get_context(problem, arch)._make_lb_core
 
     def store_key_parts(self):
-        return (self.name, self.etab)
+        return (self.name, self.etab) + self.calibration_key_parts()
 
     def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
         """Array-program twin of ``evaluate_signature``'s latency/energy
         accumulation (double-buffered schedule + startup + NoC delivery
         term): same float-op order per row with numpy or jax.numpy. See
         ``CostModel.batch_cost_terms_fn``."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             return None
         ctx = get_context(problem, arch)
@@ -234,14 +253,14 @@ class MaestroLikeModel(CostModel):
         energy += noc_energy
         breakdown["noc_energy_pj"] = noc_energy
 
-        return Cost(
+        return self.apply_calibration(Cost(
             latency_cycles=latency,
             energy_pj=energy,
             utilization=par / ctx.num_pes,
             macs=problem.macs,
             frequency_hz=freq,
             breakdown=breakdown,
-        )
+        ))
 
     def evaluate_signature_batch(
         self,
@@ -260,6 +279,8 @@ class MaestroLikeModel(CostModel):
         here with numpy over the admitted subset. ``stacked``/``select``
         reuse the engine's admission-stage StackedBatch (see
         ``CostModel.evaluate_signature_batch``)."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} only supports operations {_SUPPORTED_OPS}, "
@@ -339,11 +360,11 @@ class MaestroLikeModel(CostModel):
         energy += noc_energy
         breakdown["noc_energy_pj"] = noc_energy
 
-        return Cost(
+        return self.apply_calibration(Cost(
             latency_cycles=latency,
             energy_pj=energy,
             utilization=prof.utilization,
             macs=problem.macs,
             frequency_hz=freq,
             breakdown=breakdown,
-        )
+        ))

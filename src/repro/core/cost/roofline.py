@@ -157,13 +157,15 @@ class TPURooflineModel(CostModel):
             memory_s = ctx.signature_min_boundary_bytes(sig, vmem_level) / hbm_bw
         cycles = max(compute_s, memory_s) * arch.frequency_hz
         energy = problem.macs * arch.clusters[-1].mac_energy
-        return cycles, energy
+        return self._calibrate_bound((cycles, energy))
 
     def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
         """Traceable form of the roofline admission bound (perfect chip
         scaling + compulsory VMEM traffic): an ``(xp, lax=None) -> core``
         builder whose core reproduces ``lower_bound`` per row bit-for-bit
         with numpy or inside the fused jitted program."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         ctx = get_context(problem, arch)
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
         hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
@@ -204,6 +206,8 @@ class TPURooflineModel(CostModel):
         a whole stacked batch, bit-identically -- or returns None beyond
         the float64-exact range so the engine falls back per candidate.
         Runs the same core the fused jitted path traces, with numpy."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         ctx = get_context(problem, arch)
         core = self.batch_admit_core_builder(problem, arch)(np)
 
@@ -228,6 +232,8 @@ class TPURooflineModel(CostModel):
         and collective terms from the stacked fan/tile matrices. Same
         float-operation order per row with numpy or jax.numpy. See
         ``CostModel.batch_cost_terms_fn``."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         ctx = get_context(problem, arch)
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
         hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
@@ -371,6 +377,8 @@ class TPURooflineModel(CostModel):
         (bit-identical; BATCH_EXACT_LIMIT guard falls back to the scalar
         path). ``stacked``/``select`` reuse the engine's admission-stage
         StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         ctx = get_context(problem, arch)
         bt = ctx.signature_traffic_batch(
             sigs, backend=backend, stacked=stacked, select=select
@@ -453,7 +461,7 @@ class TPURooflineModel(CostModel):
             + coll_bytes * used_chips * 2.0
             + problem.macs * arch.clusters[-1].mac_energy
         )
-        return Cost(
+        return self.apply_calibration(Cost(
             latency_cycles=latency_s * freq,
             energy_pj=energy_pj,
             utilization=mapping.utilization(problem, arch),
@@ -465,4 +473,4 @@ class TPURooflineModel(CostModel):
                 "collective_s": collective_s,
                 "bound": {"compute": 0.0, "memory": 1.0, "collective": 2.0}[rep.bound],
             },
-        )
+        ))

@@ -44,28 +44,47 @@ class TimeloopLikeModel(CostModel):
         return problem.unit_op == self.unit_op
 
     def lower_bound(self, problem: Problem, mapping, arch: Architecture, sig=None):
-        return hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+        return self._calibrate_bound(
+            hierarchical_lower_bound(problem, mapping, arch, sig=sig)
+        )
 
     def lower_bound_fn(self, problem: Problem, arch: Architecture):
-        return get_context(problem, arch).signature_lower_bound
+        fn = get_context(problem, arch).signature_lower_bound
+        if self.calibration is None:
+            return fn
+        return lambda sig: self._calibrate_bound(fn(sig))
 
     def lower_bound_chains_fn(self, problem: Problem, arch: Architecture):
-        return get_context(problem, arch).chains_lower_bound
+        fn = get_context(problem, arch).chains_lower_bound
+        if self.calibration is None:
+            return fn
+        # drop the optional (incumbent, scalarize) early-exit hints: they
+        # live in CALIBRATED metric space while fn computes raw bounds --
+        # computing the full raw bound and scaling it keeps the bound exact
+        return lambda chain_list, orders, *_hints: self._calibrate_bound(
+            fn(chain_list, orders)
+        )
 
     def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         return get_context(problem, arch).lower_bound_batch
 
     def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         return get_context(problem, arch)._make_lb_core
 
     def store_key_parts(self):
-        return (self.name, self.unit_op)
+        return (self.name, self.unit_op) + self.calibration_key_parts()
 
     def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
         """Array-program twin of ``evaluate_signature``'s latency/energy
         accumulation: same float-operation order per row, runnable with
         numpy (host scoring) or jax.numpy (inside the fused jitted
         core). See ``CostModel.batch_cost_terms_fn``."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             return None
         ctx = get_context(problem, arch)
@@ -200,14 +219,14 @@ class TimeloopLikeModel(CostModel):
         energy += problem.macs * leaf.mac_energy
         breakdown["energy_mac_pj"] = problem.macs * leaf.mac_energy
 
-        return Cost(
+        return self.apply_calibration(Cost(
             latency_cycles=latency,
             energy_pj=energy,
             utilization=par / ctx.num_pes,
             macs=problem.macs,
             frequency_hz=freq,
             breakdown=breakdown,
-        )
+        ))
 
     def evaluate_signature_batch(
         self,
@@ -227,6 +246,8 @@ class TimeloopLikeModel(CostModel):
         with numpy over the admitted subset. ``stacked``/``select`` reuse
         the engine's admission-stage StackedBatch (see
         ``CostModel.evaluate_signature_batch``)."""
+        if self.calibration is not None:
+            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} configured with unit op {self.unit_op!r} cannot "
@@ -293,11 +314,11 @@ class TimeloopLikeModel(CostModel):
         energy += problem.macs * arch.clusters[-1].mac_energy
         breakdown["energy_mac_pj"] = problem.macs * arch.clusters[-1].mac_energy
 
-        return Cost(
+        return self.apply_calibration(Cost(
             latency_cycles=latency,
             energy_pj=energy,
             utilization=prof.utilization,
             macs=problem.macs,
             frequency_hz=freq,
             breakdown=breakdown,
-        )
+        ))

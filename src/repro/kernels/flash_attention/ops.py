@@ -1,9 +1,13 @@
 """Public flash-attention op: (b,s,h,d) layout adapter, padding, decode path.
 
-Block sizes come from a Union mapping of the attention score Problem
-(einsum ``qd,kd->qk`` per head) onto ``tpu_chip()``: the C1 temporal tile
-(bq, bk) must satisfy rule R3 with the f32 score block + q/k/v/acc blocks
-resident -- same legality machinery as the matmul planner.
+Block sizes come from the shared co-design layer (docs/codesign.md):
+:class:`FlashAttentionSpace` registers the per-head attention score
+Problem (einsum ``qd,kd->qk``) with ``repro.codesign``, and
+``plan_blocks`` is a thin wrapper over the single ``codesign.plan`` path.
+The C1 temporal tile (bq, bk) must satisfy rule R3 with the f32 score
+block + q/k/v/acc blocks resident -- same legality machinery (and now the
+same planner, plan cache, and VMEM-budget convention) as the matmul
+kernel.
 
 Gradients: forward runs the Pallas kernel; backward recomputes through the
 jnp oracle (ref.py) under ``jax.vjp`` -- numerically identical math. A
@@ -20,46 +24,67 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codesign
 from repro import kernels as _cfg
-from repro.core.architecture import tpu_chip
+from repro.codesign import KernelSpace, repair_tile, round_up
 from repro.core.constraints import mxu_aligned
-from repro.core.optimizer import union_opt
 from repro.core.problem import Problem
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+class FlashAttentionSpace(KernelSpace):
+    """Co-design space of the flash-attention kernel: shape =
+    (Sq, Skv, D) per head, BlockConfig = (bq, bk)."""
+
+    name = "flash_attention"
+    decode_dims = ("q", "k")
+    search_budget = 200
+
+    def problem(self, shape):
+        Sq, Skv, D = shape
+        return Problem.from_einsum(
+            "attn_scores", "qd,kd->qk", {"q": Sq, "k": Skv, "d": D}, "GEMM"
+        )
+
+    def constraints(self, shape):
+        return mxu_aligned(["q", "k"], 128)
+
+    def legalize(self, config, shape, vmem_budget=None):
+        bq, bk = config
+        Sq, Skv, _D = shape
+        # blocks above 1024 blow the f32 score block past rule R3 even
+        # when the mapper's coarser model admits them: cap, then repair
+        # into divisor tiles
+        return (
+            repair_tile(bq, Sq, 512, cap=1024),
+            repair_tile(bk, Skv, 512, cap=1024),
+        )
+
+    def example_inputs(self, shape, seed: int = 0):
+        Sq, Skv, D = shape
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return (
+            jax.random.normal(kq, (1, Sq, 1, D), jnp.float32),
+            jax.random.normal(kk, (1, Skv, 1, D), jnp.float32),
+            jax.random.normal(kv, (1, Skv, 1, D), jnp.float32),
+        )
+
+    def run(self, inputs, config, interpret: bool = True):
+        q, k, v = inputs
+        return flash_attention(
+            q, k, v, causal=False, blocks=tuple(config), interpret=interpret
+        )
+
+
+FLASH_ATTENTION_SPACE = codesign.register_space(FlashAttentionSpace())
 
 
 @functools.lru_cache(maxsize=256)
 def plan_blocks(Sq: int, Skv: int, D: int) -> Tuple[int, int]:
-    """Union-opt the per-head score GEMM (Sq x Skv x D) for (bq, bk)."""
-    problem = Problem.from_einsum(
-        "attn_scores", "qd,kd->qk", {"q": Sq, "k": Skv, "d": D}, "GEMM"
-    )
-    cons = mxu_aligned(["q", "k"], 128)
-    try:
-        sol = union_opt(
-            problem, tpu_chip(vmem_tile_budget=8 * (1 << 20)),
-            mapper="heuristic", cost_model="timeloop",
-            metric="latency", constraints=cons, climb_steps=200,
-        )
-        leaf = sol.mapping.levels[-1]
-        bq, bk = leaf.tt("q"), leaf.tt("k")
-    except Exception:
-        bq = bk = 0
-
-    def _fix(b: int, dim: int, default: int) -> int:
-        if b >= 128 and dim % b == 0 and b <= 1024:
-            return b
-        d = min(default, dim)
-        while dim % d != 0:
-            d //= 2
-        return max(d, 1)
-
-    return _fix(bq, Sq, 512), _fix(bk, Skv, 512)
+    """Plan the per-head score GEMM (Sq x Skv x D) via ``codesign.plan``;
+    return (bq, bk)."""
+    return codesign.plan(FLASH_ATTENTION_SPACE, (Sq, Skv, D)).config
 
 
 # ------------------------------------------------------------------ #
@@ -118,9 +143,9 @@ def flash_attention(
     b, Sq, hq, d = q.shape
     _, Skv, hkv, dv = v.shape
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
-    bq, bk = blocks or plan_blocks(_round_up(Sq, 128), _round_up(Skv, 128), d)
-    bq, bk = min(bq, _round_up(Sq, 8)), min(bk, _round_up(Skv, 8))
-    Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bk)
+    bq, bk = blocks or plan_blocks(round_up(Sq, 128), round_up(Skv, 128), d)
+    bq, bk = min(bq, round_up(Sq, 8)), min(bk, round_up(Skv, 8))
+    Sqp, Skvp = round_up(Sq, bq), round_up(Skv, bk)
     qt = jnp.swapaxes(q, 1, 2)  # (b, hq, Sq, d)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)

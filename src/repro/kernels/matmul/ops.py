@@ -1,9 +1,14 @@
-"""Public matmul op: padding + Union tile planning + custom vjp.
+"""Public matmul op: padding + unified co-design planning + custom vjp.
 
-``plan_tiles(M, N, K)`` runs Union-opt (heuristic mapper x Timeloop-like
-cost model, MXU-aligned constraints) on the GEMM Problem over the
-``tpu_chip()`` hierarchy and reads the C1/VMEM-level temporal tile as the
-BlockSpec -- the paper's mapping IS the program (DESIGN.md Sec. 2).
+Tile planning goes through the shared co-design layer (docs/codesign.md):
+:class:`MatmulSpace` registers the GEMM ``Problem``, MXU-aligned
+``Constraints``, and the ``legalize`` repair with
+``repro.codesign``, and ``plan_tiles`` is a thin wrapper over the single
+``codesign.plan`` path (heuristic mapper x Timeloop-like cost model over
+the ``tpu_chip()`` hierarchy, C1/VMEM temporal tile read back as the
+BlockSpec -- the paper's mapping IS the program, DESIGN.md Sec. 2).
+Finished plans are cached in the planner's ResultStore, so warm queries
+skip the mapper search entirely.
 """
 
 from __future__ import annotations
@@ -14,17 +19,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codesign
 from repro import kernels as _cfg
-from repro.core.architecture import tpu_chip
+from repro.codesign import KernelSpace, repair_tile, round_up
 from repro.core.constraints import mxu_aligned
 from repro.core.mapping import Mapping
-from repro.core.optimizer import union_opt
 from repro.core.problem import Problem
 from repro.kernels.matmul.matmul import matmul_pallas
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def tiles_from_mapping(mapping: Mapping, problem: Problem) -> Tuple[int, int, int]:
@@ -33,36 +34,56 @@ def tiles_from_mapping(mapping: Mapping, problem: Problem) -> Tuple[int, int, in
     return leaf.tt("m"), leaf.tt("n"), leaf.tt("k")
 
 
+class MatmulSpace(KernelSpace):
+    """Co-design space of the tiled GEMM kernel: shape = (M, N, K),
+    BlockConfig = (bm, bn, bk)."""
+
+    name = "matmul"
+    decode_dims = ("m", "n", "k")
+    search_budget = 400
+
+    def problem(self, shape):
+        M, N, K = shape
+        return Problem.gemm(M, N, K)
+
+    def constraints(self, shape):
+        return mxu_aligned(["m", "n", "k"], 128)
+
+    def legalize(self, config, shape, vmem_budget=None):
+        bm, bn, bk = config
+        M, N, K = shape
+        # safe MXU-aligned defaults if the mapper degenerated (e.g.
+        # trivial mapping with tile 1): clamp into [128, dim]
+        return (
+            repair_tile(bm, M, 256),
+            repair_tile(bn, N, 256),
+            repair_tile(bk, K, 512),
+        )
+
+    def example_inputs(self, shape, seed: int = 0):
+        M, N, K = shape
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        return (
+            jax.random.normal(kx, (M, K), jnp.float32),
+            jax.random.normal(ky, (K, N), jnp.float32),
+        )
+
+    def run(self, inputs, config, interpret: bool = True):
+        x, y = inputs
+        return matmul(x, y, tiles=tuple(config), interpret=interpret)
+
+
+MATMUL_SPACE = codesign.register_space(MatmulSpace())
+
+
 @functools.lru_cache(maxsize=512)
 def plan_tiles(
     M: int, N: int, K: int, *, mapper: str = "heuristic", budget: int = 400
 ) -> Tuple[int, int, int]:
-    """Union-opt the GEMM (M,N,K) onto one TPU chip; return (bm, bn, bk)."""
-    problem = Problem.gemm(M, N, K)
-    arch = tpu_chip()
-    cons = mxu_aligned(["m", "n", "k"], 128)
-    try:
-        sol = union_opt(
-            problem, arch, mapper=mapper, cost_model="timeloop",
-            metric="latency", constraints=cons, climb_steps=budget,
-        )
-        bm, bn, bk = tiles_from_mapping(sol.mapping, problem)
-    except Exception:
-        bm = bn = bk = 0
-    # fall back to safe MXU-aligned defaults if the mapper degenerated
-    # (e.g. trivial mapping with tile 1): clamp into [128, dim]
-    def _fix(b: int, dim: int, default: int) -> int:
-        if b >= 128 and dim % b == 0:
-            return b
-        d = min(default, dim)
-        while dim % d != 0:
-            d //= 2
-        return max(d, 1)
-
-    bm = _fix(bm, M, 256)
-    bn = _fix(bn, N, 256)
-    bk = _fix(bk, K, 512)
-    return bm, bn, bk
+    """Plan the GEMM (M,N,K) via ``codesign.plan``; return (bm, bn, bk)."""
+    return codesign.plan(
+        MATMUL_SPACE, (M, N, K), mapper=mapper, budget=budget
+    ).config
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -116,9 +137,9 @@ def matmul(
     K2, N = y.shape
     assert K == K2, f"matmul inner dim mismatch {K} vs {K2}"
     x2 = x.reshape(M, K)
-    tiles = tiles or plan_tiles(_round_up(M, 128), _round_up(N, 128), _round_up(K, 128))
+    tiles = tiles or plan_tiles(round_up(M, 128), round_up(N, 128), round_up(K, 128))
     bm, bn, bk = tiles
-    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    Mp, Np, Kp = round_up(M, bm), round_up(N, bn), round_up(K, bk)
     if (Mp, Kp) != (M, K):
         x2 = jnp.pad(x2, ((0, Mp - M), (0, Kp - K)))
     yp = jnp.pad(y, ((0, Kp - K), (0, Np - N))) if (Kp, Np) != (K, N) else y

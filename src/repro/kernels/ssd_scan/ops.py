@@ -1,8 +1,15 @@
 """Public chunked-SSD op: Pallas intra-chunk kernel + jnp inter-chunk scan.
 
 Signature matches models.ssm._ssd_chunked so the model can swap it in on
-TPU. ``plan_chunk`` sizes the chunk with the same Union R3 legality rule
-used by the matmul planner (cl*cl f32 scores + operands within VMEM).
+TPU. Chunk sizing goes through the shared co-design layer
+(docs/codesign.md): :class:`SsdScanSpace` registers the intra-chunk score
+GEMM with ``repro.codesign`` and ``plan_chunk`` is a thin wrapper over
+the single ``codesign.plan`` path. The space's ``legalize`` is BINDING --
+it encodes the kernel's exact working-set rule (the same Union R3
+legality rule the matmul planner uses: cl*cl f32 scores + operands within
+the unified VMEM budget) and picks the largest power-of-two chunk that
+satisfies it, regardless of what the mapper proposed, so the policy
+"maximize the chunk under R3" stays exact.
 """
 
 from __future__ import annotations
@@ -13,22 +20,84 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codesign
 from repro import kernels as _cfg
-from repro.core.architecture import TPU_V5E
+from repro.codesign import DEFAULT_VMEM_BUDGET, KernelSpace
+from repro.core.problem import Problem
 from repro.kernels.ssd_scan.ssd_scan import ssd_intra_chunk_pallas
+
+#: proxy extent of the chunk dims in the search Problem = the largest
+#: chunk ``legalize`` can pick, so every candidate tile is a divisor
+_MAX_CHUNK = 1024
+
+
+class SsdScanSpace(KernelSpace):
+    """Co-design space of the chunked-SSD kernel: shape = (hp, n),
+    BlockConfig = (cl,) -- the chunk length."""
+
+    name = "ssd_scan"
+    decode_dims = ("l",)
+    search_budget = 200
+
+    def problem(self, shape):
+        hp, n = shape
+        # intra-chunk score GEMM C . B^T over the state dim: the chunk
+        # appears as both free dims of the cl x cl score block
+        return Problem.from_einsum(
+            "ssd_scores",
+            "ln,mn->lm",
+            {"l": _MAX_CHUNK, "m": _MAX_CHUNK, "n": n},
+            "GEMM",
+        )
+
+    def legalize(self, config, shape, vmem_budget=None):
+        """BINDING repair: largest power-of-two chunk cl with the kernel
+        working set in VMEM -- cl*cl scores + L (2x) + cl*(hp + 2n + 2)
+        operands, all f32. The mapper's proposal is intentionally ignored
+        (the policy is maximize-chunk-under-R3, not argmin of a model)."""
+        hp, n = shape
+        budget = int(vmem_budget or self.vmem_budget)
+        cl = _MAX_CHUNK
+        while cl > 64:
+            ws = 4 * (2 * cl * cl + cl * (hp + 2 * n + 2) + n * hp)
+            if ws <= budget:
+                return (cl,)
+            cl //= 2
+        return (64,)
+
+    def block_tiles(self, shape, config):
+        # the chunk is BOTH free dims of the score block (n stays full)
+        (cl,) = config
+        return {"l": cl, "m": cl}
+
+    def example_inputs(self, shape, seed: int = 0):
+        hp, n = shape
+        b, l, nh = 1, 256, 1
+        kx, ka, kb, kc = jax.random.split(jax.random.PRNGKey(seed), 4)
+        return (
+            jax.random.normal(kx, (b, l, nh, hp), jnp.float32),
+            -jnp.abs(jax.random.normal(ka, (b, l, nh), jnp.float32)) * 0.1,
+            jax.random.normal(kb, (b, l, nh, n), jnp.float32),
+            jax.random.normal(kc, (b, l, nh, n), jnp.float32),
+        )
+
+    def run(self, inputs, config, interpret: bool = True):
+        x, dA, B, C = inputs
+        (cl,) = config
+        chunk = min(int(cl), x.shape[1])
+        return ssd_chunked(x, dA, B, C, chunk=chunk, interpret=interpret)
+
+
+SSD_SCAN_SPACE = codesign.register_space(SsdScanSpace())
 
 
 @functools.lru_cache(maxsize=64)
-def plan_chunk(hp: int, n: int, vmem_budget: int = 8 * (1 << 20)) -> int:
-    """Largest power-of-two chunk cl with the kernel working set in VMEM:
-    cl*cl scores + L (2x) + cl*(hp + 2n + 2) operands, all f32."""
-    cl = 1024
-    while cl > 64:
-        ws = 4 * (2 * cl * cl + cl * (hp + 2 * n + 2) + n * hp)
-        if ws <= vmem_budget:
-            return cl
-        cl //= 2
-    return 64
+def plan_chunk(hp: int, n: int, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Plan the chunk length via ``codesign.plan`` (legalize is binding:
+    largest power-of-two cl whose working set fits ``vmem_budget``)."""
+    return codesign.plan(
+        SSD_SCAN_SPACE, (hp, n), vmem_budget=vmem_budget
+    ).config[0]
 
 
 def ssd_chunked(

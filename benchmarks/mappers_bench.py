@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -92,7 +93,7 @@ SEED_EVALS_PER_S = {
 
 _SUMMARY_ROW_SECTIONS = (
     "evals_per_s", "cache_hit_rate", "pruned", "store_hits", "phase_s",
-    "speedup_vs_seed",
+    "speedup_vs_seed", "n_traces", "device_syncs",
 )
 
 
@@ -105,7 +106,11 @@ def record_baseline_rows(summary: dict, base: dict, new_keys, baseline_path: Pat
         dst = base.setdefault(section, {})
         for key in new_keys:
             if key in rows:
-                dst[key] = rows[key]
+                # setdefault, NOT assignment: a key can be "new" because
+                # one section (say n_traces) lacks it while another
+                # (evals_per_s) already has a committed floor -- existing
+                # floors must never ratchet from a bootstrap merge
+                dst.setdefault(key, rows[key])
     baseline_path.write_text(json.dumps(base, indent=1))
     return base
 
@@ -153,6 +158,28 @@ def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
             "[mappers] evals/s REGRESSION vs committed BENCH_mappers.json "
             f"(margin {margin:.0%}):\n" + "\n".join(failures)
         )
+    # Deterministic trace-count gate: a cold smoke row may trace AT MOST
+    # as many compiled programs as the committed floor -- tracing is
+    # counted (not timed), so this gate has no noise margin and catches
+    # any O(sweep points) retrace regression (the shape-generic contract
+    # is one program per shape class x model x metric x pow2 bucket).
+    trace_failures = []
+    for key, new_v in summary.get("n_traces", {}).items():
+        old_v = base.get("n_traces", {}).get(key)
+        if old_v is None:
+            if key not in new_keys:
+                new_keys.append(key)  # bootstrap: warn-and-record below
+        elif new_v > old_v:
+            trace_failures.append(
+                f"  {key}: traced {new_v} compiled programs > committed "
+                f"floor {old_v}"
+            )
+    if trace_failures:
+        raise SystemExit(
+            "[mappers] TRACE-COUNT regression vs committed "
+            "BENCH_mappers.json (exact gate, no margin):\n"
+            + "\n".join(trace_failures)
+        )
     print(f"[mappers] regression gate OK (margin {margin:.0%} vs {baseline_path})")
     if new_keys:
         print(
@@ -168,6 +195,29 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
         update_baseline: bool = False, group_timeout_s: float | None = None,
         group_retries: int = 2, journal: str | None = None,
         resume: bool = False) -> dict:
+    if os.environ.get("UNION_BENCH_DEVICE"):
+        # Opt-in device-mode bench: measures the device-resident search
+        # loops (mega-batch precompute, generation-resident GA) on an
+        # accelerator. On CPU-only hosts the mode skips CLEANLY -- device
+        # residency on the jax CPU backend measures nothing the default
+        # jax rows don't already cover.
+        try:
+            import jax
+
+            dev_backend = jax.default_backend()
+        except Exception:
+            dev_backend = None
+        if dev_backend in (None, "cpu"):
+            print(
+                "[mappers] UNION_BENCH_DEVICE=1 but no accelerator "
+                f"(jax default backend: {dev_backend}); skipping the "
+                "device-mode bench cleanly"
+            )
+            return {"figure": "mappers", "skipped": "no accelerator backend"}
+        backend = "jax"
+        regress_check = False  # accelerator rows never gate CPU floors
+        print(f"[mappers] device-mode bench on jax backend: {dev_backend}")
+
     problem = dnn_layers()["BERT-2"]
     arch = cloud_accelerator()
     # any fault-tolerance knob routes rows through the sweep executor
@@ -198,6 +248,12 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                         kw["max_mappings"] = 1500
                 best_s = float("inf")
                 sol = None
+                # cold-run trace/sync counters: the FIRST repeat traces
+                # (later repeats hit the process-wide program cache), so
+                # the row records the max across repeats -- the
+                # deterministic cold count the trace gate compares
+                n_traces = 0
+                device_syncs = 0
                 for _ in range(max(1, repeats)):
                     t0 = time.time()
                     if use_executor:
@@ -221,6 +277,8 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                             result_store=store, **kw,
                         )
                     best_s = min(best_s, time.time() - t0)
+                    n_traces = max(n_traces, sol.search.n_traces)
+                    device_syncs = max(device_syncs, sol.search.device_syncs)
                 res = sol.search
                 candidates = res.evaluated + res.pruned
                 # Throughput numerator = SearchResult.scored (warm/cold-
@@ -241,6 +299,8 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                     "candidates": candidates,
                     "considered": res.considered,
                     "fused_dispatches": res.fused_dispatches,
+                    "n_traces": n_traces,
+                    "device_syncs": device_syncs,
                     "cache_hit_rate": res.cache_hits / seen if seen else 0.0,
                     "seconds": best_s,
                     "evals_per_s": evals_per_s,
@@ -263,7 +323,8 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
                     f"({scored} scored, {best_s:.2f}s, "
                     f"{evals_per_s:,.0f} evals/s, "
                     f"hit {row['cache_hit_rate']:.0%}, pruned {res.pruned}, "
-                    f"store {res.store_hits}, admit {res.admit_s*1e3:.1f}ms, "
+                    f"store {res.store_hits}, traces {n_traces}, "
+                    f"syncs {device_syncs}, admit {res.admit_s*1e3:.1f}ms, "
                     f"score {res.score_s*1e3:.1f}ms)"
                 )
     result = {
@@ -298,6 +359,10 @@ def run(smoke: bool = False, repeats: int = 5, workers: int = 0,
             for r in rows
             if r["speedup_vs_seed"] is not None
         },
+        # deterministic cold trace counts (exact gate, see check_regression)
+        # and device-loop sync points per row
+        "n_traces": {key_of(r): r["n_traces"] for r in rows},
+        "device_syncs": {key_of(r): r["device_syncs"] for r in rows},
     }
     if use_executor:
         # journal replays finish in microseconds and watchdogged dispatch

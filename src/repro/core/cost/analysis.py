@@ -46,6 +46,38 @@ from repro.core.problem import DataSpace, Problem
 # of 2 absorbs rounding drift in the guard computation itself.
 BATCH_EXACT_LIMIT = float(1 << 52)
 
+# ---------------------------------------------------------------------- #
+# Process-global trace registry. Every jitted dispatch registers its
+# (program identity, padded batch size) combination here; the set's size
+# is therefore the number of DISTINCT XLA traces the process has paid
+# for. Shape-generic programs register under their structural
+# ShapeClassKey -- content-different contexts in one shape class share a
+# single entry per bucket -- while the legacy per-context programs
+# register under the context's identity (each context is its own trace).
+# Engines sample ``global_trace_count()`` deltas around their dispatches
+# to attribute traces to a search (``EngineStats.n_traces``).
+# ---------------------------------------------------------------------- #
+_GENERIC_PROGRAMS: Dict[tuple, object] = {}
+_TRACE_COMBOS: set = set()
+
+
+def global_trace_count() -> int:
+    """Number of distinct (program, padded batch size) jit traces this
+    process has dispatched (shape-generic programs count once per shape
+    class, not once per context)."""
+    return len(_TRACE_COMBOS)
+
+
+def _record_trace(program_key, padded_batch: int) -> None:
+    _TRACE_COMBOS.add((program_key, int(padded_batch)))
+
+
+def reset_trace_registry() -> None:
+    """Drop trace accounting AND the shared generic-program cache (test
+    isolation helper; compiled programs are rebuilt on demand)."""
+    _TRACE_COMBOS.clear()
+    _GENERIC_PROGRAMS.clear()
+
 
 def exact_divisor(xp, v):
     """A host constant to DIVIDE by inside a traced array program.
@@ -60,7 +92,10 @@ def exact_divisor(xp, v):
         return v
     from jax import lax
 
-    return lax.optimization_barrier(xp.float64(v))
+    # asarray (not the float64 constructor) so TRACED scalars -- the
+    # shape-generic cores divide by parameter values -- pass through the
+    # barrier unchanged; host constants take the same asarray path.
+    return lax.optimization_barrier(xp.asarray(v, dtype=xp.float64))
 
 
 def ordered_sum(xp, init, addends):
@@ -154,13 +189,17 @@ class StackedBatch:
     returns to host.
     """
 
-    __slots__ = ("tt", "st", "perm", "dev")
+    __slots__ = ("tt", "st", "perm", "dev", "devp")
 
     def __init__(self, tt: np.ndarray, st: np.ndarray, perm: np.ndarray) -> None:
         self.tt = tt
         self.st = st
         self.perm = perm
         self.dev = None  # (tt, st, perm) device arrays, uploaded lazily
+        # pow2-PADDED device arrays for the fused full-batch programs
+        # (padding runs host-side in numpy before ONE upload: traced
+        # pad ops cost ~1ms/dispatch on CPU jax, numpy pads in ~2us)
+        self.devp = None
 
     @property
     def size(self) -> int:
@@ -359,6 +398,11 @@ class AnalysisContext:
         # is reused (equal store_key_parts => bit-identical costs, so
         # sharing is sound by the same contract the ResultStore relies on)
         self._fused_runners: Dict[Tuple, object] = {}
+        # shape-generic machinery (lazy): the structural key + traced
+        # parameter pack that let ONE process-global compiled program
+        # serve every context in this shape class
+        self._shape_class_key: Optional[tuple] = None
+        self._shape_params: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def ds_projection_axes(self) -> List[Tuple[int, List[List[Tuple[int, int]]], Tuple[int, ...]]]:
@@ -373,6 +417,74 @@ class AnalysisContext:
         spans) should use it instead of the private ``_ds_axes_idx``.
         """
         return self._ds_axes_idx
+
+    # ------------------------------------------------------------------ #
+    # Shape-generic program support. ``shape_class_key`` captures every
+    # STRUCTURAL property the batch/lower-bound cores branch or reshape
+    # on (ranks, level topology, projection term layout, which levels
+    # carry bandwidth terms); ``shape_params`` packs every VALUE those
+    # cores consume (dim sizes, projection coefficients, energies,
+    # bandwidth reciprocals) as arrays whose shapes are fully determined
+    # by the key. Two contexts with equal keys therefore run the SAME
+    # compiled program -- only the parameter pack differs -- and because
+    # the generic cores replay the per-context closures' float operations
+    # in the identical order, results stay bit-identical per row.
+    # ------------------------------------------------------------------ #
+    def shape_class_key(self) -> tuple:
+        """Structural identity of this context's array programs (hashable;
+        equal keys <=> one compiled shape-generic program serves both
+        contexts)."""
+        if self._shape_class_key is None:
+            axes_struct = tuple(
+                tuple(tuple(j for _c, j in ax) for ax in axes)
+                for _wb, axes, _rel in self._ds_axes_idx
+            )
+            self._shape_class_key = (
+                self.n_levels,
+                len(self.dims),
+                len(self._ds_rel_sets),
+                tuple(self.real_levels),
+                tuple(-1 if p is None else p for p in self.real_parent),
+                tuple(bool(ds.is_output) for ds, _rel in self.ds_rel),
+                axes_struct,
+                -1 if self._lb_dram_child is None else self._lb_dram_child,
+                tuple(lv for lv, _c in self._lb_bw_levels),
+            )
+        return self._shape_class_key
+
+    def shape_params(self) -> Dict[str, np.ndarray]:
+        """Traced parameter pack for the shape-generic cores: every value
+        the per-context closures bake in as Python constants, as arrays
+        keyed/shaped by :meth:`shape_class_key` (content may differ across
+        contexts of one class; shapes never do)."""
+        if self._shape_params is None:
+            D = len(self.dims)
+            coeffs = [
+                float(c)
+                for _wb, axes, _rel in self._ds_axes_idx
+                for ax in axes
+                for c, _j in ax
+            ]
+            self._shape_params = {
+                "sizes": np.asarray(self._size_tuple, dtype=np.int64),
+                "mpc": np.float64(self.macs_per_cycle),
+                "rel": np.array(
+                    [[j in rset for j in range(D)] for rset in self._ds_rel_sets],
+                    dtype=bool,
+                ),
+                "coeffs": np.asarray(coeffs, dtype=np.float64),
+                "wb": np.asarray(
+                    [wb for wb, _a, _r in self._ds_axes_idx], dtype=np.float64
+                ),
+                "e_base": np.float64(self._lb_energy_base),
+                "tre": np.float64(self._top_read_e),
+                "twe": np.float64(self._top_write_e),
+                "bw_cpb": np.asarray(
+                    [c for _lv, c in self._lb_bw_levels], dtype=np.float64
+                ),
+                "freq": np.float64(self.arch.frequency_hz),
+            }
+        return self._shape_params
 
     # ------------------------------------------------------------------ #
     def analyze(self, mapping: Mapping) -> AccessProfile:
@@ -760,6 +872,34 @@ class AnalysisContext:
             sb.dev = tuple(jax.device_put(a) for a in (sb.tt, sb.st, sb.perm))
         return sb.dev
 
+    def _jax_device_padded(self, sb: StackedBatch):
+        """Pow2-padded device matrices for the fused full-batch programs:
+        ``(tt, st, perm, B)`` with the batch axis padded to the next power
+        of two by repeating row 0 (a real candidate -- identical to
+        :meth:`_pad_pow2`, so guards and results are bit-identical).
+        Padding runs HOST-SIDE in numpy and the three matrices ship as a
+        single transfer, memoized on the handle: device-side pad ops cost
+        ~1ms of dispatch overhead per call on CPU jax, which dominated the
+        per-generation cost of the device-resident search loops."""
+        if sb.devp is None:
+            jax = self._ensure_jax()
+            B = sb.size
+            B2 = 1 << max(0, (B - 1).bit_length())
+            if B2 == B:
+                mats = (sb.tt, sb.st, sb.perm)
+            else:
+                padn = B2 - B
+                mats = tuple(
+                    np.ascontiguousarray(
+                        np.concatenate(
+                            [a, np.broadcast_to(a[:1], (padn,) + a.shape[1:])]
+                        )
+                    )
+                    for a in (sb.tt, sb.st, sb.perm)
+                )
+            sb.devp = jax.device_put(mats) + (B,)
+        return sb.devp
+
     @staticmethod
     def _pad_pow2(tt, st, perm, xp):
         """Pad the batch axis to the next power of two (bounding jit
@@ -813,6 +953,7 @@ class AnalysisContext:
                     tt, st, perm = tt[sel], st[sel], perm[sel]
                 tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
                 self.jax_dispatches += 1
+                _record_trace(("ctx-core", id(self)), int(tt.shape[0]))
                 out = self._jax_batch_core(tt, st, perm)
             if self._jax_core_donates and select is None:
                 sb.dev = None  # donated away; re-upload on next use
@@ -1205,6 +1346,7 @@ class AnalysisContext:
                 tt, st, perm = self._jax_device_arrays(sb)
                 tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
                 self.jax_dispatches += 1
+                _record_trace(("ctx-lb", id(self)), int(tt.shape[0]))
                 cyc, en, mx = self._jax_lb_core(tt, st, perm)
             cyc = np.asarray(cyc)
             if cyc.dtype != np.float64:
@@ -1352,13 +1494,15 @@ class AnalysisContext:
                 from jax.experimental import enable_x64
 
                 with enable_x64():
-                    tt, st, perm = self._jax_device_arrays(sb)
-                    tt, st, perm, B = self._pad_pow2(tt, st, perm, jnp)
+                    tt, st, perm, B = self._jax_device_padded(sb)
                     inc = jnp.asarray(float(incumbent), dtype=jnp.float64)
                     self.jax_dispatches += 1
+                    _record_trace(
+                        ("ctx-fused", id(self), cache_key), int(tt.shape[0])
+                    )
                     out = core(tt, st, perm, inc)
                 if donate:
-                    sb.dev = None  # donated away; fallbacks re-upload
+                    sb.devp = None  # donated away; fallbacks re-upload
                 admit, lb_mx, latency, energy, util, score_mx, extras = out
                 latency = np.asarray(latency)
                 if latency.dtype != np.float64:
@@ -1381,6 +1525,57 @@ class AnalysisContext:
         if cache_key is not None:
             self._fused_runners[cache_key] = run
         return run
+
+    def build_generic_fused_runner(self, generic, metric: str, cache_key=None):
+        """Shape-generic twin of :meth:`build_fused_runner`: the jitted
+        program is compiled ONCE per (shape class, model structure,
+        metric) process-wide (``_GENERIC_PROGRAMS``) and this context's
+        values enter as a traced parameter pack, so content-different
+        sweep points in one shape class share a single trace.
+
+        ``generic`` is ``CostModel.batch_cost_terms_generic`` output:
+        ``(model_struct_key, model_params, terms)`` with
+        ``terms(bt, xp, p)``. Returns a :class:`GenericFusedRunner`
+        (same call protocol as the per-context runner) or None (jax
+        unavailable / trace failure -- callers fall back exactly as for
+        the per-context builder). ``cache_key`` memoizes the runner on
+        the context as the lookup tier ABOVE the global program cache.
+        """
+        if self._jax_failed:
+            return None
+        if cache_key is not None:
+            cached = self._fused_runners.get(cache_key)
+            if cached is not None:
+                return cached
+        model_key, model_params, terms = generic
+        try:
+            jax = self._ensure_jax()
+            from jax import lax
+            import jax.numpy as jnp
+        except Exception:
+            self._jax_failed = True
+            return None
+        skey = self.shape_class_key()
+        pkey = ("generic-fused", skey, model_key, metric)
+        entry = _GENERIC_PROGRAMS.get(pkey)
+        if entry is None:
+            try:
+                donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+                core = jax.jit(
+                    _make_generic_fused_core(skey, terms, metric, jnp, lax),
+                    donate_argnums=donate,
+                )
+            except Exception:
+                self._jax_failed = True
+                return None
+            entry = (core, bool(donate))
+            _GENERIC_PROGRAMS[pkey] = entry
+        params = dict(self.shape_params())
+        params.update(model_params)
+        runner = GenericFusedRunner(self, entry[0], params, pkey, entry[1])
+        if cache_key is not None:
+            self._fused_runners[cache_key] = runner
+        return runner
 
     def chains_lower_bound(
         self, chain_list, orders, incumbent: float = math.inf, scalarize=None
@@ -1528,6 +1723,450 @@ def _tree_slice(out, B: int):
         fans[:B],
         tuple(tuple(a[:B] for a in r) for r in rows),
     )
+
+
+# ---------------------------------------------------------------------- #
+# Shape-generic array programs. These are the per-context closures
+# (``_make_lb_core`` / ``_make_batch_core`` / the fused admit+score core)
+# re-derived from a structural ShapeClassKey plus a traced parameter pack
+# ``p`` (see ``AnalysisContext.shape_class_key`` / ``shape_params``): the
+# loop/branch/reshape STRUCTURE comes from the key, every VALUE from
+# ``p``. Because the float operations run in the identical order with
+# identical values, the per-row results are bit-identical to the
+# per-context closures -- but one compiled program now serves every
+# context in the shape class.
+# ---------------------------------------------------------------------- #
+def _axes_coeff_layout(axes_struct):
+    """Per ds/axis/term: ``(flat coeff index, dim index)`` -- the build
+    order of ``shape_params()['coeffs']``, so generic span math consumes
+    coefficients exactly where the closures baked them in."""
+    layout = []
+    fi = 0
+    for axes in axes_struct:
+        ds_list = []
+        for ax in axes:
+            ax_list = []
+            for j in ax:
+                ax_list.append((fi, j))
+                fi += 1
+            ds_list.append(ax_list)
+        layout.append(ds_list)
+    return layout
+
+
+def _generic_ds_foot(coeff_layout, k, ttf_lvl, xp, p):
+    """Generic :func:`batch_projection_footprint`: identical span math
+    over ``[..., D]`` tiles with traced coefficients."""
+    shape = ttf_lvl.shape[:-1]
+    foot = xp.ones(shape, dtype=xp.float64)
+    for ax in coeff_layout[k]:
+        span = xp.ones(shape, dtype=xp.float64)
+        for ci, j in ax:
+            span = span + p["coeffs"][ci] * (ttf_lvl[..., j] - 1.0)
+        foot = foot * span
+    return foot
+
+
+def _make_generic_lb_core(skey, xp, lax=None):
+    """Shape-generic ``_make_lb_core``: ``core(tt, st, perm, p) ->
+    (cycles[B], energy_pj[B], guard_max)``."""
+    n, D, K, _real_levels, _real_parent, ds_out, axes_struct, dc, bw_lvls = skey
+    if dc < 0:
+        dc = None
+    coeff_layout = _axes_coeff_layout(axes_struct)
+    pos_seq = np.arange(n * D)
+
+    def core(tt, st, perm, p):
+        B = tt.shape[0]
+        rel_stack = p["rel"]
+        wb = p["wb"]
+        tt = xp.maximum(tt, 1)
+        st = xp.maximum(st, 1)
+        sizes_row = xp.reshape(p["sizes"], (1, 1, D))
+        outer = xp.concatenate(
+            [xp.broadcast_to(sizes_row, (B, 1, D)), st[:, :-1, :]], axis=1
+        )
+        trips = xp.maximum(outer // tt, 1)
+        tripsf = trips.astype(xp.float64)
+        total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
+        leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
+        cycles = total_trips * xp.ceil(leaf_macs / exact_divisor(xp, p["mpc"]))
+        e_pairs = []
+        mx = xp.maximum(xp.maximum(total_trips, leaf_macs), cycles)
+
+        dc_boundary = None
+        if dc is not None:
+            S = (dc + 1) * D
+            perm_pref = perm[:, : dc + 1, :]
+            tseqf = (
+                xp.take_along_axis(trips[:, : dc + 1, :], perm_pref, axis=2)
+                .reshape(B, S)
+                .astype(xp.float64)
+            )
+            rel_seq = rel_stack[:, perm_pref.reshape(B, S)]  # [K, B, S]
+            present = (tseqf > 1.0)[None, :, :]
+            relm = rel_seq & present
+            irrm = (~rel_seq) & present
+            tseq_b = xp.broadcast_to(tseqf[None, :, :], (K, B, S))
+            unique = xp.prod(xp.where(relm, tseq_b, 1.0), axis=2)  # [K, B]
+            irrprod = xp.cumprod(xp.where(irrm, tseq_b, 1.0), axis=2)
+            idx = xp.where(relm, pos_seq[None, None, :S], -1)
+            lastrel = xp.max(idx, axis=2)
+            gathered = xp.take_along_axis(
+                irrprod, xp.maximum(lastrel, 0)[:, :, None], axis=2
+            )[:, :, 0]
+            changes = unique * xp.where(lastrel >= 0, gathered, 1.0)
+            ttf_dc = tt[:, dc, :].astype(xp.float64)
+            if dc > 0:
+                fans_pref = xp.maximum(tt[:, :dc, :] // st[:, :dc, :], 1).astype(
+                    xp.float64
+                )
+            dc_boundary = xp.zeros(B, dtype=xp.float64)
+            for k in range(K):
+                foot = _generic_ds_foot(coeff_layout, k, ttf_dc, xp, p)
+                if dc > 0:
+                    rel_sp = xp.prod(
+                        xp.where(
+                            rel_stack[k][None, None, :], fans_pref, 1.0
+                        ).reshape(B, dc * D),
+                        axis=1,
+                    )
+                else:
+                    rel_sp = xp.ones(B, dtype=xp.float64)
+                cf = changes[k] * foot
+                mx = xp.maximum(mx, changes[k])
+                t1 = cf * rel_sp * wb[k]
+                mx = xp.maximum(mx, t1)
+                if ds_out[k]:
+                    rmw = xp.maximum(changes[k] - unique[k], 0.0) * foot
+                    t2 = rmw * rel_sp * wb[k]
+                    mx = xp.maximum(mx, t2)
+                    e_pairs.append((t1 * p["twe"], t2 * p["tre"]))
+                    dc_boundary = dc_boundary + (cf + rmw) * wb[k]
+                else:
+                    e_pairs.append((t1 * p["tre"], 0.0))
+                    dc_boundary = dc_boundary + cf * wb[k]
+            mx = xp.maximum(mx, dc_boundary)
+        energy = ordered_pair_sum(
+            xp, xp.full((B,), p["e_base"], dtype=xp.float64), e_pairs
+        )
+
+        for bw_pos, level in enumerate(bw_lvls):
+            cyc_per_byte = p["bw_cpb"][bw_pos]
+            if level == dc:
+                cycles = xp.maximum(cycles, dc_boundary * cyc_per_byte)
+                continue
+            ttf_lvl = tt[:, level, :].astype(xp.float64)
+            relprod_lvl = xp.prod(
+                xp.where(
+                    rel_stack[:, None, None, :],
+                    tripsf[None, :, : level + 1, :],
+                    1.0,
+                ).reshape(K, B, (level + 1) * D),
+                axis=2,
+            )
+            b = xp.zeros(B, dtype=xp.float64)
+            for k in range(K):
+                term = (
+                    relprod_lvl[k]
+                    * _generic_ds_foot(coeff_layout, k, ttf_lvl, xp, p)
+                    * wb[k]
+                )
+                mx = xp.maximum(mx, term)
+                b = b + term
+            mx = xp.maximum(mx, b)
+            cycles = xp.maximum(cycles, b * cyc_per_byte)
+        return cycles, energy, xp.max(mx)
+
+    return core
+
+
+def _make_generic_batch_core(skey, xp, lax=None):
+    """Shape-generic ``_make_batch_core``: ``core(tt, st, perm, p) ->``
+    the stacked-traffic 8-tuple."""
+    n, D, K, real_levels, real_parent, ds_out, axes_struct, _dc, _bw = skey
+    real_levels = list(real_levels)
+    L = len(real_levels)
+    coeff_layout = _axes_coeff_layout(axes_struct)
+    ends = np.asarray([(i + 1) * D - 1 for i in real_levels])
+    real_arr = np.asarray(real_levels)
+    parent_arr = np.asarray(
+        [real_parent[i] if real_parent[i] >= 0 else i for i in real_levels]
+    )
+    pos_seq = np.arange(n * D)
+
+    def core(tt, st, perm, p):
+        B = tt.shape[0]
+        rel_stack = p["rel"]
+        tt = xp.maximum(tt, 1)
+        st = xp.maximum(st, 1)
+        sizes_row = xp.reshape(p["sizes"], (1, 1, D))
+        outer = xp.concatenate(
+            [xp.broadcast_to(sizes_row, (B, 1, D)), st[:, :-1, :]], axis=1
+        )
+        trips = xp.maximum(outer // tt, 1)
+        fans = xp.maximum(tt // st, 1)
+        tripsf = trips.astype(xp.float64)
+        fansf = fans.astype(xp.float64)
+        total_trips = xp.prod(tripsf.reshape(B, n * D), axis=1)
+        leaf_macs = xp.prod(tt[:, -1, :].astype(xp.float64), axis=1)
+        compute_cycles = total_trips * xp.ceil(
+            leaf_macs / exact_divisor(xp, p["mpc"])
+        )
+        par = xp.prod(fansf.reshape(B, n * D), axis=1)
+        lvl_all = xp.prod(fansf, axis=2)  # [B, n]
+        cp_all = xp.cumprod(lvl_all, axis=1)
+        inst_at = xp.concatenate(
+            [xp.ones((B, 1), dtype=xp.float64), cp_all[:, :-1]], axis=1
+        )
+        perm_flat = perm.reshape(B, n * D)
+        tseqf = xp.take_along_axis(trips, perm, axis=2).reshape(B, n * D).astype(
+            xp.float64
+        )
+        rel_seq = rel_stack[:, perm_flat]  # [K, B, S]
+        present = (tseqf > 1.0)[None, :, :]
+        relm = rel_seq & present
+        irrm = (~rel_seq) & present
+        tseq_b = xp.broadcast_to(tseqf[None, :, :], (K, B, n * D))
+        relprod = xp.cumprod(xp.where(relm, tseq_b, 1.0), axis=2)
+        irrprod = xp.cumprod(xp.where(irrm, tseq_b, 1.0), axis=2)
+        idx = xp.where(relm, pos_seq[None, None, :], -1)
+        if lax is None:
+            lastrel = np.maximum.accumulate(idx, axis=2)
+        else:
+            lastrel = lax.cummax(idx, axis=2)
+        gathered = xp.take_along_axis(irrprod, xp.maximum(lastrel, 0), axis=2)
+        ip = xp.where(lastrel >= 0, gathered, 1.0)
+        unique = relprod[:, :, ends]  # [K, B, L]
+        changes = unique * ip[:, :, ends]
+        lvl_rel = xp.prod(
+            xp.where(rel_stack[:, None, None, :], fansf[None], 1.0),
+            axis=3,
+        )  # [K, B, n]
+        cp_rel = xp.cumprod(lvl_rel, axis=2)
+        srel_excl = xp.concatenate(
+            [xp.ones((K, B, 1), dtype=xp.float64), cp_rel[:, :, :-1]], axis=2
+        )
+        rel_sp = srel_excl[:, :, real_arr] / srel_excl[:, :, parent_arr]
+        ttf_real = tt[:, real_arr, :].astype(xp.float64)  # [B, L, D]
+        rows = []
+        for k in range(K):
+            foot = _generic_ds_foot(coeff_layout, k, ttf_real, xp, p)
+            cf = changes[k] * foot
+            if ds_out[k]:
+                rmw = xp.maximum(changes[k] - unique[k], 0.0) * foot
+                rows.append((rmw, cf, rmw * rel_sp[k], cf * rel_sp[k], foot))
+            else:
+                z = xp.zeros_like(cf)
+                rows.append((cf, z, cf * rel_sp[k], z, foot))
+        return compute_cycles, total_trips, par, inst_at, tt, st, fans, tuple(rows)
+
+    return core
+
+
+def generic_hierarchical_energy(real_levels, real_parent, K, bt, xp, p, hop=False):
+    """Shape-generic :func:`batch_hierarchical_energy`: the identical
+    level-walk float-operation sequence with energies / word widths /
+    precomputed innermost+MAC terms read from the parameter pack
+    (``lvl_read_e`` / ``lvl_write_e`` / ``wb`` / ``l1_terms`` /
+    ``mac_term`` / ``hop``). ``real_parent`` uses -1 for parentless.
+    Returns ``(energy[B], noc_energy[B] or None, mx)``."""
+    inst_at = bt.inst_at
+    mx = xp.zeros(())
+    e_terms = []
+    noc_terms = [] if hop else None
+    for k in range(K):
+        wbk = p["wb"][k]
+        r = bt.rows[k]
+        for pos, i in enumerate(real_levels):
+            t = r.fills[:, pos] * inst_at[:, i] * wbk
+            mx = xp.maximum(mx, xp.max(t))
+            e_terms.append(t * p["lvl_write_e"][i])
+            t = r.drains[:, pos] * inst_at[:, i] * wbk
+            mx = xp.maximum(mx, xp.max(t))
+            e_terms.append(t * p["lvl_read_e"][i])
+            parent_idx = real_parent[i]
+            if parent_idx >= 0:
+                n_parent = inst_at[:, parent_idx]
+                t = r.parent_reads[:, pos] * n_parent * wbk
+                mx = xp.maximum(mx, xp.max(t))
+                e_terms.append(t * p["lvl_read_e"][parent_idx])
+                t = r.parent_writes[:, pos] * n_parent * wbk
+                mx = xp.maximum(mx, xp.max(t))
+                e_terms.append(t * p["lvl_write_e"][parent_idx])
+                if noc_terms is not None:
+                    t = (r.fills[:, pos] + r.drains[:, pos]) * inst_at[:, i] * wbk
+                    mx = xp.maximum(mx, xp.max(t))
+                    noc_terms.append(t * p["hop"])
+        e_terms.append(p["l1_terms"][k])
+    e_terms.append(p["mac_term"])
+    energy = ordered_sum(xp, xp.zeros_like(bt.compute_cycles), e_terms)
+    noc_energy = (
+        ordered_sum(xp, xp.zeros_like(energy), noc_terms)
+        if noc_terms is not None
+        else None
+    )
+    return energy, noc_energy, mx
+
+
+def _generic_scalarize(metric: str, xp):
+    """Shape-generic ``_metric_scalarize``: frequency comes from the
+    parameter pack (same exact-divisor barrier, so decisions stay
+    bit-identical to the host filter)."""
+    if metric == "latency":
+        return lambda cyc, en, p: cyc
+    if metric == "energy":
+        return lambda cyc, en, p: en
+    if metric == "edp":
+        return lambda cyc, en, p: (en * 1e-12) * (
+            cyc / exact_divisor(xp, p["freq"])
+        )
+    return lambda cyc, en, p: cyc * 0.0
+
+
+def _make_generic_fused_core(skey, terms, metric: str, xp, lax):
+    """Shape-generic fused admit+score core: ``core(tt, st, perm,
+    incumbent, p) -> (admit, lb_guard, latency, energy, util,
+    score_guard, extras)``.
+
+    The calibration scale enters as the traced ``p['calib_scale']``
+    parameter (1.0 when uncalibrated -- ``x * 1.0`` is bit-exact, so the
+    uncalibrated program matches the unscaled per-context path and ONE
+    compiled program serves every calibration value). Extras additionally
+    carry the raw admission-bound arrays (``lb_cycles`` / ``lb_energy``,
+    already calibrated) and the scalarized ``metric_score`` so
+    device-resident loops can replay admission and selection host-side
+    without a second dispatch.
+    """
+    lb_core = _make_generic_lb_core(skey, xp, lax)
+    traffic_core = _make_generic_batch_core(skey, xp, lax)
+    scalarize = _generic_scalarize(metric, xp)
+
+    def core(tt, st, perm, incumbent, p):
+        lb_cyc, lb_en, lb_mx = lb_core(tt, st, perm, p)
+        lb_cyc = lb_cyc * p["calib_scale"]
+        admit = scalarize(lb_cyc, lb_en, p) < incumbent
+        out = traffic_core(tt, st, perm, p)
+        bt = BatchTraffic(
+            compute_cycles=out[0],
+            total_trips=out[1],
+            par=out[2],
+            inst_at=out[3],
+            tt=out[4],
+            st=out[5],
+            fans=out[6],
+            rows=tuple(DsTrafficBatch(*r) for r in out[7]),
+        )
+        latency, energy, util, score_mx, extras = terms(bt, xp, p)
+        latency = latency * p["calib_scale"]
+        extras = dict(extras)
+        extras["lb_cycles"] = lb_cyc
+        extras["lb_energy"] = lb_en
+        extras["metric_score"] = scalarize(latency, energy, p)
+        return admit, lb_mx, latency, energy, util, score_mx, extras
+
+    return core
+
+
+class GenericFusedRunner:
+    """Dispatch handle for one (context, model, metric) over a SHARED
+    shape-generic compiled program: the program lives in the process-wide
+    ``_GENERIC_PROGRAMS`` cache keyed by (shape class, model structure,
+    metric); this object carries the context's parameter pack (uploaded
+    to device once, lazily) and implements the same ``(sb, incumbent) ->
+    7-tuple or None`` protocol as ``build_fused_runner``'s closures, plus
+    the device-resident extensions the search loops use
+    (:meth:`dispatch_device`, :meth:`is_traced`)."""
+
+    supports_precompute = True
+
+    def __init__(self, ctx, core, params, pkey, donates: bool) -> None:
+        self._ctx = ctx
+        self._core = core
+        self._params = params
+        self._pkey = pkey
+        self._donates = donates
+        self._dev_params = None
+        self._dev_inf = None  # cached device scalar for incumbent=inf
+
+    @property
+    def program_key(self):
+        return self._pkey
+
+    def is_traced(self, padded_batch: int) -> bool:
+        """Whether the shared program has already been traced at this
+        pow2 bucket (by ANY context in the shape class) -- lets warmup
+        skip re-dispatching buckets the class already covers."""
+        return (self._pkey, int(padded_batch)) in _TRACE_COMBOS
+
+    def dispatch_device(self, sb: StackedBatch):
+        """One fused dispatch, results left ON DEVICE: returns the raw
+        (possibly padded -- callers slice to the batch size) output
+        tuple, or None on failure. Device-resident loops use this to
+        fetch only small scalars per generation and defer full
+        materialization to the K-generation sync."""
+        ctx = self._ctx
+        if ctx._jax_failed:
+            return None
+        try:
+            jax = ctx._ensure_jax()
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                tt, st, perm, B = ctx._jax_device_padded(sb)
+                if self._dev_params is None:
+                    self._dev_params = jax.device_put(self._params)
+                if self._dev_inf is None:
+                    self._dev_inf = jnp.asarray(math.inf, dtype=jnp.float64)
+                inc = self._dev_inf
+                ctx.jax_dispatches += 1
+                _record_trace(self._pkey, int(tt.shape[0]))
+                out = self._core(tt, st, perm, inc, self._dev_params)
+            if self._donates:
+                sb.devp = None  # donated away; fallbacks re-upload
+            return out
+        except Exception:
+            ctx._jax_failed = True
+            return None
+
+    def __call__(self, sb: StackedBatch, incumbent: float):
+        ctx = self._ctx
+        if ctx._jax_failed:
+            return None
+        try:
+            jax = ctx._ensure_jax()
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+
+            with enable_x64():
+                tt, st, perm, B = ctx._jax_device_padded(sb)
+                if self._dev_params is None:
+                    self._dev_params = jax.device_put(self._params)
+                inc = jnp.asarray(float(incumbent), dtype=jnp.float64)
+                ctx.jax_dispatches += 1
+                _record_trace(self._pkey, int(tt.shape[0]))
+                out = self._core(tt, st, perm, inc, self._dev_params)
+            if self._donates:
+                sb.devp = None  # donated away; fallbacks re-upload
+            admit, lb_mx, latency, energy, util, score_mx, extras = out
+            latency = np.asarray(latency)
+            if latency.dtype != np.float64:
+                # x64 unavailable: cannot honour bit-identity
+                ctx._jax_failed = True
+                return None
+            return (
+                np.asarray(admit)[:B],
+                float(np.asarray(lb_mx)),
+                latency[:B],
+                np.asarray(energy)[:B],
+                np.asarray(util)[:B],
+                float(np.asarray(score_mx)),
+                {k: np.asarray(v)[:B] for k, v in extras.items()},
+            )
+        except Exception:
+            ctx._jax_failed = True
+            return None
 
 
 # ---------------------------------------------------------------------- #

@@ -60,17 +60,22 @@ class CostModel(abc.ABC):
     ``repro.codesign.calibrate``; any object with a positive-float
     ``scale`` and a ``key_parts()`` tuple works). A calibrated model
     multiplies every latency prediction by that scale as the FINAL
-    operation of the scalar paths (``evaluate``, ``evaluate_signature``,
-    the ``lower_bound*`` family) -- a uniform positive final multiply
-    keeps the admission invariant (bound <= evaluate, since IEEE multiply
-    by the same positive factor is monotone) and never changes which
-    mapping is argmin. The vectorized fast paths
+    operation of EVERY path -- scalar (``evaluate``,
+    ``evaluate_signature``, the ``lower_bound*`` family) and vectorized
     (``lower_bound_batch_fn``, ``batch_admit_core_builder``,
-    ``batch_cost_terms_fn``, ``evaluate_signature_batch``) instead return
-    None while calibrated -- the engine's documented fallback to the
-    scalar path -- so their bit-identity contracts stay trivially true.
-    ``store_key_parts()`` includes ``calibration_key_parts()``, so
-    calibrated and raw results never alias in a ResultStore.
+    ``batch_cost_terms_fn``, ``evaluate_signature_batch``,
+    ``batch_cost_terms_generic``) alike. A uniform positive final
+    multiply keeps the admission invariant (bound <= evaluate, since
+    IEEE multiply by the same positive factor is monotone) and never
+    changes which mapping is argmin; and because the batch paths apply
+    the IDENTICAL final ``latency * scale`` per element, the calibrated
+    batch results stay bit-identical to the calibrated scalar path
+    (same two float64 operands, same single rounding). The shape-generic
+    path traces the scale as a parameter (1.0 when uncalibrated --
+    ``x * 1.0`` is IEEE-exact), so one compiled program serves every
+    calibration value. ``store_key_parts()`` includes
+    ``calibration_key_parts()``, so calibrated and raw results never
+    alias in a ResultStore.
     """
 
     name: str = "base"
@@ -238,6 +243,27 @@ class CostModel(abc.ABC):
         carrying whatever :meth:`costs_from_batch` needs to rebuild
         breakdown dicts. None when unsupported (disables both the shared
         numpy scoring program and the fused jax path)."""
+        return None
+
+    def batch_cost_terms_generic(self, problem: Problem, arch: Architecture):
+        """Optional SHAPE-GENERIC cost terms for the process-wide trace
+        cache: ``(model_struct_key, model_params, terms)`` or None.
+
+        ``model_struct_key`` is a hashable tuple of every STRUCTURAL
+        property the terms program branches on (it joins the
+        ``AnalysisContext.shape_class_key()`` in the compiled-program
+        key); ``model_params`` is a dict of numpy arrays/scalars merged
+        into the context's ``shape_params()`` pack and passed as a traced
+        argument; ``terms(bt, xp, p)`` mirrors
+        :meth:`batch_cost_terms_fn`'s closure but reads every VALUE from
+        ``p`` instead of Python closure constants, so one jitted program
+        serves every (problem, arch) pair with equal keys (the closure of
+        the FIRST such pair gets traced; it must not capture values that
+        can differ within the key class). ``model_params`` must include
+        ``calib_scale`` (1.0 when uncalibrated) -- the generic fused core
+        applies it as the final latency multiply. None when unsupported;
+        the engine then falls back to the per-context
+        :meth:`batch_cost_terms_fn` pipeline."""
         return None
 
     def costs_from_batch(

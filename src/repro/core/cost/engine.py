@@ -39,7 +39,12 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.architecture import Architecture
-from repro.core.cost.analysis import BATCH_EXACT_LIMIT, StackedBatch, get_context
+from repro.core.cost.analysis import (
+    BATCH_EXACT_LIMIT,
+    StackedBatch,
+    get_context,
+    global_trace_count,
+)
 from repro.core.cost.base import Cost, CostModel
 from repro.core.cost.store import ResultStore
 from repro.core.genome_batch import GenomeBatch, RowCandidate
@@ -71,6 +76,38 @@ class _FusedOutcome(NamedTuple):
     arrays: Optional[tuple]  # (latency, energy, util, extras) or None
 
 
+class PrecomputedScores:
+    """Host-materialized results of one mega-batch generic-fused dispatch
+    (see ``repro.core.device_loop``): per-row admission-bound and score
+    arrays for one :class:`GenomeBatch`, in row order. ``_serve_order``
+    consumes them in place of a dispatch -- admission is recomputed
+    host-side from the bound arrays against the CURRENT incumbent, so
+    decisions (and therefore memo/store/counters) match a per-batch
+    dispatch exactly even when the scoring ran generations earlier."""
+
+    __slots__ = ("lb_cyc", "lb_en", "latency", "energy", "util", "extras")
+
+    def __init__(self, lb_cyc, lb_en, latency, energy, util, extras) -> None:
+        self.lb_cyc = lb_cyc
+        self.lb_en = lb_en
+        self.latency = latency
+        self.energy = energy
+        self.util = util
+        self.extras = extras
+
+    def select(self, rows) -> "PrecomputedScores":
+        """Row-sliced view (slice object or index list), mirroring
+        ``GenomeBatch.select`` for the probe recursion."""
+        return PrecomputedScores(
+            self.lb_cyc[rows],
+            self.lb_en[rows],
+            self.latency[rows],
+            self.energy[rows],
+            self.util[rows],
+            {k: v[rows] for k, v in self.extras.items()},
+        )
+
+
 @dataclass
 class EngineStats:
     """Counters for one engine lifetime (one search, in practice)."""
@@ -94,6 +131,15 @@ class EngineStats:
     # path -- results are bit-identical by the backend contract, so this
     # is a warning-level event, not an error (at most 1 per engine).
     backend_fallbacks: int = 0
+    # NEW compiled programs traced on behalf of this engine (sampled as
+    # deltas of the process-global trace registry around every dispatch
+    # site, so shape-generic cache hits -- a program traced by ANOTHER
+    # engine of the same shape class -- correctly count zero here).
+    n_traces: int = 0
+    # host<->device synchronization points of the device-resident search
+    # loops (one per mega-batch precompute / deferred-generation flush);
+    # stays 0 on the host-loop paths.
+    device_syncs: int = 0
     admit_s: float = 0.0  # wall-clock spent in the admission (bound) stage
     score_s: float = 0.0  # wall-clock spent scoring admitted misses
 
@@ -339,6 +385,7 @@ class EvaluationEngine:
         gb: GenomeBatch,
         incumbent: float = math.inf,
         probe: int = 0,
+        precomputed: Optional[PrecomputedScores] = None,
     ) -> List[Optional[Cost]]:
         """Array-native :meth:`evaluate_batch` over a dense
         :class:`GenomeBatch`: in-batch dedup is one ``np.unique`` row-hash
@@ -351,9 +398,23 @@ class EvaluationEngine:
         memo-cached candidate counts a cache hit, a store hit counts once
         and promotes (duplicates become cache hits), duplicates of a miss
         or pruned candidate count once per batch.
+
+        ``precomputed`` hands in this batch's rows of an earlier
+        mega-batch device dispatch (:class:`PrecomputedScores`, built by
+        ``repro.core.device_loop``): memo/store/dedup/admission run
+        exactly as usual, but miss scoring reads the precomputed arrays
+        instead of dispatching -- results, counters, and side effects are
+        identical to a fresh dispatch by construction.
         """
         if probe and incumbent == math.inf and len(gb) > probe:
-            head = self.evaluate_genome_batch(gb.select(slice(0, probe)))
+            head = self.evaluate_genome_batch(
+                gb.select(slice(0, probe)),
+                precomputed=(
+                    precomputed.select(slice(0, probe))
+                    if precomputed is not None
+                    else None
+                ),
+            )
             inc = incumbent
             for c in head:
                 if c is not None:
@@ -361,7 +422,13 @@ class EvaluationEngine:
                     if s < inc:
                         inc = s
             return head + self.evaluate_genome_batch(
-                gb.select(slice(probe, len(gb))), incumbent=inc
+                gb.select(slice(probe, len(gb))),
+                incumbent=inc,
+                precomputed=(
+                    precomputed.select(slice(probe, len(gb)))
+                    if precomputed is not None
+                    else None
+                ),
             )
 
         self.stats.batches += 1
@@ -392,10 +459,17 @@ class EvaluationEngine:
 
         stacked = (
             gb.stacked(miss_rows)
-            if (order and self.backend is not None)
+            if (order and self.backend is not None and precomputed is None)
             else None
         )
-        self._serve_order(order, incumbent, results, pending, stacked=stacked)
+        self._serve_order(
+            order,
+            incumbent,
+            results,
+            pending,
+            stacked=stacked,
+            precomputed=precomputed,
+        )
         return results
 
     def evaluate_batch(
@@ -403,6 +477,7 @@ class EvaluationEngine:
         candidates: Sequence,
         incumbent: float = math.inf,
         probe: int = 0,
+        precomputed: Optional[PrecomputedScores] = None,
     ) -> List[Optional[Cost]]:
         """Evaluate a population: dedup within the batch, serve memo/store
         hits, reject bound-dominated candidates (entries come back
@@ -430,7 +505,9 @@ class EvaluationEngine:
         stacking as array programs).
         """
         if isinstance(candidates, GenomeBatch):
-            return self.evaluate_genome_batch(candidates, incumbent, probe)
+            return self.evaluate_genome_batch(
+                candidates, incumbent, probe, precomputed=precomputed
+            )
         if probe and incumbent == math.inf and len(candidates) > probe:
             head = self.evaluate_batch(candidates[:probe])
             inc = incumbent
@@ -473,13 +550,35 @@ class EvaluationEngine:
         results: List[Optional[Cost]],
         pending: Dict,
         stacked=None,
+        precomputed: Optional[PrecomputedScores] = None,
     ) -> None:
         """Admission + scoring for one batch's unique non-hit candidates:
         the shared tail of :meth:`evaluate_batch` (which stacks lazily
         from signatures) and :meth:`evaluate_genome_batch` (which hands in
         the row-sliced ``StackedBatch``). ``pending`` maps each key to its
-        duplicate result slots."""
+        duplicate result slots. ``precomputed`` replaces the dispatch with
+        already-materialized arrays (see :class:`PrecomputedScores`)."""
+        before = global_trace_count()
+        try:
+            self._serve_order_impl(
+                order, incumbent, results, pending, stacked, precomputed
+            )
+        finally:
+            # delta-sample the process-global trace registry: only programs
+            # traced DURING this batch count against this engine (a
+            # shape-generic cache hit -- program traced by another engine of
+            # the same class -- correctly counts zero)
+            self.stats.n_traces += global_trace_count() - before
 
+    def _serve_order_impl(
+        self,
+        order: List[Tuple[object, object]],
+        incumbent: float,
+        results: List[Optional[Cost]],
+        pending: Dict,
+        stacked=None,
+        precomputed: Optional[PrecomputedScores] = None,
+    ) -> None:
         def commit(misses, costs):
             for (key, cand), c in zip(misses, costs):
                 self.stats.evaluated += 1
@@ -487,6 +586,43 @@ class EvaluationEngine:
                 self._store_put(cand, c)
                 for idx in pending[key]:
                     results[idx] = c
+
+        if precomputed is not None and order:
+            # device-resident loop replay: the scoring ran generations ago
+            # as one mega-batch dispatch; admission is recomputed here from
+            # the precomputed bound arrays against the CURRENT incumbent,
+            # so decisions/counters/side effects equal a fresh dispatch.
+            pre = precomputed
+            rows = [cand.row for _key, cand in order]
+            # count the batches a host loop would have served via its own
+            # fused dispatch (>= _BATCH_MIN; smaller ones go scalar there)
+            # so the counter is invariant between device and host runs
+            if len(order) >= _BATCH_MIN:
+                self.stats.fused_dispatches += 1
+            if self.prune and incumbent != math.inf:
+                t0 = perf_counter()
+                scal = self._scalarize_batch(pre.lb_cyc[rows], pre.lb_en[rows])
+                admit = [bool(v < incumbent) for v in scal]
+                misses, select = self._partition_admitted(order, admit)
+                self.stats.admit_s += perf_counter() - t0
+            else:
+                misses, select = list(order), list(range(len(order)))
+            if misses:
+                t0 = perf_counter()
+                commit(
+                    misses,
+                    self.cost_model.costs_from_batch(
+                        self.problem,
+                        self.arch,
+                        pre.latency,
+                        pre.energy,
+                        pre.util,
+                        pre.extras,
+                        indices=[rows[pos] for pos in select],
+                    ),
+                )
+                self.stats.score_s += perf_counter() - t0
+            return
 
         misses = order
         select: Optional[List[int]] = None
@@ -633,6 +769,20 @@ class EvaluationEngine:
         if self._fused_failed:
             return None
         if self._fused_runner is None:
+            cache_key = (repr(self.cost_model.store_key_parts()), self.metric)
+            # shape-generic first: one process-wide compiled program serves
+            # every (problem, arch) of this shape class, so engines after
+            # the first trace nothing at all
+            generic = self.cost_model.batch_cost_terms_generic(
+                self.problem, self.arch
+            )
+            if generic is not None:
+                runner = self._ctx.build_generic_fused_runner(
+                    generic, self.metric, cache_key=cache_key
+                )
+                if runner is not None:
+                    self._fused_runner = runner
+                    return runner
             terms = self.cost_model.batch_cost_terms_fn(self.problem, self.arch)
             lb_builder = self.cost_model.batch_admit_core_builder(
                 self.problem, self.arch
@@ -640,7 +790,6 @@ class EvaluationEngine:
             if terms is None or lb_builder is None:
                 self._fused_failed = True
                 return None
-            cache_key = (repr(self.cost_model.store_key_parts()), self.metric)
             runner = self._ctx.build_fused_runner(
                 lb_builder, terms, self.metric, cache_key=cache_key
             )
@@ -677,18 +826,29 @@ class EvaluationEngine:
                 if b and int(b) >= _BATCH_MIN
             }
         )
+        # shape-generic runners consult the process-wide trace registry:
+        # a bucket already traced for this shape class (by this engine, a
+        # prior engine, or a prior warmup) is skipped -- one warmup covers
+        # the whole class
+        is_traced = getattr(runner, "is_traced", None)
         done = 0
-        for b in buckets:
-            tt = np.ones((b, n, D), dtype=np.int64)
-            st = np.ones((b, n, D), dtype=np.int64)
-            perm = np.tile(np.arange(D, dtype=np.int64), (b, n, 1))
-            if runner(StackedBatch(tt, st, perm), math.inf) is None:
-                # jax broke mid-flight: degrade immediately rather than
-                # rediscovering the failure on the first timed batch
-                self._fused_failed = True
-                self._check_backend_degraded()
-                break
-            done += 1
+        before = global_trace_count()
+        try:
+            for b in buckets:
+                if is_traced is not None and is_traced(b):
+                    continue
+                tt = np.ones((b, n, D), dtype=np.int64)
+                st = np.ones((b, n, D), dtype=np.int64)
+                perm = np.tile(np.arange(D, dtype=np.int64), (b, n, 1))
+                if runner(StackedBatch(tt, st, perm), math.inf) is None:
+                    # jax broke mid-flight: degrade immediately rather than
+                    # rediscovering the failure on the first timed batch
+                    self._fused_failed = True
+                    self._check_backend_degraded()
+                    break
+                done += 1
+        finally:
+            self.stats.n_traces += global_trace_count() - before
         return done
 
     def _admit_batch(self, order, incumbent: float, stacked=None):

@@ -31,6 +31,7 @@ from repro.core.cost.analysis import (
     batch_hierarchical_energy,
     boundary_bytes_per_instance,
     exact_divisor,
+    generic_hierarchical_energy,
     get_context,
     hierarchical_lower_bound,
 )
@@ -74,14 +75,38 @@ class MaestroLikeModel(CostModel):
         )
 
     def lower_bound_batch_fn(self, problem: Problem, arch: Architecture):
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
-        return get_context(problem, arch).lower_bound_batch
+        fn = get_context(problem, arch).lower_bound_batch
+        if self.calibration is None:
+            return fn
+        # same final multiply as the scalar ``_calibrate_bound`` per
+        # element, so calibrated batch admission stays bit-identical
+        s = float(self.calibration.scale)
+
+        def calibrated(*args, **kwargs):
+            out = fn(*args, **kwargs)
+            if out is None:
+                return None
+            cyc, en = out
+            return cyc * s, en
+
+        return calibrated
 
     def batch_admit_core_builder(self, problem: Problem, arch: Architecture):
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
-        return get_context(problem, arch)._make_lb_core
+        builder = get_context(problem, arch)._make_lb_core
+        if self.calibration is None:
+            return builder
+        s = float(self.calibration.scale)
+
+        def calibrated_builder(xp, lax=None):
+            core = builder(xp, lax)
+
+            def calibrated_core(tt, st, perm):
+                cyc, en, mx = core(tt, st, perm)
+                return cyc * s, en, mx
+
+            return calibrated_core
+
+        return calibrated_builder
 
     def store_key_parts(self):
         return (self.name, self.etab) + self.calibration_key_parts()
@@ -89,12 +114,15 @@ class MaestroLikeModel(CostModel):
     def batch_cost_terms_fn(self, problem: Problem, arch: Architecture):
         """Array-program twin of ``evaluate_signature``'s latency/energy
         accumulation (double-buffered schedule + startup + NoC delivery
-        term): same float-op order per row with numpy or jax.numpy. See
+        term): same float-op order per row with numpy or jax.numpy. A
+        calibration scale is applied as the final latency multiply,
+        exactly as ``apply_calibration`` does on the scalar path. See
         ``CostModel.batch_cost_terms_fn``."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             return None
+        cal_s = (
+            float(self.calibration.scale) if self.calibration is not None else None
+        )
         ctx = get_context(problem, arch)
         freq = arch.frequency_hz
         clusters = arch.clusters
@@ -146,9 +174,96 @@ class MaestroLikeModel(CostModel):
             extras["startup_cycles"] = startup
             extras["noc_energy_pj"] = noc_energy
             util = bt.par / exact_divisor(xp, num_pes)
+            if cal_s is not None:
+                latency = latency * cal_s
             return latency, energy, util, mx, extras
 
         return terms
+
+    def batch_cost_terms_generic(self, problem: Problem, arch: Architecture):
+        """Shape-generic twin of :meth:`batch_cost_terms_fn` (see
+        ``CostModel.batch_cost_terms_generic``): structure = which real
+        levels carry a finite-bandwidth fill/startup term; bandwidths,
+        energies, the NoC hop cost and the calibration scale ride in the
+        parameter pack."""
+        if not self.conformable(problem):
+            return None
+        ctx = get_context(problem, arch)
+        clusters = arch.clusters
+        real_levels = list(ctx.real_levels)
+        real_parent = [-1 if p is None else p for p in ctx.real_parent]
+        K = len(problem.data_spaces)
+        fill_levels = tuple(
+            (pos, i)
+            for pos, i in enumerate(real_levels)
+            if not (i == 0 or math.isinf(clusters[i].fill_bandwidth))
+        )
+        leaf = clusters[-1]
+        cal = self.calibration
+        model_key = (self.name, fill_levels)
+        model_params = {
+            "ms_bw": np.asarray(
+                [clusters[i].fill_bandwidth for _pos, i in fill_levels],
+                dtype=np.float64,
+            ),
+            "num_pes": np.float64(ctx.num_pes),
+            "lvl_read_e": np.asarray(
+                [c.read_energy for c in clusters], dtype=np.float64
+            ),
+            "lvl_write_e": np.asarray(
+                [c.write_energy for c in clusters], dtype=np.float64
+            ),
+            "l1_terms": np.asarray(
+                [
+                    ctx.l1_reads[ds.name] * ds.word_bytes * leaf.read_energy
+                    for ds in problem.data_spaces
+                ],
+                dtype=np.float64,
+            ),
+            "mac_term": np.float64(problem.macs * leaf.mac_energy),
+            "hop": np.float64(self.etab.noc_hop_pj_byte),
+            "calib_scale": np.float64(cal.scale) if cal is not None else np.float64(1.0),
+        }
+
+        def terms(bt, xp, p):
+            cc = bt.compute_cycles
+            mx = xp.maximum(
+                xp.maximum(xp.max(cc), xp.max(bt.total_trips)), xp.max(bt.par)
+            )
+            latency = cc
+            startup = xp.zeros_like(cc)
+            extras = {"compute_cycles": cc}
+            for t, (pos, i) in enumerate(fill_levels):
+                total_fill = xp.zeros_like(cc)
+                tile_bytes = xp.zeros_like(cc)
+                for k in range(K):
+                    r = bt.rows[k]
+                    tk = (r.fills[:, pos] + r.drains[:, pos]) * p["wb"][k]
+                    mx = xp.maximum(mx, xp.max(tk))
+                    total_fill = total_fill + tk
+                    tile_bytes = tile_bytes + r.foot[:, pos] * p["wb"][k]
+                mx = xp.maximum(mx, xp.max(tile_bytes))
+                valid = total_fill > 0
+                bw = exact_divisor(xp, p["ms_bw"][t])
+                fill_cycles = total_fill * p["freq"] / bw
+                startup = startup + xp.where(
+                    valid, tile_bytes * p["freq"] / bw, 0.0
+                )
+                extras[f"fill_cycles::{i}"] = fill_cycles
+                extras[f"fill_valid::{i}"] = valid
+                latency = xp.where(valid, xp.maximum(latency, fill_cycles), latency)
+            latency = latency + startup
+            energy, noc_energy, e_mx = generic_hierarchical_energy(
+                real_levels, real_parent, K, bt, xp, p, hop=True
+            )
+            mx = xp.maximum(mx, e_mx)
+            energy = energy + noc_energy
+            extras["startup_cycles"] = startup
+            extras["noc_energy_pj"] = noc_energy
+            util = bt.par / exact_divisor(xp, p["num_pes"])
+            return latency, energy, util, mx, extras
+
+        return model_key, model_params, terms
 
     def costs_from_batch(
         self, problem, arch, latency, energy, util, extras, indices=None
@@ -156,6 +271,9 @@ class MaestroLikeModel(CostModel):
         ctx = get_context(problem, arch)
         clusters = arch.clusters
         freq = arch.frequency_hz
+        cal_s = (
+            float(self.calibration.scale) if self.calibration is not None else None
+        )
         cc = extras["compute_cycles"]
         fills = [
             (clusters[i].name, extras[f"fill_cycles::{i}"], extras[f"fill_valid::{i}"])
@@ -173,6 +291,10 @@ class MaestroLikeModel(CostModel):
                     breakdown[f"fill_cycles_{name}"] = float(cyc[b])
             breakdown["startup_cycles"] = float(startup[b])
             breakdown["noc_energy_pj"] = float(noc[b])
+            if cal_s is not None:
+                # latency is already scaled inside the terms program; the
+                # breakdown records the scale exactly like apply_calibration
+                breakdown["calibration_scale"] = cal_s
             out.append(
                 Cost(
                     latency_cycles=float(latency[b]),
@@ -279,8 +401,6 @@ class MaestroLikeModel(CostModel):
         here with numpy over the admitted subset. ``stacked``/``select``
         reuse the engine's admission-stage StackedBatch (see
         ``CostModel.evaluate_signature_batch``)."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
         if not self.conformable(problem):
             raise ValueError(
                 f"{self.name} only supports operations {_SUPPORTED_OPS}, "

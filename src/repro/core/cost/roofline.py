@@ -163,9 +163,12 @@ class TPURooflineModel(CostModel):
         """Traceable form of the roofline admission bound (perfect chip
         scaling + compulsory VMEM traffic): an ``(xp, lax=None) -> core``
         builder whose core reproduces ``lower_bound`` per row bit-for-bit
-        with numpy or inside the fused jitted program."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
+        with numpy or inside the fused jitted program. A calibration scale
+        is applied to the cycles as the same final multiply the scalar
+        ``_calibrate_bound`` performs."""
+        cal_s = (
+            float(self.calibration.scale) if self.calibration is not None else None
+        )
         ctx = get_context(problem, arch)
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
         hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
@@ -194,6 +197,8 @@ class TPURooflineModel(CostModel):
                         total = total + t
                     memory_s = total / exact_divisor(xp, hbm_bw)
                 cycles = xp.maximum(compute_s, memory_s) * freq
+                if cal_s is not None:
+                    cycles = cycles * cal_s
                 return cycles, xp.full(B, energy_const, dtype=xp.float64), mx
 
             return core
@@ -205,9 +210,8 @@ class TPURooflineModel(CostModel):
         scalar bound (perfect chip scaling + compulsory VMEM traffic) for
         a whole stacked batch, bit-identically -- or returns None beyond
         the float64-exact range so the engine falls back per candidate.
-        Runs the same core the fused jitted path traces, with numpy."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
+        Runs the same core the fused jitted path traces, with numpy (the
+        admit core already carries the calibration multiply)."""
         ctx = get_context(problem, arch)
         core = self.batch_admit_core_builder(problem, arch)(np)
 
@@ -230,10 +234,13 @@ class TPURooflineModel(CostModel):
         """Array-program twin of ``evaluate``'s three-term roofline: VMEM
         boundary traffic from the shared batch analysis, chip utilization
         and collective terms from the stacked fan/tile matrices. Same
-        float-operation order per row with numpy or jax.numpy. See
+        float-operation order per row with numpy or jax.numpy; a
+        calibration scale is applied as the final latency multiply, exactly
+        as ``apply_calibration`` does on the scalar path. See
         ``CostModel.batch_cost_terms_fn``."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
+        cal_s = (
+            float(self.calibration.scale) if self.calibration is not None else None
+        )
         ctx = get_context(problem, arch)
         peak = float(arch.attrs.get("peak_bf16_flops", TPU_V5E["peak_bf16_flops"]))
         hbm_bw = float(arch.attrs.get("hbm_bw", TPU_V5E["hbm_bw"]))
@@ -333,7 +340,10 @@ class TPURooflineModel(CostModel):
                 "collective_s": collective_s,
                 "bound": bound_idx,
             }
-            return latency_s * freq, energy_pj, util, mx, extras
+            latency = latency_s * freq
+            if cal_s is not None:
+                latency = latency * cal_s
+            return latency, energy_pj, util, mx, extras
 
         return terms
 
@@ -341,9 +351,22 @@ class TPURooflineModel(CostModel):
         self, problem, arch, latency, energy, util, extras, indices=None
     ):
         freq = arch.frequency_hz
+        cal_s = (
+            float(self.calibration.scale) if self.calibration is not None else None
+        )
         rows = range(latency.shape[0]) if indices is None else indices
         out = []
         for b in rows:
+            breakdown = {
+                "compute_s": float(extras["compute_s"][b]),
+                "memory_s": float(extras["memory_s"][b]),
+                "collective_s": float(extras["collective_s"][b]),
+                "bound": float(extras["bound"][b]),
+            }
+            if cal_s is not None:
+                # latency is already scaled inside the terms program; the
+                # breakdown records the scale exactly like apply_calibration
+                breakdown["calibration_scale"] = cal_s
             out.append(
                 Cost(
                     latency_cycles=float(latency[b]),
@@ -351,12 +374,7 @@ class TPURooflineModel(CostModel):
                     utilization=float(util[b]),
                     macs=problem.macs,
                     frequency_hz=freq,
-                    breakdown={
-                        "compute_s": float(extras["compute_s"][b]),
-                        "memory_s": float(extras["memory_s"][b]),
-                        "collective_s": float(extras["collective_s"][b]),
-                        "bound": float(extras["bound"][b]),
-                    },
+                    breakdown=breakdown,
                 )
             )
         return out
@@ -377,8 +395,6 @@ class TPURooflineModel(CostModel):
         (bit-identical; BATCH_EXACT_LIMIT guard falls back to the scalar
         path). ``stacked``/``select`` reuse the engine's admission-stage
         StackedBatch (see ``CostModel.evaluate_signature_batch``)."""
-        if self.calibration is not None:
-            return None  # calibrated: scalar paths only (see CostModel doc)
         ctx = get_context(problem, arch)
         bt = ctx.signature_traffic_batch(
             sigs, backend=backend, stacked=stacked, select=select

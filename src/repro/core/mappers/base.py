@@ -48,6 +48,13 @@ class SearchResult:
     # engine degraded jax -> numpy mid-search (counted warning; results
     # unchanged by the backend bit-identity contract)
     backend_fallbacks: int = 0
+    # compiled programs traced on behalf of this search (0 when the
+    # shape-generic process cache already held every program -- the
+    # one-trace-per-shape-class property this counter makes observable)
+    n_traces: int = 0
+    # host<->device sync points of the device-resident search loops (one
+    # per mega-batch precompute / K-generation flush; 0 on host loops)
+    device_syncs: int = 0
     admit_s: float = 0.0  # engine wall-clock in the admission (bound) stage
     score_s: float = 0.0  # engine wall-clock scoring admitted misses
 
@@ -111,6 +118,8 @@ class SearchResult:
             "considered": self.considered,
             "fused_dispatches": self.fused_dispatches,
             "backend_fallbacks": self.backend_fallbacks,
+            "n_traces": self.n_traces,
+            "device_syncs": self.device_syncs,
             "elapsed_s": round(self.elapsed_s, 4),
             "evals_per_s": round(self.evals_per_s, 1),
             "admit_s": round(self.admit_s, 4),
@@ -231,6 +240,8 @@ class _Tracker:
             considered=delta("considered"),
             fused_dispatches=delta("fused_dispatches"),
             backend_fallbacks=delta("backend_fallbacks"),
+            n_traces=delta("n_traces"),
+            device_syncs=delta("device_syncs"),
             admit_s=delta("admit_s", 0.0),
             score_s=delta("score_s", 0.0),
         )

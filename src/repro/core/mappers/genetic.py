@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import genome_batch as gbm
 from repro.core.cost.base import CostModel
 from repro.core.cost.engine import EvaluationEngine
+from repro.core.device_loop import DeviceGAScorer, device_loop_enabled
 from repro.core.mappers.base import Mapper, SearchResult
 from repro.core.mapspace import MapSpace, fast_sample
 
@@ -89,14 +90,39 @@ class GeneticMapper(Mapper):
         P = self.population
         n, D = space.n_levels, len(space.dims)
 
+        # Device-resident scoring: each generation's fitness comes off one
+        # fused dispatch with results left ON DEVICE; the buffered results
+        # replay through the engine (and the tracker, in generation order)
+        # every sync_cadence() generations. Selection reads only the
+        # fitness vector and the GA never consults the tracker mid-loop,
+        # so deferring the offers is observationally equivalent -- best,
+        # trajectory, memo and store contents equal the host loop's.
+        def on_costs(g, cs):
+            for i, c in enumerate(cs):
+                tr.offer_lazy(
+                    lambda b=i, gg=g: gg.genome(b), c, score=c.metric(metric)
+                )
+
+        scorer = DeviceGAScorer(engine, on_costs) if device_loop_enabled(engine) else None
+
+        def score_batch(g):
+            """Per-row fitness; offers immediate (host) or deferred
+            (device, replayed in order at the K-generation sync)."""
+            if scorer is not None and scorer.active:
+                f = scorer.score(g)
+                if f is not None:
+                    return f
+            cs = engine.evaluate_batch(g)
+            out = np.empty(len(g), dtype=np.float64)
+            for i, c in enumerate(cs):
+                s = c.metric(metric)
+                tr.offer_lazy(lambda b=i, gg=g: gg.genome(b), c, score=s)
+                out[i] = s
+            return out
+
         tt, st, perm = gbm.random_rows_batch(space, rng, P)
         gb = gbm.GenomeBatch(space, tt, st, perm)
-        costs = engine.evaluate_batch(gb)
-        fitness = np.empty(P, dtype=np.float64)
-        for i, c in enumerate(costs):
-            s = c.metric(metric)
-            tr.offer_lazy(lambda b=i, g=gb: g.genome(b), c, score=s)
-            fitness[i] = s
+        fitness = score_batch(gb)
 
         T = min(self.tournament, P)
         elite = min(self.elite, P)
@@ -190,16 +216,13 @@ class GeneticMapper(Mapper):
                     perm[pa[todo]],
                 )
             cgb = gbm.GenomeBatch(space, ctt, cst, cperm)
-            ccosts = engine.evaluate_batch(cgb)
-            cfit2 = np.empty(C, dtype=np.float64)
-            for i, c in enumerate(ccosts):
-                s = c.metric(metric)
-                tr.offer_lazy(lambda b=i, g=cgb: g.genome(b), c, score=s)
-                cfit2[i] = s
+            cfit2 = score_batch(cgb)
             tt = np.concatenate([tt[:elite], ctt])
             st = np.concatenate([st[:elite], cst])
             perm = np.concatenate([perm[:elite], cperm])
             fitness = np.concatenate([fitness[:elite], cfit2])
+        if scorer is not None:
+            scorer.flush()  # replay any still-buffered generations
         return tr.result()
 
     # ------------------------------------------------------------------ #

@@ -219,6 +219,8 @@ def result_to_record(res: SearchResult) -> dict:
             "considered": res.considered,
             "fused_dispatches": res.fused_dispatches,
             "backend_fallbacks": res.backend_fallbacks,
+            "n_traces": res.n_traces,
+            "device_syncs": res.device_syncs,
             "admit_s": res.admit_s,
             "score_s": res.score_s,
         },
@@ -242,6 +244,8 @@ def result_from_record(rec: dict) -> SearchResult:
         considered=int(c["considered"]),
         fused_dispatches=int(c["fused_dispatches"]),
         backend_fallbacks=int(c.get("backend_fallbacks", 0)),
+        n_traces=int(c.get("n_traces", 0)),
+        device_syncs=int(c.get("device_syncs", 0)),
         admit_s=float(c["admit_s"]),
         score_s=float(c["score_s"]),
     )
@@ -726,6 +730,8 @@ class SweepExecutor:
             "store_hits": sum(r.store_hits for r in results),
             "pruned": sum(r.pruned for r in results),
             "fused_dispatches": sum(r.fused_dispatches for r in results),
+            "n_traces": sum(r.n_traces for r in results),
+            "device_syncs": sum(r.device_syncs for r in results),
             "elapsed_s": round(sum(r.elapsed_s for r in results), 4),
             # robustness ledger
             "workers": self.workers,

@@ -406,10 +406,20 @@ def test_calibrated_store_key_differs_and_rescales(model_cls):
     lb_cal = cal.lower_bound(problem, mapping, arch)
     assert lb_cal[0] == pytest.approx(2.5 * lb_raw[0])
     assert lb_cal[0] <= c_cal.latency_cycles * (1 + 1e-12)
-    # vectorized fast paths decline while calibrated (scalar fallback)
-    assert cal.lower_bound_batch_fn(problem, arch) is None
-    assert cal.batch_admit_core_builder(problem, arch) is None
-    assert cal.batch_cost_terms_fn(problem, arch) is None
+    # vectorized fast paths STAY available while calibrated (the scale is
+    # a final multiply inside the batch programs) and match the calibrated
+    # scalar path bit for bit
+    assert cal.lower_bound_batch_fn(problem, arch) is not None
+    assert cal.batch_admit_core_builder(problem, arch) is not None
+    assert cal.batch_cost_terms_fn(problem, arch) is not None
+    from repro.core.cost.analysis import get_context
+    from repro.core.mapping import mapping_signature
+
+    sig = mapping_signature(mapping, get_context(problem, arch).dims)
+    (c_batch,) = cal.evaluate_signature_batch(problem, arch, [sig])
+    assert c_batch.latency_cycles == c_cal.latency_cycles
+    assert c_batch.energy_pj == c_cal.energy_pj
+    assert c_batch.breakdown == c_cal.breakdown
     # uncalibrating restores the raw behavior exactly
     cal.set_calibration(None)
     assert cal.store_key_parts() == raw.store_key_parts()

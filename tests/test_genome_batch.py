@@ -332,12 +332,15 @@ def test_sweep_content_equal_instances_share_context():
 
 def test_bucketed_warmup_pretraces_and_preserves_results():
     pytest.importorskip("jax")
-    from repro.core.cost.analysis import get_context
+    from repro.core.cost.analysis import get_context, reset_trace_registry
 
     arch = cloud_accelerator()
     cm = TimeloopLikeModel()
     eng = EvaluationEngine(cm, GEMM, arch, metric="edp", backend="jax")
     ctx = get_context(GEMM, arch)
+    # warmup skips buckets the SHAPE CLASS has already traced (any prior
+    # engine/test in this process counts), so reset for determinism
+    reset_trace_registry()
     before = ctx.jax_dispatches
     n = eng.warmup([6, 100, 3])  # pow2 buckets: 8, 128 (3 < _BATCH_MIN)
     if ctx._jax_failed:

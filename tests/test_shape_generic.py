@@ -1,0 +1,265 @@
+"""Shape-generic fused cores: the ONE-program-per-shape-class machinery
+must be bit-identical to the per-context closures it replaces, and the
+process-wide program cache must actually be shared -- a second problem in
+the same shape class adds zero traces and zero warmup buckets."""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.codesign import CalibrationScale
+from repro.core.architecture import cloud_accelerator, edge_accelerator
+from repro.core.cost import (
+    EvaluationEngine,
+    MaestroLikeModel,
+    TimeloopLikeModel,
+)
+from repro.core.cost.analysis import (
+    _make_generic_fused_core,
+    get_context,
+    global_trace_count,
+    reset_trace_registry,
+)
+from repro.core.genome_batch import random_genome_batch
+from repro.core.mapspace import MapSpace
+from repro.core.problem import Problem
+
+GEMM = Problem.gemm(64, 32, 16, word_bytes=1)
+# same shape class as GEMM (ranks/levels/data-space structure), different
+# content (dim sizes, word widths) -- the sharing tests hinge on this pair
+GEMM_B = Problem.gemm(128, 64, 48, word_bytes=2)
+CONV = Problem.conv2d(2, 8, 8, 7, 7, 3, 3, stride=2, name="conv_t", word_bytes=1)
+MODELS = [TimeloopLikeModel, MaestroLikeModel]
+
+
+def _stacked(problem, arch, seed, B=24):
+    space = MapSpace(problem, arch)
+    gb = random_genome_batch(space, np.random.default_rng(seed), B)
+    return gb.stacked()
+
+
+def _generic_out(cm, problem, arch, sb, metric, incumbent=math.inf):
+    """Run the shape-generic fused core with xp=numpy (no jax involved:
+    this isolates the generic ALGEBRA from the jit machinery)."""
+    ctx = get_context(problem, arch)
+    generic = cm.batch_cost_terms_generic(problem, arch)
+    assert generic is not None, f"{cm.name} lost its generic terms hook"
+    model_key, model_params, terms = generic
+    p = dict(ctx.shape_params())
+    p.update(model_params)
+    core = _make_generic_fused_core(ctx.shape_class_key(), terms, metric, np, None)
+    return core(sb.tt, sb.st, sb.perm, incumbent, p)
+
+
+def _context_out(cm, problem, arch, sb, metric, incumbent=math.inf):
+    """The per-context fused core (the pre-generic path) on numpy."""
+    ctx = get_context(problem, arch)
+    lb_builder = cm.batch_admit_core_builder(problem, arch)
+    terms = cm.batch_cost_terms_fn(problem, arch)
+    assert lb_builder is not None and terms is not None
+    core = ctx._make_fused_core(np, None, lb_builder, terms, metric)
+    return core(sb.tt, sb.st, sb.perm, incumbent)
+
+
+def _assert_fused_equal(g, c):
+    g_admit, g_lbmx, g_lat, g_en, g_ut, g_smx, g_extras = g
+    c_admit, c_lbmx, c_lat, c_en, c_ut, c_smx, c_extras = c
+    assert np.array_equal(np.asarray(g_admit), np.asarray(c_admit))
+    assert np.array_equal(np.asarray(g_lat), np.asarray(c_lat))
+    assert np.array_equal(np.asarray(g_en), np.asarray(c_en))
+    assert np.array_equal(np.asarray(g_ut), np.asarray(c_ut))
+    # extras shared by both paths must agree bit for bit too (the generic
+    # core ADDS lb_cycles/lb_energy/metric_score on top)
+    for k in set(g_extras) & set(c_extras):
+        assert np.array_equal(np.asarray(g_extras[k]), np.asarray(c_extras[k])), k
+
+
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", MODELS)
+@pytest.mark.parametrize(
+    "mk_arch", [edge_accelerator, cloud_accelerator], ids=["edge", "cloud"]
+)
+@pytest.mark.parametrize("metric", ["edp", "latency", "energy"])
+def test_generic_core_bit_identical_to_per_context(problem, model_cls, mk_arch, metric):
+    """Generic fused core (values as a parameter pack) == per-context
+    fused core (values baked into the closure), bit for bit, on numpy --
+    across randomized candidate batches and a real finite incumbent."""
+    arch = mk_arch()
+    cm = model_cls()
+    for seed in (0, 7, 23):
+        sb = _stacked(problem, arch, seed)
+        g = _generic_out(cm, problem, arch, sb, metric)
+        c = _context_out(cm, problem, arch, sb, metric)
+        _assert_fused_equal(g, c)
+        # admission compares the LOWER-BOUND scores against the incumbent,
+        # so a median lb score makes the admit bits non-trivial
+        lb_cyc = np.asarray(g[6]["lb_cycles"])
+        lb_en = np.asarray(g[6]["lb_energy"])
+        if metric == "latency":
+            lb_scores = lb_cyc
+        elif metric == "energy":
+            lb_scores = lb_en
+        else:
+            lb_scores = (lb_en * 1e-12) * (lb_cyc / arch.frequency_hz)
+        inc = float(np.median(lb_scores))
+        g2 = _generic_out(cm, problem, arch, sb, metric, incumbent=inc)
+        c2 = _context_out(cm, problem, arch, sb, metric, incumbent=inc)
+        _assert_fused_equal(g2, c2)
+        admit = np.asarray(g2[0])
+        assert not admit.all(), "median lb incumbent should reject some rows"
+        if np.unique(lb_scores).size > 1:
+            assert admit.any(), "median lb incumbent should admit some rows"
+
+
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_generic_core_calibrated_scale_bit_identical(model_cls):
+    """With a (non-power-of-two) calibration attached, the traced
+    ``calib_scale`` parameter reproduces the per-context calibrated path
+    bit for bit -- the same program serves every calibration value."""
+    arch = cloud_accelerator()
+    cm = model_cls().set_calibration(CalibrationScale(1.7, 1, "test"))
+    sb = _stacked(GEMM, arch, 3)
+    g = _generic_out(cm, GEMM, arch, sb, "edp")
+    c = _context_out(cm, GEMM, arch, sb, "edp")
+    _assert_fused_equal(g, c)
+    # and the scale really is in effect: raw model differs
+    raw = _generic_out(model_cls(), GEMM, arch, sb, "edp")
+    assert not np.array_equal(np.asarray(g[2]), np.asarray(raw[2]))
+
+
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_one_generic_program_serves_the_shape_class(model_cls):
+    """GEMM and GEMM_B share a shape class; ONE generic core object fed
+    each problem's parameter pack must reproduce each problem's own
+    per-context core bit for bit."""
+    arch = cloud_accelerator()
+    cm = model_cls()
+    ctx_a = get_context(GEMM, arch)
+    ctx_b = get_context(GEMM_B, arch)
+    skey = ctx_a.shape_class_key()
+    assert skey == ctx_b.shape_class_key()
+    _key, _params_a, terms_a = cm.batch_cost_terms_generic(GEMM, arch)
+    core = _make_generic_fused_core(skey, terms_a, "edp", np, None)
+    for problem, ctx in ((GEMM, ctx_a), (GEMM_B, ctx_b)):
+        _mk, model_params, _t = cm.batch_cost_terms_generic(problem, arch)
+        p = dict(ctx.shape_params())
+        p.update(model_params)
+        sb = _stacked(problem, arch, 11)
+        g = core(sb.tt, sb.st, sb.perm, math.inf, p)
+        c = _context_out(cm, problem, arch, sb, "edp")
+        _assert_fused_equal(g, c)
+
+
+# ------------------------------------------------------------------ #
+# jitted path (jax required from here on)
+# ------------------------------------------------------------------ #
+
+
+def _costs_equal(a, b):
+    return (
+        a.latency_cycles == b.latency_cycles
+        and a.energy_pj == b.energy_pj
+        and a.utilization == b.utilization
+        and a.macs == b.macs
+        and a.frequency_hz == b.frequency_hz
+        and a.breakdown == b.breakdown
+    )
+
+
+def _engine_costs(cm, problem, arch, backend, seed=5, B=32):
+    eng = EvaluationEngine(cm, problem, arch, metric="edp", backend=backend)
+    gb = random_genome_batch(
+        MapSpace(problem, arch), np.random.default_rng(seed), B
+    )
+    costs = eng.evaluate_batch(gb)
+    assert all(c is not None for c in costs)
+    return eng, costs
+
+
+@pytest.mark.parametrize("problem", [GEMM, CONV], ids=["gemm", "conv"])
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_jax_generic_engine_matches_numpy(problem, model_cls):
+    """Engine results through the jitted shape-generic runner ==
+    numpy-backend engine results, bit for bit (incl. breakdowns)."""
+    pytest.importorskip("jax")
+    arch = cloud_accelerator()
+    eng_np, costs_np = _engine_costs(model_cls(), problem, arch, "numpy")
+    eng_jx, costs_jx = _engine_costs(model_cls(), problem, arch, "jax")
+    assert eng_jx.backend == "jax" and not eng_jx._ctx._jax_failed
+    for a, b in zip(costs_np, costs_jx):
+        assert _costs_equal(a, b)
+
+
+@pytest.mark.parametrize("model_cls", MODELS)
+def test_calibrated_jax_engine_matches_numpy(model_cls):
+    """Calibrated models keep the fused jax path and stay bit-identical
+    to the numpy engine (the scale is a final multiply on both)."""
+    pytest.importorskip("jax")
+    arch = cloud_accelerator()
+    mk = lambda: model_cls().set_calibration(CalibrationScale(1.7, 1, "test"))
+    eng_np, costs_np = _engine_costs(mk(), GEMM, arch, "numpy")
+    eng_jx, costs_jx = _engine_costs(mk(), GEMM, arch, "jax")
+    assert not eng_jx._ctx._jax_failed
+    for a, b in zip(costs_np, costs_jx):
+        assert _costs_equal(a, b)
+    assert all("calibration_scale" in c.breakdown for c in costs_jx)
+
+
+def test_second_problem_in_class_adds_zero_traces():
+    """After GEMM traces the generic program, a content-different problem
+    in the SAME shape class (GEMM_B) dispatches with ZERO new traces --
+    one compiled program per (shape class, model, metric)."""
+    pytest.importorskip("jax")
+    reset_trace_registry()
+    arch = cloud_accelerator()
+    eng_a, _ = _engine_costs(TimeloopLikeModel(), GEMM, arch, "jax", B=32)
+    assert not eng_a._ctx._jax_failed
+    assert eng_a.stats.n_traces >= 1
+    before = global_trace_count()
+    eng_b, costs_b = _engine_costs(TimeloopLikeModel(), GEMM_B, arch, "jax", B=32)
+    assert not eng_b._ctx._jax_failed
+    assert global_trace_count() == before
+    assert eng_b.stats.n_traces == 0
+    # and the shared program still produces exact results for problem B
+    _, costs_np = _engine_costs(TimeloopLikeModel(), GEMM_B, arch, "numpy", B=32)
+    for a, b in zip(costs_np, costs_b):
+        assert _costs_equal(a, b)
+
+
+def test_warmup_covers_the_whole_shape_class():
+    """One engine's warmup pre-traces the class-wide program buckets; a
+    second engine on a same-class problem has nothing left to trace."""
+    pytest.importorskip("jax")
+    reset_trace_registry()
+    arch = cloud_accelerator()
+    eng_a = EvaluationEngine(
+        TimeloopLikeModel(), GEMM, arch, metric="edp", backend="jax"
+    )
+    n_a = eng_a.warmup([16, 64])
+    assert n_a == 2
+    assert eng_a.stats.n_traces == 2
+    # repeat warmup on the SAME engine: all buckets already traced
+    assert eng_a.warmup([16, 64]) == 0
+    eng_b = EvaluationEngine(
+        TimeloopLikeModel(), GEMM_B, arch, metric="edp", backend="jax"
+    )
+    assert eng_b.warmup([16, 64]) == 0
+    assert eng_b.stats.n_traces == 0
+
+
+def test_trace_counter_attributes_per_engine():
+    """``EngineStats.n_traces`` is the engine-local delta of the global
+    registry: distinct metrics are distinct programs, repeats are free."""
+    pytest.importorskip("jax")
+    reset_trace_registry()
+    arch = edge_accelerator()
+    eng, _ = _engine_costs(MaestroLikeModel(), GEMM, arch, "jax", B=16)
+    first = eng.stats.n_traces
+    assert first >= 1
+    # same bucket again: no retrace
+    _ = eng.evaluate_batch(
+        random_genome_batch(MapSpace(GEMM, arch), np.random.default_rng(9), 16)
+    )
+    assert eng.stats.n_traces == first

@@ -1,0 +1,267 @@
+"""Whole-model end-to-end bench: ModelConfig -> OpStream -> one sweep -> EDP.
+
+Lowers each model (default: one dense-attention, one MoE, one SSM-hybrid)
+into its deduplicated operator stream (``repro.core.opstream``), drives
+EVERY stream's mappable ops through ONE ``union_opt_sweep`` call -- so
+content-equal ops across models share engine groups, memo caches and the
+persistent ResultStore -- and aggregates multiplicity-weighted per-op
+costs into end-to-end latency/energy/EDP per model, with a stacked
+per-role breakdown and the stream-vs-MODEL_FLOPS reconciliation ratio.
+
+Output goes to ``experiments/benchmarks/model.json`` (full rows) and
+``BENCH_model.json`` at the repo root (the CI-tracked summary).
+
+Usage:
+    python benchmarks/model_bench.py [--smoke] [--models A,B] [--shape S]
+                                     [--backend numpy] [--store DIR]
+                                     [--no-regress-check] [--update-baseline]
+                                     [--workers N] [--journal FILE] [--resume]
+
+``--smoke`` uses the ``_smoke`` reduced configs on a small prefill shape
+(finishes in seconds; the CI trajectory run). In smoke mode the run
+asserts evals/s has not regressed against the committed
+``BENCH_model.json`` with mappers_bench's warn-and-record bootstrap
+contract: a missing baseline is recorded from the run, rows benchmarked
+for the first time are warned about and appended (never overwriting the
+committed floor), and warm-store rows (``--store``) never gate or write
+the baseline -- they are incomparable to cold runs, but their nonzero
+``store_hits`` are exactly the cross-run sharing the CI cache exists for.
+
+Dryrun artifacts (``experiments/dryrun/<model>__<shape>__16x16.json``),
+when present, contribute the MEASURED hloparse collective term to each
+model's end-to-end latency (``opstream.measured_collective_s``) and an
+artifact-reconciliation row; absent artifacts degrade to collective_s=0
+with a note, never an error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks.sweep_cli import add_sweep_args, deterministic_stats, sweep_kwargs
+from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.core.architecture import cloud_accelerator
+from repro.core.cost import ResultStore
+from repro.core.optimizer import union_opt_sweep
+from repro.core.opstream import (
+    RECONCILE_BAND,
+    aggregate_stream_costs,
+    artifact_path,
+    build_opstream,
+    measured_collective_s,
+    reconcile_model_flops,
+    reconcile_with_artifact,
+    stream_sweep_tasks,
+)
+
+OUT = Path("experiments/benchmarks")
+ROOT_BENCH = Path("BENCH_model.json")
+
+#: one dense-attention, one MoE, one SSM/attention hybrid (acceptance floor)
+MODELS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "zamba2-2.7b"]
+
+SMOKE_SHAPE = ShapeConfig("smoke_prefill", 256, 2, "prefill")
+
+
+def record_baseline_rows(summary: dict, base: dict, new_keys, baseline_path: Path):
+    """Bootstrap half of the warn-and-record contract (mappers_bench
+    semantics): append first-run rows without touching committed floors."""
+    for section in ("evals_per_s", "edp", "store_hits"):
+        rows = summary.get(section, {})
+        dst = base.setdefault(section, {})
+        for key in new_keys:
+            if key in rows:
+                dst.setdefault(key, rows[key])
+    baseline_path.write_text(json.dumps(base, indent=1))
+    return base
+
+
+def check_regression(summary: dict, baseline_path: Path, margin: float) -> None:
+    """Smoke-mode evals/s gate vs the committed ``BENCH_model.json``.
+    Missing baseline -> record; matrix mismatch -> skip; new rows ->
+    warn-and-record; a row below ``margin`` x its floor -> SystemExit."""
+    if not baseline_path.exists():
+        print(f"[model] no baseline at {baseline_path}; recording this run "
+              "as the first baseline (no gate on a first run)")
+        baseline_path.write_text(json.dumps(summary, indent=1))
+        return
+    try:
+        base = json.loads(baseline_path.read_text())
+    except Exception as e:  # pragma: no cover - unreadable baseline
+        print(f"[model] unreadable baseline ({e}); skipping regression gate")
+        return
+    if base.get("smoke") != summary["smoke"] or base.get("shape") != summary["shape"]:
+        print("[model] baseline matrix differs (smoke/shape); skipping gate")
+        return
+    failures, new_keys = [], []
+    for key, new_v in summary["evals_per_s"].items():
+        old_v = base.get("evals_per_s", {}).get(key)
+        if old_v is None:
+            new_keys.append(key)
+        elif old_v and new_v < old_v * margin:
+            failures.append(
+                f"  {key}: {new_v:,.0f} evals/s < {margin:.0%} of committed "
+                f"{old_v:,.0f} (floor {old_v * margin:,.0f})")
+    if failures:
+        raise SystemExit(
+            "[model] evals/s REGRESSION vs committed BENCH_model.json "
+            f"(margin {margin:.0%}):\n" + "\n".join(failures))
+    print(f"[model] regression gate OK (margin {margin:.0%} vs {baseline_path})")
+    for key in summary.get("edp", {}):
+        if key not in base.get("edp", {}) and key not in new_keys:
+            new_keys.append(key)
+    if new_keys:
+        print(f"[model] WARNING: no committed baseline row for {new_keys} "
+              "(first run of this model/backend); recording these rows")
+        record_baseline_rows(summary, base, new_keys, baseline_path)
+
+
+def run(smoke: bool = False, models=None, shape_name: str | None = None,
+        backend: str = "numpy", store_dir: str | None = None,
+        regress_check: bool = True, regress_margin: float = 0.5,
+        update_baseline: bool = False, sweep_kw: dict | None = None,
+        art_dir: str = "experiments/dryrun") -> dict:
+    models = list(models or MODELS)
+    if smoke and shape_name is None:
+        shape = SMOKE_SHAPE
+    else:
+        shape = SHAPES[shape_name or "decode_32k"]
+    arch = cloud_accelerator()
+    names = [m + "_smoke" if smoke else m for m in models]
+
+    streams, recon_rows = [], {}
+    for name in names:
+        cfg = get_config(name)
+        s = build_opstream(cfg, shape)
+        r = reconcile_model_flops(s, cfg)
+        lo, hi = RECONCILE_BAND
+        ok = lo <= r["ratio"] <= hi
+        if not ok:
+            print(f"[model] WARNING: {name} stream/MODEL_FLOPS ratio "
+                  f"{r['ratio']:.3f} outside [{lo}, {hi}]")
+        recon_rows[cfg.name] = {"ratio": r["ratio"], "in_band": ok}
+        streams.append(s)
+
+    tasks, index = stream_sweep_tasks(streams, arch)
+    store = ResultStore(store_dir) if store_dir else None
+    t0 = time.time()
+    res = union_opt_sweep(
+        tasks, engine_backend=backend, engine_workers=0,
+        result_store=store, **(sweep_kw or {}),
+    )
+    sweep_s = time.time() - t0
+    stats = res.stats
+
+    # measured collective term per model, when a dryrun artifact exists
+    coll_s, art_recon = {}, {}
+    for s in streams:
+        base_model = s.model[:-len("_smoke")] if s.model.endswith("_smoke") else s.model
+        p = artifact_path(base_model, s.shape, art_dir=art_dir)
+        if not p.exists():
+            continue
+        art = json.loads(p.read_text())
+        coll_s[s.model] = measured_collective_s(art)
+        art_recon[s.model] = reconcile_with_artifact(s, art)
+    if not coll_s:
+        print(f"[model] no dryrun artifacts under {art_dir} for shape "
+              f"{shape.name}; collective term = 0 (modeled compute only)")
+
+    costs = aggregate_stream_costs(streams, index, res.solutions, arch,
+                                   collective_s=coll_s)
+    rows = []
+    for s, c in zip(streams, costs):
+        row = c.row()
+        row.update({
+            "kind": s.kind,
+            "tokens_per_step": s.meta["tokens_per_step"],
+            "n_ops_pre_dedup": s.meta["n_ops_pre_dedup"],
+            "stream_flops": s.total_flops(),
+            "reconcile": recon_rows[s.model],
+        })
+        if s.model in art_recon:
+            row["artifact_reconcile"] = art_recon[s.model]
+        rows.append(row)
+        print(f"[model] {s.model:28s} {shape.name:14s} "
+              f"ops {row['n_ops_pre_dedup']:4.0f} -> {row['n_unique_ops']:3d} uniq | "
+              f"lat {c.latency_s:.3e}s en {c.energy_j:.3e}J "
+              f"edp {c.edp:.3e} | flops-ratio {recon_rows[s.model]['ratio']:.3f}")
+    print(f"[model] ONE sweep: {len(tasks)} tasks -> {stats['engines']} engine "
+          f"groups, cache_hits {stats.get('cache_hits', 0)}, "
+          f"store_hits {stats.get('store_hits', 0)}, "
+          f"{stats.get('evals_per_s', 0):,.0f} evals/s ({sweep_s:.1f}s)")
+
+    result = {
+        "figure": "model",
+        "smoke": smoke,
+        "shape": shape.name,
+        "backend": backend,
+        "models": [s.model for s in streams],
+        "rows": rows,
+        "sweep_stats": {k: v for k, v in stats.items() if k != "group_wall"},
+        "sweep_seconds": round(sweep_s, 3),
+    }
+    if store is not None:
+        store.flush()
+        if not deterministic_stats():
+            result["result_store"] = store.stats_dict()
+            print(f"[model] result store: {result['result_store']}")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "model.json").write_text(json.dumps(result, indent=1))
+
+    summary = {
+        "smoke": smoke,
+        "shape": shape.name,
+        "evals_per_s": {backend: round(stats.get("evals_per_s", 0.0))},
+        "edp": {f"{backend}/{r['model']}": r["edp"] for r in rows},
+        "store_hits": {backend: stats.get("store_hits", 0)},
+    }
+    use_executor = bool((sweep_kw or {}).get("group_timeout_s")
+                        or (sweep_kw or {}).get("journal"))
+    if use_executor:
+        print("[model] regression gate skipped: executor rows are not "
+              "comparable to the direct-call baseline")
+    elif smoke and regress_check and store is None and not update_baseline:
+        check_regression(summary, ROOT_BENCH, regress_margin)
+    elif smoke and store is not None:
+        print("[model] regression gate skipped: warm-store rows are not "
+              "comparable to the cold baseline")
+    if update_baseline and store is None and not use_executor:
+        ROOT_BENCH.write_text(json.dumps(summary, indent=1))
+        print(f"[model] baseline rewritten at {ROOT_BENCH}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced (_smoke) configs on a small shape")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma list of model config names")
+    ap.add_argument("--shape", default=None,
+                    help="shape cell name (default: smoke shape / decode_32k)")
+    ap.add_argument("--backend", default="numpy",
+                    help="evaluation-engine miss-batch backend")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persistent cross-run ResultStore directory")
+    ap.add_argument("--art-dir", default="experiments/dryrun",
+                    help="dryrun artifact directory for the measured "
+                         "collective term")
+    ap.add_argument("--no-regress-check", action="store_true",
+                    help="skip the smoke-mode evals/s gate vs BENCH_model.json")
+    ap.add_argument("--regress-margin", type=float, default=0.5,
+                    help="fail when evals/s drops below this fraction of "
+                         "the committed baseline (smoke mode only)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite BENCH_model.json from this run")
+    add_sweep_args(ap)
+    args = ap.parse_args()
+    run(smoke=args.smoke,
+        models=[m.strip() for m in args.models.split(",") if m.strip()],
+        shape_name=args.shape, backend=args.backend,
+        store_dir=args.store, regress_check=not args.no_regress_check,
+        regress_margin=args.regress_margin,
+        update_baseline=args.update_baseline,
+        sweep_kw=sweep_kwargs(args), art_dir=args.art_dir)

@@ -85,6 +85,23 @@ def _search_rows(figure: str, payload: dict) -> List[dict]:
                 {"figure": "mappers", "point": point}
                 | {k: r.get(k) for k in keys}
             )
+    elif figure == "model":
+        # whole-model streams: ONE shared sweep, so throughput/store
+        # counters live in the sweep_stats block, per-model EDP in rows
+        sweep = payload.get("sweep_stats", {})
+        for r in payload.get("rows", []):
+            rows.append({
+                "figure": "model",
+                "point": f"{r['model']}/{r.get('shape', '?')}",
+                "edp": r.get("edp"),
+                "latency_s": r.get("latency_s"),
+                "energy_j": r.get("energy_j"),
+                "roles": r.get("roles"),
+                "n_unique_ops": r.get("n_unique_ops"),
+                "evals_per_s": sweep.get("evals_per_s"),
+                "store_hits": sweep.get("store_hits"),
+                "cache_hits": sweep.get("cache_hits"),
+            })
     return rows
 
 
@@ -121,7 +138,7 @@ def _robustness(figure: str, sweep: Optional[dict]) -> Optional[dict]:
 def collect(bench_dir: Path):
     out: Dict[str, List[dict]] = {}
     robustness: List[dict] = []
-    for figure in ("fig3", "fig8", "fig10", "fig11", "mappers"):
+    for figure in ("fig3", "fig8", "fig10", "fig11", "mappers", "model"):
         f = bench_dir / f"{figure}.json"
         if not f.exists():
             print(f"[plots] {f} missing -- run its benchmark first; skipped")
@@ -134,7 +151,7 @@ def collect(bench_dir: Path):
         rows = _search_rows(figure, payload)
         if rows:
             out[figure] = rows
-        rob = _robustness(figure, payload.get("sweep"))
+        rob = _robustness(figure, payload.get("sweep") or payload.get("sweep_stats"))
         if rob:
             robustness.append(rob)
     # the concurrent-sweep bench reports its ledger at the top level
@@ -262,6 +279,35 @@ def _plot(rows_by_fig: Dict[str, List[dict]], out_dir: Path) -> List[str]:
     fig.savefig(p, dpi=120)
     plt.close(fig)
     written.append(str(p))
+
+    # ---- whole-model stacked EDP by role --------------------------- #
+    mrows = [r for r in rows_by_fig.get("model", []) if r.get("roles")]
+    if mrows:
+        roles = sorted({role for r in mrows for role in r["roles"]})
+        fig, ax = plt.subplots(figsize=(9, 4.5))
+        xs = range(len(mrows))
+        bottom = [0.0] * len(mrows)
+        for role in roles:
+            # role's share of end-to-end EDP: its energy x total latency,
+            # so the stack sums exactly to EDP = E_total x L_total
+            vals = [
+                r["roles"].get(role, {}).get("energy_j", 0.0)
+                * (r.get("latency_s") or 0.0)
+                for r in mrows
+            ]
+            ax.bar(xs, vals, bottom=bottom, label=role)
+            bottom = [b + v for b, v in zip(bottom, vals)]
+        ax.set_xticks(list(xs), [r["point"] for r in mrows],
+                      rotation=20, ha="right")
+        ax.set_ylabel("EDP (J*s)")
+        ax.set_title("whole-model end-to-end EDP by role (one-sweep streams)")
+        ax.legend(fontsize=8, ncol=2)
+        ax.grid(axis="y", alpha=0.3)
+        fig.tight_layout()
+        p = out_dir / "model_edp_roles.png"
+        fig.savefig(p, dpi=120)
+        plt.close(fig)
+        written.append(str(p))
     return written
 
 

@@ -3,12 +3,25 @@
 Table III: TCCG tensor contractions with the reference TDS sizes.
 Table IV:  DNN layers from MLPerf models (ResNet50 CONV / DLRM & BERT GEMM).
 The paper costs everything with uint8 MACs (word_bytes=1).
+
+All problems are constructed through the shared IR-routed builders in
+``repro.core.opstream`` -- the same LayerOp -> generic -> affine -> Problem
+path the whole-model streams use -- and are bit-identical to the historical
+``Problem.gemm``/``Problem.conv2d``/``Problem.tc_*`` constructors
+(asserted in tests/test_opstream.py).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+from repro.core.opstream import (
+    build_conv2d,
+    build_gemm,
+    build_tc_ccsd7,
+    build_tc_ccsd_t4,
+    build_tc_intensli2,
+)
 from repro.core.problem import Problem
 
 WORD = 1  # uint8 (paper Sec. V)
@@ -18,10 +31,10 @@ def dnn_layers() -> Dict[str, Problem]:
     """Paper Table IV."""
     out: Dict[str, Problem] = {}
     # CONV layers: paper table gives activation sizes; same-padding => X,Y
-    # are also the output sizes Problem.conv2d expects.
-    out["ResNet50-1"] = Problem.conv2d(32, 64, 64, 56, 56, 1, 1, name="ResNet50-1", word_bytes=WORD)
-    out["ResNet50-2"] = Problem.conv2d(32, 64, 64, 56, 56, 3, 3, name="ResNet50-2", word_bytes=WORD)
-    out["ResNet50-3"] = Problem.conv2d(32, 512, 1024, 14, 14, 1, 1, name="ResNet50-3", word_bytes=WORD)
+    # are also the output sizes the conv2d builder expects.
+    out["ResNet50-1"] = build_conv2d(32, 64, 64, 56, 56, 1, 1, name="ResNet50-1", word_bytes=WORD)
+    out["ResNet50-2"] = build_conv2d(32, 64, 64, 56, 56, 3, 3, name="ResNet50-2", word_bytes=WORD)
+    out["ResNet50-3"] = build_conv2d(32, 512, 1024, 14, 14, 1, 1, name="ResNet50-3", word_bytes=WORD)
     for name, (n, nin, non) in {
         "DLRM-1": (512, 1024, 1024),
         "DLRM-2": (512, 1024, 64),
@@ -30,7 +43,7 @@ def dnn_layers() -> Dict[str, Problem]:
         "BERT-2": (256, 3072, 768),
         "BERT-3": (256, 768, 3072),
     }.items():
-        out[name] = Problem.gemm(n, non, nin, name=name, word_bytes=WORD)
+        out[name] = build_gemm(n, non, nin, name=name, word_bytes=WORD)
     return out
 
 
@@ -38,10 +51,10 @@ def tc_problems() -> List[Tuple[str, int, Problem]]:
     """Paper Table III / Fig. 8: (name, TDS, problem)."""
     probs = []
     for tds in (16, 64):
-        probs.append(("intensli2", tds, Problem.tc_intensli2(tds, word_bytes=WORD)))
-        probs.append(("ccsd7", tds, Problem.tc_ccsd7(tds, word_bytes=WORD)))
+        probs.append(("intensli2", tds, build_tc_intensli2(tds, word_bytes=WORD)))
+        probs.append(("ccsd7", tds, build_tc_ccsd7(tds, word_bytes=WORD)))
     for tds in (16, 32):
-        probs.append(("ccsd-t4", tds, Problem.tc_ccsd_t4(tds, word_bytes=WORD)))
+        probs.append(("ccsd-t4", tds, build_tc_ccsd_t4(tds, word_bytes=WORD)))
     return probs
 
 

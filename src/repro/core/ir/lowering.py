@@ -52,6 +52,7 @@ def layer_to_generic(op: LayerOp) -> EinsumGeneric:
         return g
     if k == "conv2d":
         p = op.params
+        wb = p.get("word_bytes") or 2
         g = EinsumGeneric(
             op.name,
             {"n": p["N"], "k": p["K"], "x": p["X"], "y": p["Y"], "c": p["C"],
@@ -61,16 +62,16 @@ def layer_to_generic(op: LayerOp) -> EinsumGeneric:
                     AffineExpr.of("n"), AffineExpr.of("c"),
                     AffineExpr.of((p.get("stride", 1), "x"), (1, "r")),
                     AffineExpr.of((p.get("stride", 1), "y"), (1, "s")),
-                ), 2),
+                ), wb),
                 ("Weights", (
                     AffineExpr.of("k"), AffineExpr.of("c"),
                     AffineExpr.of("r"), AffineExpr.of("s"),
-                ), 2),
+                ), wb),
             ],
             ("Outputs", (
                 AffineExpr.of("n"), AffineExpr.of("k"),
                 AffineExpr.of("x"), AffineExpr.of("y"),
-            ), 2),
+            ), wb),
             "CONV2D",
             attrs={"stride": p.get("stride", 1)},
         )
@@ -104,7 +105,14 @@ def layer_to_generic(op: LayerOp) -> EinsumGeneric:
             "SSD",
         )
     if k == "tc":
-        return _einsum_generic(op.name, op.params["einsum"], op.params["sizes"], "TC")
+        # generic einsum contraction; `operation`/`word_bytes` overrides let
+        # shared builders (core.opstream) emit GEMM/SSD/... problems
+        # bit-identical to the historical Problem.* constructors
+        return _einsum_generic(
+            op.name, op.params["einsum"], op.params["sizes"],
+            op.params.get("operation") or "TC",
+            op.params.get("word_bytes") or 2,
+        )
     raise NotImplementedError(f"no lowering for LayerOp kind {k!r}")
 
 

@@ -33,13 +33,19 @@ from pathlib import Path
 import jax
 
 from repro.configs.base import SHAPES, get_config, runnable_cells
+from repro.core.architecture import TPU_V5E
+from repro.core.opstream import formula_model_flops
 from repro.models import model as model_mod
 from repro.launch.hloparse import parse_collectives
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 from repro.sharding.specs import ShardingRules
 
-HBM_PER_CHIP = 16 * (1 << 30)
+# Per-chip HBM capacity from the modeled hardware description
+# (repro.core.architecture.TPU_V5E, the attrs of tpu_chip()) so the
+# fits-in-HBM proofs track the arch instead of a magic number. Override
+# per call via the hbm_bytes= parameters or the --hbm-gib CLI flag.
+HBM_PER_CHIP = int(TPU_V5E["hbm_bytes"])
 
 
 def _sharded_nbytes(struct_tree, sharding_tree, sizes) -> int:
@@ -64,7 +70,8 @@ def _sharded_nbytes(struct_tree, sharding_tree, sizes) -> int:
 
 
 def analytic_memory(arch: str, shape_name: str, mesh, args, in_sh,
-                    microbatches: int = 1, rules=None) -> dict:
+                    microbatches: int = 1, rules=None,
+                    hbm_bytes: int = 0) -> dict:
     """TPU-dtype-correct per-chip memory estimate. The CPU backend's
     float-normalization pass widens bf16 while-loop buffers to f32, so
     memory_analysis() OVERSTATES TPU residency; this estimate keeps bf16
@@ -108,23 +115,21 @@ def analytic_memory(arch: str, shape_name: str, mesh, args, in_sh,
     else:  # decode
         act += 4 * (B // min(B, dp)) * max(1, V // tp) * 4
     total = args_bytes + act
+    hbm = int(hbm_bytes) or HBM_PER_CHIP
     return {
         "args_bytes": int(args_bytes),
         "activation_bytes": int(act),
         "total_bytes": int(total),
-        "fits_hbm": bool(total <= HBM_PER_CHIP),
+        "hbm_per_chip": hbm,
+        "fits_hbm": bool(total <= hbm),
     }
 
 
 def model_flops(arch: str, shape_name: str) -> float:
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    n_active = cfg.active_params()
-    if shape.kind == "train":
-        return 6.0 * n_active * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n_active * shape.global_batch * shape.seq_len
-    return 2.0 * n_active * shape.global_batch  # decode: one token / sequence
+    """MODEL_FLOPS convention (6/2/2 x active params x tokens). One
+    definition, shared with the whole-model op streams -- see
+    ``repro.core.opstream.formula_model_flops``."""
+    return formula_model_flops(get_config(arch), SHAPES[shape_name])
 
 
 def corrected_costs(arch: str, shape_name: str, mesh, rules, remat: bool) -> dict:
@@ -191,8 +196,9 @@ def corrected_costs(arch: str, shape_name: str, mesh, rules, remat: bool) -> dic
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
              out_dir: Path = Path("experiments/dryrun"), remat: bool = True,
-             tag: str = "") -> dict:
+             tag: str = "", hbm_bytes: int = 0) -> dict:
     rules = rules or ShardingRules()
+    hbm = int(hbm_bytes) or HBM_PER_CHIP
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
@@ -206,7 +212,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
             arch, shape_name, mesh, rules, remat=remat, microbatches=microbatches
         )
         if analytic_memory(arch, shape_name, mesh, args, in_sh,
-                           microbatches, rules)["fits_hbm"]:
+                           microbatches, rules, hbm_bytes=hbm)["fits_hbm"]:
             break
         microbatches *= 2
     fn, args, in_sh, out_sh = build_cell(
@@ -256,10 +262,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules=None,
             "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
             "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
             "peak_per_device": per_dev_bytes,
-            "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+            "hbm_per_chip": hbm,
+            "fits_hbm": bool(per_dev_bytes <= hbm),
         },
         "memory_tpu_analytic": analytic_memory(
-            arch, shape_name, mesh, args, in_sh, microbatches, rules
+            arch, shape_name, mesh, args, in_sh, microbatches, rules,
+            hbm_bytes=hbm,
         ),
         "microbatches": microbatches,
         "model_flops": model_flops(arch, shape_name),
@@ -283,6 +291,9 @@ def main() -> None:
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--hbm-gib", type=float, default=0.0,
+                    help="per-chip HBM override in GiB (default: the modeled "
+                    "arch's hbm_bytes, repro.core.architecture.TPU_V5E)")
     ap.add_argument("--rules", default="", help="comma list of ShardingRules "
                     "overrides, e.g. 'fsdp_only=true,dp_over_pod=false'")
     args = ap.parse_args()
@@ -316,7 +327,8 @@ def main() -> None:
             try:
                 t0 = time.time()
                 art = run_cell(arch, shape, mp, rules=rules, out_dir=out_dir,
-                               remat=not args.no_remat, tag=args.tag)
+                               remat=not args.no_remat, tag=args.tag,
+                               hbm_bytes=int(args.hbm_gib * (1 << 30)))
                 n_ok += 1
                 print(
                     f"OK   {cell}: flops/dev={art['flops_per_device']:.3e} "

@@ -15,6 +15,7 @@ standard ring-algorithm byte conventions per collective type:
 from __future__ import annotations
 
 import re
+import warnings
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -40,30 +41,48 @@ class CollectiveStats:
     counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     raw_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     link_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    # dtype -> element count for arrays whose HLO dtype is not in
+    # _DTYPE_BYTES; those elements are EXCLUDED from the byte sums above
+    unknown_dtypes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
 
     @property
     def total_link_bytes(self) -> float:
         return sum(self.link_bytes.values())
+
+    @property
+    def skipped_bytes(self) -> float:
+        """Lower-bound estimate (1 byte/element) of bytes excluded from the
+        sums because the dtype was unknown."""
+        return float(sum(self.unknown_dtypes.values()))
 
     def row(self) -> Dict[str, float]:
         out = {"collective_bytes": self.total_link_bytes}
         for k in _COLLECTIVES:
             out[f"{k}_count"] = self.counts.get(k, 0)
             out[f"{k}_bytes"] = self.link_bytes.get(k, 0.0)
+        out["unknown_dtype_count"] = len(self.unknown_dtypes)
+        out["skipped_bytes"] = self.skipped_bytes
         return out
 
 
-def _shape_bytes(type_str: str) -> float:
-    """Sum byte sizes of all arrays in an HLO result type string."""
+def _shape_bytes(type_str: str, unknown: Optional[Dict[str, int]] = None) -> float:
+    """Sum byte sizes of all arrays in an HLO result type string.
+
+    Arrays with a dtype missing from ``_DTYPE_BYTES`` are excluded from
+    the sum; their element counts accumulate into ``unknown`` (dtype ->
+    elements) so callers can warn and report the skipped tally instead of
+    silently undercounting."""
     total = 0.0
     for dt, dims in _ARRAY_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
         n = 1
         if dims:
             for d in dims.split(","):
                 if d:
                     n *= int(d)
+        if dt not in _DTYPE_BYTES:
+            if unknown is not None:
+                unknown[dt] = unknown.get(dt, 0) + n
+            continue
         total += n * _DTYPE_BYTES[dt]
     return total
 
@@ -97,10 +116,21 @@ def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
             continue
         if opname.endswith("-done"):
             continue  # the -start op carries the shape
-        bytes_out = _shape_bytes(result_type)
+        unknown: Dict[str, int] = {}
+        bytes_out = _shape_bytes(result_type, unknown)
         if bytes_out <= 0:
             # fallback: scan full line's result section
-            bytes_out = _shape_bytes(ls.split("=", 1)[1].split("(", 1)[0])
+            unknown = {}
+            bytes_out = _shape_bytes(ls.split("=", 1)[1].split("(", 1)[0], unknown)
+        for dt, n in unknown.items():
+            if dt not in stats.unknown_dtypes:
+                warnings.warn(
+                    f"hloparse: unknown HLO dtype {dt!r} in {base} result; "
+                    f"excluding its elements from collective byte sums "
+                    f"(tallied in CollectiveStats.row()['skipped_bytes'])",
+                    stacklevel=2,
+                )
+            stats.unknown_dtypes[dt] += n
         n = _group_size(ls, default_group)
         if base == "all-gather":
             link = bytes_out * (n - 1) / max(1, n)

@@ -1,0 +1,111 @@
+"""Unit coverage for ``launch.hloparse.parse_collectives`` -- previously
+only exercised indirectly through dryrun artifacts.
+
+Covers both replica-group syntaxes (brace ``{{...}}`` lists and iota
+``[n,m]<=[k]``), tuple results with mixed dtypes, the per-collective
+ring-convention byte math, async ``-start`` forms, and the
+unknown-dtype count-and-warn path with its skipped-bytes tally."""
+
+import warnings
+
+import pytest
+
+from repro.launch.hloparse import CollectiveStats, parse_collectives
+
+
+def test_all_gather_brace_groups():
+    hlo = ("%ag = bf16[4,256]{1,0} all-gather(bf16[1,256] %x), "
+           "replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}")
+    st = parse_collectives(hlo)
+    assert st.counts["all-gather"] == 1
+    out_bytes = 4 * 256 * 2
+    assert st.raw_bytes["all-gather"] == out_bytes
+    # ring all-gather: (n-1)/n of the gathered bytes cross the link
+    assert st.link_bytes["all-gather"] == pytest.approx(out_bytes * 3 / 4)
+
+
+def test_all_reduce_iota_groups():
+    hlo = ("%ar = f32[128]{0} all-reduce(f32[128] %y), "
+           "replica_groups=[8,4]<=[32], to_apply=%add")
+    st = parse_collectives(hlo)
+    assert st.counts["all-reduce"] == 1
+    # iota [ngroups, gsize] <= [total]: group size is the SECOND field
+    assert st.link_bytes["all-reduce"] == pytest.approx(128 * 4 * 2 * 3 / 4)
+
+
+def test_reduce_scatter_and_all_to_all_and_permute():
+    hlo = "\n".join([
+        "%rs = f32[64]{0} reduce-scatter(f32[256] %z), replica_groups={{0,1,2,3}}, dimensions={0}",
+        "%aa = bf16[512]{0} all-to-all(bf16[512] %w), replica_groups={{0,1}}",
+        "%cp = u8[100]{0} collective-permute(u8[100] %v), source_target_pairs={{0,1}}",
+    ])
+    st = parse_collectives(hlo)
+    # reduce-scatter: bytes_out x (n-1); all-to-all: (n-1)/n; permute: 1 hop
+    assert st.link_bytes["reduce-scatter"] == pytest.approx(64 * 4 * 3)
+    assert st.link_bytes["all-to-all"] == pytest.approx(512 * 2 * 1 / 2)
+    assert st.link_bytes["collective-permute"] == pytest.approx(100)
+    assert st.total_link_bytes == pytest.approx(64 * 4 * 3 + 512 + 100)
+
+
+def test_async_start_tuple_mixed_dtypes():
+    """-start forms carry tuple results mixing payload and control dtypes;
+    every known-dtype member counts, at the op's ring convention."""
+    hlo = ("%ags = (bf16[128]{0}, bf16[512]{0}, u32[], u32[]) "
+           "all-gather-start(bf16[128] %q), replica_groups={{0,1,2,3}}")
+    st = parse_collectives(hlo)
+    assert st.counts["all-gather"] == 1
+    tup = 128 * 2 + 512 * 2 + 4 + 4
+    assert st.link_bytes["all-gather"] == pytest.approx(tup * 3 / 4)
+
+
+def test_default_group_size_when_unannotated():
+    st = parse_collectives("%ar = f32[16]{0} all-reduce(f32[16] %y)",
+                           default_group=8)
+    assert st.link_bytes["all-reduce"] == pytest.approx(16 * 4 * 2 * 7 / 8)
+
+
+def test_non_collective_lines_ignored():
+    hlo = "\n".join([
+        "%p = f32[64]{0} parameter(0)",
+        "%d = f32[64]{0} dot(f32[64] %p, f32[64] %p)",
+        "ENTRY %main (p: f32[64]) -> f32[64] {",
+    ])
+    st = parse_collectives(hlo)
+    assert st.total_link_bytes == 0
+    assert not st.counts
+
+
+def test_unknown_dtype_warns_and_tallies():
+    """Unknown dtypes are counted and warned about, never silently
+    dropped; row() reports the 1-byte/element lower-bound tally."""
+    hlo = ("%ag = (bf16[64]{0}, f4e2m1fn[2048]{0}) "
+           "all-gather-start(bf16[64] %x), replica_groups={{0,1}}")
+    with pytest.warns(UserWarning, match="unknown HLO dtype 'f4e2m1fn'"):
+        st = parse_collectives(hlo)
+    # known members still count at their ring share
+    assert st.link_bytes["all-gather"] == pytest.approx(64 * 2 * 1 / 2)
+    assert st.unknown_dtypes == {"f4e2m1fn": 2048}
+    assert st.skipped_bytes == 2048
+    row = st.row()
+    assert row["unknown_dtype_count"] == 1
+    assert row["skipped_bytes"] == 2048
+
+
+def test_known_dtypes_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        st = parse_collectives(
+            "%ar = bf16[32]{0} all-reduce(bf16[32] %x), replica_groups={{0,1}}")
+    assert st.skipped_bytes == 0
+    assert st.row()["unknown_dtype_count"] == 0
+
+
+def test_row_schema_is_numeric():
+    """Every row() value must be numeric: dryrun's corrected_costs
+    linearly extrapolates over ALL row keys."""
+    st = parse_collectives(
+        "%ag = (q8[16]{0}) all-gather-start(q8[16] %x), replica_groups={{0,1}}")
+    for k, v in CollectiveStats().row().items():
+        assert isinstance(v, (int, float)), k
+    for k, v in st.row().items():
+        assert isinstance(v, (int, float)), k

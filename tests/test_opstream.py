@@ -1,0 +1,317 @@
+"""Whole-model operator streams: shared builders, dedup/multiplicity
+semantics, MODEL_FLOPS reconciliation, and the one-sweep end-to-end path.
+
+Covers the OpStream contract (docs/whole_model.md): every contraction
+routes through the IR lowering and is bit-identical to the historical
+ad-hoc ``Problem.*`` constructors; (ModelConfig, ShapeConfig) cells lower
+to deduplicated ``(Problem, multiplicity, role)`` streams whose
+parameter-role FLOPs reconcile with the MODEL_FLOPS convention; and
+several models sweep through ONE ``union_opt_sweep`` with cross-op
+engine/memo sharing and aggregate to end-to-end latency/energy/EDP.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.workloads import dnn_layers, tc_problems  # noqa: E402
+from repro.configs.base import SHAPES, ShapeConfig, get_config, list_configs
+from repro.core.architecture import cloud_accelerator
+from repro.core.opstream import (
+    PARAM_ROLES,
+    RECONCILE_BAND,
+    aggregate_stream_costs,
+    build_conv2d,
+    build_einsum,
+    build_gemm,
+    build_opstream,
+    build_tc_ccsd7,
+    build_tc_ccsd_t4,
+    build_tc_intensli2,
+    formula_model_flops,
+    moe_expert_capacity,
+    reconcile_model_flops,
+    reconcile_with_artifact,
+    stream_sweep_tasks,
+)
+from repro.core.optimizer import union_opt_sweep
+from repro.core.problem import Problem
+
+ART_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+SMALL = ShapeConfig("t_prefill", 128, 2, "prefill")
+SMALL_DECODE = ShapeConfig("t_decode", 256, 64, "decode")
+SMALL_TRAIN = ShapeConfig("t_train", 128, 4, "train")
+
+TARGETS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "zamba2-2.7b"]
+
+
+# --------------------------------------------------------------------- #
+# shared builders: bit-identical to the ad-hoc constructors
+# --------------------------------------------------------------------- #
+def test_builders_bit_identical_to_adhoc_constructors():
+    """The IR-routed builders must produce EXACTLY the Problems the
+    historical constructors did -- every field, including name, dim
+    insertion order, data-space names/projections and attrs."""
+    pairs = [
+        (build_gemm(512, 1024, 64, name="g", word_bytes=1),
+         Problem.gemm(512, 1024, 64, name="g", word_bytes=1)),
+        (build_conv2d(32, 64, 64, 56, 56, 3, 3, name="c", word_bytes=1),
+         Problem.conv2d(32, 64, 64, 56, 56, 3, 3, name="c", word_bytes=1)),
+        (build_conv2d(1, 8, 4, 16, 16, 3, 3, stride=2, name="s"),
+         Problem.conv2d(1, 8, 4, 16, 16, 3, 3, stride=2, name="s")),
+        (build_tc_intensli2(16, word_bytes=1), Problem.tc_intensli2(16, word_bytes=1)),
+        (build_tc_ccsd7(64, word_bytes=1), Problem.tc_ccsd7(64, word_bytes=1)),
+        (build_tc_ccsd_t4(32, word_bytes=1), Problem.tc_ccsd_t4(32, word_bytes=1)),
+        (build_einsum("e", "ij,jk->ik", {"i": 4, "j": 8, "k": 2}, "GEMM", 2),
+         Problem.from_einsum("e", "ij,jk->ik", {"i": 4, "j": 8, "k": 2},
+                             operation="GEMM", word_bytes=2)),
+    ]
+    for built, adhoc in pairs:
+        assert built == adhoc, f"{built.name}: builder != ad-hoc constructor"
+        assert built.attrs == adhoc.attrs
+
+
+def test_workloads_tables_rebuilt_bit_identically():
+    """A/B: benchmarks/workloads.py on the shared builders must emit the
+    same Problems the Problem.* constructors produced (figure tables
+    fig3/fig8/fig10/fig11 all source from these two functions)."""
+    layers = dnn_layers()
+    expect = {
+        "ResNet50-1": Problem.conv2d(32, 64, 64, 56, 56, 1, 1, name="ResNet50-1", word_bytes=1),
+        "ResNet50-2": Problem.conv2d(32, 64, 64, 56, 56, 3, 3, name="ResNet50-2", word_bytes=1),
+        "ResNet50-3": Problem.conv2d(32, 512, 1024, 14, 14, 1, 1, name="ResNet50-3", word_bytes=1),
+        "DLRM-1": Problem.gemm(512, 1024, 1024, name="DLRM-1", word_bytes=1),
+        "DLRM-2": Problem.gemm(512, 64, 1024, name="DLRM-2", word_bytes=1),
+        "DLRM-3": Problem.gemm(512, 2048, 2048, name="DLRM-3", word_bytes=1),
+        "BERT-1": Problem.gemm(256, 768, 768, name="BERT-1", word_bytes=1),
+        "BERT-2": Problem.gemm(256, 768, 3072, name="BERT-2", word_bytes=1),
+        "BERT-3": Problem.gemm(256, 3072, 768, name="BERT-3", word_bytes=1),
+    }
+    assert set(layers) == set(expect)
+    for name, p in expect.items():
+        assert layers[name] == p, f"{name} drifted off the ad-hoc constructor"
+    tc_expect = {
+        ("intensli2", 16): Problem.tc_intensli2(16, word_bytes=1),
+        ("ccsd7", 16): Problem.tc_ccsd7(16, word_bytes=1),
+        ("intensli2", 64): Problem.tc_intensli2(64, word_bytes=1),
+        ("ccsd7", 64): Problem.tc_ccsd7(64, word_bytes=1),
+        ("ccsd-t4", 16): Problem.tc_ccsd_t4(16, word_bytes=1),
+        ("ccsd-t4", 32): Problem.tc_ccsd_t4(32, word_bytes=1),
+    }
+    got = {(n, tds): p for n, tds, p in tc_problems()}
+    assert got == tc_expect
+
+
+# --------------------------------------------------------------------- #
+# stream lowering: every config, dedup/multiplicity, roles
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", list_configs())
+def test_every_config_lowers_and_reconciles(name):
+    cfg = get_config(name)
+    stream = build_opstream(cfg, SMALL)
+    assert len(stream) > 0
+    # dedup invariant: multiplicities sum back to the pre-dedup op count
+    assert sum(e.multiplicity for e in stream.entries) == stream.meta["n_ops_pre_dedup"]
+    assert len(stream) < stream.meta["n_ops_pre_dedup"], "dedup found nothing"
+    # parameter-role FLOPs reconcile with the MODEL_FLOPS convention
+    r = reconcile_model_flops(stream, cfg)
+    lo, hi = RECONCILE_BAND
+    assert lo <= r["ratio"] <= hi, f"{name}: ratio {r['ratio']:.3f} off band"
+    # every entry's problem lowered through the IR with a role attached
+    for e in stream.entries:
+        assert e.role in PARAM_ROLES + ("attention_score", "ssm_scan")
+        assert e.problem.macs > 0
+
+
+def test_family_coverage_roles():
+    """Dense, MoE and hybrid streams expose their family-specific roles."""
+    roles = {m: set(build_opstream(m, SMALL).flops_by_role())
+             for m in TARGETS}
+    assert {"attention", "attention_score", "mlp", "embed", "head"} <= roles["qwen3-0.6b"]
+    assert {"moe", "router"} <= roles["deepseek-v2-lite-16b"]
+    assert {"ssm", "ssm_scan", "attention"} <= roles["zamba2-2.7b"]
+    assert "moe" not in roles["qwen3-0.6b"]
+
+
+def test_gqa_decode_shapes_at_serving_batch():
+    """Decode streams carry Q=1 attention at the serving batch size, with
+    the config's GQA KV sharing in the projection shapes."""
+    cfg = get_config("qwen3-0.6b")
+    stream = build_opstream(cfg, SMALL_DECODE, serving_batch=32)
+    qk = [e for e in stream.entries if e.problem.operation == "ATTN_QK"]
+    assert len(qk) == 1
+    dims = qk[0].problem.dims
+    assert dims["b"] == 32 and dims["q"] == 1 and dims["k"] == SMALL_DECODE.seq_len
+    assert qk[0].multiplicity == cfg.n_layers
+    # GQA: wk/wv project to n_kv_heads*head_dim < n_heads*head_dim, so the
+    # kv projection GEMM is a distinct (deduplicated x2: wk+wv) entry
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    kv = [e for e in stream.entries
+          if e.role == "attention" and e.problem.dims.get("o") == kv_dim]
+    assert kv and kv[0].multiplicity == 2 * cfg.n_layers
+
+
+def test_moe_expert_multiplicity_follows_capacity_rule():
+    """MoE expert GEMMs carry the models/moe.py capacity dispatch: E
+    experts x C = ceil(T*k*cf/e) token slots, gate+up merged at x2."""
+    cfg = get_config("deepseek-v2-lite-16b")
+    stream = build_opstream(cfg, SMALL)
+    T = stream.meta["tokens_per_step"]
+    C = moe_expert_capacity(cfg, T)
+    up = [e for e in stream.entries
+          if e.role == "moe" and e.problem.dims.get("o") == cfg.d_expert
+          and e.problem.dims.get("e") == cfg.n_routed_experts]
+    assert up, "no routed-expert GEMM in the MoE stream"
+    assert up[0].problem.dims["t"] == C
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    assert up[0].multiplicity == 2 * n_moe_layers  # gate+up per MoE layer
+    routers = [e for e in stream.entries if e.role == "router"]
+    assert routers and routers[0].multiplicity == n_moe_layers
+
+
+def test_ssd_scan_ops_present_and_chunked():
+    """Hybrid prefill streams contain the 4 chunked-SSD contractions with
+    the models/ssm.py chunking (C = batch x ceil(S/chunk))."""
+    cfg = get_config("zamba2-2.7b")
+    stream = build_opstream(cfg, SMALL)
+    ssd = [e for e in stream.entries if e.problem.operation == "SSD"]
+    assert len(ssd) == 4
+    chunk = min(256, SMALL.seq_len)
+    nc = SMALL.global_batch * max(1, SMALL.seq_len // chunk)
+    for e in ssd:
+        assert e.problem.dims["c"] == nc
+    # decode swaps the chunked scan for the O(1) recurrent update
+    dstream = build_opstream(cfg, SMALL_DECODE)
+    dssd = [e for e in dstream.entries if e.problem.operation == "SSD"]
+    assert len(dssd) == 2
+    for e in dssd:
+        assert "l" not in e.problem.dims  # no sequence axis in the step
+
+
+def test_embed_entry_unmappable_gather():
+    """The embedding gather lowers to the onehot matmul the conformability
+    pass rejects -- it must be excluded from the sweep and carry the
+    gather attr for the analytic cost path."""
+    stream = build_opstream("qwen3-0.6b", SMALL)
+    emb = [e for e in stream.entries if e.role == "embed"]
+    assert len(emb) == 1
+    assert not emb[0].mappable
+    assert emb[0].problem.attrs.get("gather") is True
+    tasks, _ = stream_sweep_tasks([stream], cloud_accelerator())
+    assert all(t.workload.attrs.get("gather") is not True for t in tasks)
+    assert len(tasks) == len(stream.mappable_entries())
+
+
+def test_encoder_only_has_no_decode_stream():
+    with pytest.raises(ValueError, match="encoder-only"):
+        build_opstream("hubert-xlarge", SMALL_DECODE)
+
+
+def test_train_backward_factor():
+    s_pf = build_opstream("qwen3-0.6b", SMALL)
+    s_tr = build_opstream("qwen3-0.6b", SMALL_TRAIN)
+    # same tokens/step (128*2 == 4*... no -- compare per-token): train
+    # weights every op 3x (fwd + bwd wrt acts + bwd wrt weights)
+    assert s_tr.backward_factor == 3.0 and s_pf.backward_factor == 1.0
+    per_tok_pf = s_pf.param_flops() / s_pf.meta["tokens_per_step"]
+    per_tok_tr = s_tr.param_flops() / s_tr.meta["tokens_per_step"]
+    assert per_tok_tr == pytest.approx(3.0 * per_tok_pf)
+
+
+def test_formula_matches_shapes_convention():
+    """formula_model_flops is the 6/2/2 MODEL_FLOPS rule dryrun embeds in
+    artifacts (dryrun.model_flops now delegates here)."""
+    cfg = get_config("qwen3-0.6b")
+    n = cfg.active_params()
+    sh = SHAPES["train_4k"]
+    assert formula_model_flops(cfg, sh) == 6.0 * n * sh.global_batch * sh.seq_len
+    sh = SHAPES["prefill_32k"]
+    assert formula_model_flops(cfg, sh) == 2.0 * n * sh.global_batch * sh.seq_len
+    sh = SHAPES["decode_32k"]
+    assert formula_model_flops(cfg, sh) == 2.0 * n * sh.global_batch
+
+
+@pytest.mark.parametrize("model", TARGETS)
+@pytest.mark.parametrize("shape", ["prefill_32k", "decode_32k"])
+def test_full_size_cells_reconcile(model, shape):
+    stream = build_opstream(model, shape)
+    r = reconcile_model_flops(stream)
+    lo, hi = RECONCILE_BAND
+    assert lo <= r["ratio"] <= hi, f"{model}/{shape}: {r['ratio']:.3f}"
+
+
+# --------------------------------------------------------------------- #
+# one sweep end-to-end: cross-op sharing + aggregation
+# --------------------------------------------------------------------- #
+def test_one_sweep_three_families_end_to_end():
+    """The acceptance path: dense + MoE + hybrid streams through ONE
+    union_opt_sweep call, with cross-op engine/memo sharing reported,
+    aggregated to per-model end-to-end latency/energy/EDP."""
+    arch = cloud_accelerator()
+    streams = [build_opstream(get_config(m + "_smoke"), SMALL) for m in TARGETS]
+    tasks, index = stream_sweep_tasks(streams, arch)
+    res = union_opt_sweep(tasks)
+    assert len(res) == len(tasks)
+    # cross-op sharing: content-equal ops across models/layers collapse
+    # into shared engine groups, and the shared memo serves repeat
+    # signatures -- both must be visibly nonzero
+    assert res.stats["engines"] < len(tasks)
+    assert res.stats["cache_hits"] > 0
+    costs = aggregate_stream_costs(streams, index, res.solutions, arch)
+    assert [c.model for c in costs] == [s.model for s in streams]
+    for stream, c in zip(streams, costs):
+        assert c.latency_s > 0 and c.energy_j > 0
+        assert c.edp == pytest.approx(c.energy_j * c.latency_s)
+        # role decomposition sums exactly back to the totals
+        assert sum(r["latency_s"] for r in c.roles.values()) == pytest.approx(c.latency_s)
+        assert sum(r["energy_j"] for r in c.roles.values()) == pytest.approx(c.energy_j)
+        # the unmappable embed entry got its analytic bandwidth cost
+        assert c.roles["embed"]["latency_s"] > 0
+    # MoE stream must carry expert cost, hybrid must carry scan cost
+    assert costs[1].roles["moe"]["energy_j"] > 0
+    assert costs[2].roles["ssm_scan"]["energy_j"] > 0
+
+
+def test_collective_term_adds_serial_latency():
+    arch = cloud_accelerator()
+    streams = [build_opstream(get_config("qwen3-0.6b_smoke"), SMALL)]
+    tasks, index = stream_sweep_tasks(streams, arch)
+    res = union_opt_sweep(tasks)
+    base = aggregate_stream_costs(streams, index, res.solutions, arch)[0]
+    coll = aggregate_stream_costs(
+        streams, index, res.solutions, arch,
+        collective_s={streams[0].model: 1e-3})[0]
+    assert coll.collective_s == 1e-3
+    assert coll.edp == pytest.approx(coll.energy_j * (base.latency_s + 1e-3))
+    assert coll.edp > base.edp
+
+
+# --------------------------------------------------------------------- #
+# dryrun artifact cross-check (skips when artifacts are absent)
+# --------------------------------------------------------------------- #
+def _load_artifact(model, shape, mesh="16x16"):
+    p = ART_DIR / f"{model}__{shape}__{mesh}.json"
+    if not p.exists():
+        pytest.skip(f"dry-run artifact missing (run repro.launch.dryrun): {p.name}")
+    return json.loads(p.read_text())
+
+
+@pytest.mark.parametrize("model,shape", [(m, s) for m in TARGETS
+                                         for s in ("prefill_32k", "decode_32k")])
+def test_stream_reconciles_with_dryrun_artifact(model, shape):
+    """Stream FLOPs vs the artifact's structure-corrected HLO totals:
+    the stream is a lower bound on compiled compute (remat/masking/vector
+    work excluded) within dryrun's own useful-FLOPs band (0.05, 1.1]."""
+    art = _load_artifact(model, shape)
+    stream = build_opstream(model, shape)
+    r = reconcile_with_artifact(stream, art)
+    assert 0.05 < r["flops_ratio"] <= 1.1, f"{model}/{shape}: {r['flops_ratio']:.3f}"
+    # the artifact's embedded MODEL_FLOPS is the same formula we reconcile
+    # against (dryrun.model_flops delegates to formula_model_flops)
+    assert r["model_flops_artifact"] == pytest.approx(
+        formula_model_flops(get_config(model), SHAPES[shape]))

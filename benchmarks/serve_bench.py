@@ -1,0 +1,312 @@
+#!/usr/bin/env python
+"""Load generator + CI gate for the mapping-as-a-service daemon.
+
+Drives a REAL daemon subprocess (``python -m repro.serve.mapping_service``)
+through three phases and emits ``BENCH_serve.json`` rows under the same
+warn-and-record bootstrap contract as ``mappers_bench``:
+
+1. **Poisson load** -- deterministic Poisson arrivals (seeded
+   ``random.Random``) over a warm/cold query mix: each distinct shape is
+   cold exactly once, every repeat must be served from the answer journal.
+   Gates: warm-hit accounting is EXACT (``store_hits == requests -
+   distinct shapes``, deterministic with a sequential client); p50/p99
+   latency and warm-path latency are recorded, never gated (wall-clock on
+   shared runners is noise).
+2. **Backpressure burst** -- a concurrent burst of distinct cold queries
+   against a small admission queue; at least one request MUST be shed
+   with HTTP 429 + Retry-After (the bounded-queue contract), and every
+   burst response must be a well-formed envelope or a 429.
+3. **Circuit-breaker drill** (``--breaker-drill``, CI default) -- a
+   second daemon with ``--backend jax`` and injected
+   ``jaxfail:0;jaxfail:1``: the breaker must walk closed -> open ->
+   half-open -> closed within the drill's query stream, asserted from
+   ``/metrics``.
+
+Usage: ``PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import json
+import os
+import random
+import signal
+import statistics
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_PATH = REPO / "BENCH_serve.json"
+
+
+# --------------------------------------------------------------------- #
+# Daemon harness
+# --------------------------------------------------------------------- #
+def _env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO / "src"), str(REPO), env.get("PYTHONPATH", "")]
+    ).rstrip(os.pathsep)
+    return env
+
+
+def start_daemon(state_dir: str, *, backend: str = "numpy",
+                 deadline_s: float = 20.0, queue_cap: int = 8,
+                 workers: int = 2, fault_spec: str | None = None,
+                 timeout_s: float = 60.0):
+    """Spawn the daemon, wait for its ready file, return (proc, port)."""
+    ready = os.path.join(state_dir, "ready.json")
+    cmd = [
+        sys.executable, "-m", "repro.serve.mapping_service",
+        "--state-dir", state_dir, "--ready-file", ready,
+        "--backend", backend, "--deadline-s", str(deadline_s),
+        "--queue-cap", str(queue_cap), "--workers", str(workers),
+    ]
+    if fault_spec:
+        cmd += ["--fault-spec", fault_spec]
+    proc = subprocess.Popen(cmd, env=_env())
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        if os.path.exists(ready):
+            with open(ready) as f:
+                port = json.load(f)["port"]
+            return proc, port
+        if proc.poll() is not None:
+            raise SystemExit(f"daemon died at startup (rc={proc.returncode})")
+        time.sleep(0.05)
+    proc.kill()
+    raise SystemExit("daemon did not become ready in time")
+
+
+def stop_daemon(proc: subprocess.Popen, timeout_s: float = 30.0) -> int:
+    proc.send_signal(signal.SIGTERM)
+    try:
+        return proc.wait(timeout=timeout_s)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        return proc.wait()
+
+
+def post(port: int, payload: dict, timeout: float = 120.0):
+    """POST /v1/mapping; returns (status, envelope)."""
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/v1/mapping",
+        data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def get(port: int, path: str, timeout: float = 30.0) -> dict:
+    with urllib.request.urlopen(
+        f"http://127.0.0.1:{port}{path}", timeout=timeout
+    ) as r:
+        return json.loads(r.read())
+
+
+def gemm_query(m: int, n: int, k: int, budget: int = 150,
+               deadline_s: float | None = None) -> dict:
+    q = {
+        "problem": {"kind": "gemm", "m": m, "n": n, "k": k},
+        "arch": {"kind": "edge", "aspect": [16, 16]},
+        "metric": "edp",
+        "mapper": {"name": "random", "kw": {"seed": 7}},
+        "budget": budget,
+    }
+    if deadline_s is not None:
+        q["deadline_s"] = deadline_s
+    return q
+
+
+# --------------------------------------------------------------------- #
+# Phase 1: Poisson warm/cold mix
+# --------------------------------------------------------------------- #
+def poisson_phase(port: int, *, requests: int, rate_per_s: float,
+                  shapes: int, seed: int) -> dict:
+    rng = random.Random(seed)
+    sizes = [32 + 16 * i for i in range(shapes)]
+    latencies, warm_latencies = [], []
+    cold_seen: set = set()
+    for i in range(requests):
+        time.sleep(rng.expovariate(rate_per_s))
+        m = rng.choice(sizes)
+        t0 = time.perf_counter()
+        st, env = post(port, gemm_query(m, m, m))
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        assert st == 200 and env["ok"], (st, env)
+        assert not env["budget_exhausted"], env
+        latencies.append(dt_ms)
+        if env["source"] == "store":
+            warm_latencies.append(dt_ms)
+        else:
+            cold_seen.add(m)
+    qs = sorted(latencies)
+    p = lambda q: qs[min(len(qs) - 1, int(q * len(qs)))]  # noqa: E731
+    return {
+        "requests": requests,
+        "distinct_shapes": shapes,
+        "cold": len(cold_seen),
+        "warm": len(warm_latencies),
+        "p50_ms": round(statistics.median(latencies), 3),
+        "p99_ms": round(p(0.99), 3),
+        "warm_p50_ms": round(statistics.median(warm_latencies), 3)
+        if warm_latencies else None,
+    }
+
+
+# --------------------------------------------------------------------- #
+# Phase 2: backpressure burst
+# --------------------------------------------------------------------- #
+def burst_phase(port: int, *, burst: int) -> dict:
+    """Concurrent distinct COLD queries (cold searches serialize on the
+    daemon's search lock, so workers stay busy) against the bounded
+    queue; count 429s."""
+    def one(i: int):
+        m = 40 + 8 * i  # distinct shapes: all cold, nothing journal-served
+        return post(port, gemm_query(m, m + 8, m, budget=400, deadline_s=5.0))
+
+    with cf.ThreadPoolExecutor(max_workers=burst) as ex:
+        out = list(ex.map(one, range(burst)))
+    shed = sum(1 for st, _env in out if st == 429)
+    served = sum(1 for st, env in out if st == 200 and env.get("ok"))
+    assert shed + served == burst, out
+    return {"burst": burst, "shed": shed, "served": served}
+
+
+# --------------------------------------------------------------------- #
+# Phase 3: circuit-breaker drill
+# --------------------------------------------------------------------- #
+def breaker_phase(state_dir: str) -> dict:
+    proc, port = start_daemon(
+        state_dir, backend="jax", deadline_s=60.0, workers=1,
+        fault_spec="jaxfail:0;jaxfail:1",
+    )
+    try:
+        for i in range(4):
+            m = 32 + 16 * i
+            st, env = post(port, gemm_query(m, 32, 32, budget=120))
+            assert st == 200 and env["ok"], (st, env)
+        metrics = get(port, "/metrics")
+    finally:
+        stop_daemon(proc)
+    br = metrics["breaker"]
+    for leg in ("closed->open", "open->half_open", "half_open->closed"):
+        assert leg in br["transitions"], br
+    assert br["state"] == "closed", br
+    return {
+        "transitions": br["transitions"],
+        "opened": br["opened"],
+        "recovered": br["recovered"],
+        "final_state": br["state"],
+    }
+
+
+# --------------------------------------------------------------------- #
+# Warn-and-record bootstrap gate (mappers_bench contract)
+# --------------------------------------------------------------------- #
+def record_rows(summary: dict, baseline_path: Path) -> None:
+    """Latency/robustness rows bootstrap warn-and-record: a missing
+    baseline is written whole; new keys are warned about and appended
+    with ``setdefault`` (existing rows are never overwritten). The
+    DETERMINISTIC contracts (exact warm-hit accounting, shed >= 1,
+    breaker recovery) are asserted inline by the phases above, not
+    ratcheted here -- wall-clock latencies on shared runners are
+    recorded for trend-watching only."""
+    if not baseline_path.exists():
+        print(f"[serve] no baseline at {baseline_path}; recording this run")
+        baseline_path.write_text(json.dumps(summary, indent=1))
+        return
+    try:
+        base = json.loads(baseline_path.read_text())
+    except Exception as e:
+        print(f"[serve] unreadable baseline ({e}); rewriting")
+        baseline_path.write_text(json.dumps(summary, indent=1))
+        return
+    changed = False
+    for section, rows in summary.items():
+        if not isinstance(rows, dict):
+            base.setdefault(section, rows)
+            continue
+        dst = base.setdefault(section, {})
+        for key, val in rows.items():
+            if key not in dst:
+                print(f"[serve] new row {section}.{key}; recording")
+                dst.setdefault(key, val)
+                changed = True
+    if changed:
+        baseline_path.write_text(json.dumps(base, indent=1))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI matrix (fewer requests, small burst)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=25.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--shapes", type=int, default=None)
+    ap.add_argument("--burst", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-breaker-drill", dest="breaker_drill",
+                    action="store_false", default=True)
+    args = ap.parse_args(argv)
+
+    requests = args.requests or (24 if args.smoke else 120)
+    shapes = args.shapes or (4 if args.smoke else 8)
+    burst = args.burst or (8 if args.smoke else 16)
+
+    summary = {"smoke": bool(args.smoke), "seed": args.seed}
+    with tempfile.TemporaryDirectory(prefix="serve-bench-") as td:
+        proc, port = start_daemon(
+            td, backend="numpy", deadline_s=30.0, queue_cap=2, workers=2
+        )
+        try:
+            summary["poisson"] = poisson_phase(
+                port, requests=requests, rate_per_s=args.rate,
+                shapes=shapes, seed=args.seed,
+            )
+            summary["burst"] = burst_phase(port, burst=burst)
+            metrics = get(port, "/metrics")
+        finally:
+            rc = stop_daemon(proc)
+        assert rc == 0, f"daemon drain exit code {rc}"
+
+        # warm-hit accounting is EXACT: every repeat of an answered shape
+        # must be journal-served with zero re-search
+        pz = summary["poisson"]
+        expected_warm = pz["requests"] - pz["cold"]
+        assert pz["warm"] == expected_warm, (pz, metrics)
+        assert metrics["shed"] == summary["burst"]["shed"], metrics
+        assert summary["burst"]["shed"] >= 1, (
+            "backpressure never fired -- queue bound is not enforced",
+            summary["burst"],
+        )
+        summary["service_metrics"] = {
+            k: metrics[k]
+            for k in ("queries", "store_hits", "searches", "partials",
+                      "shed", "seeded", "seed_misfires", "neighbor_hits")
+        }
+
+    if args.breaker_drill:
+        with tempfile.TemporaryDirectory(prefix="serve-breaker-") as td:
+            summary["breaker"] = breaker_phase(td)
+
+    record_rows(summary, BENCH_PATH)
+    print(json.dumps(summary, indent=1))
+    print("[serve] all phase contracts held")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

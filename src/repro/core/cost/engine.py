@@ -129,8 +129,13 @@ class EngineStats:
     # jax backend broke mid-flight (trace/compile/dispatch failure or a
     # missing install) and the engine degraded itself to the numpy batch
     # path -- results are bit-identical by the backend contract, so this
-    # is a warning-level event, not an error (at most 1 per engine).
+    # is a warning-level event, not an error (at most 1 per engine unless
+    # a circuit breaker re-arms the jax path and it fails again).
     backend_fallbacks: int = 0
+    # batches whose incumbent was warm-started from ``seed_incumbent``
+    # (nearest-neighbor warm start): admission pruned from candidate #1
+    # instead of bootstrapping via an unpruned probe head.
+    seeded_batches: int = 0
     # NEW compiled programs traced on behalf of this engine (sampled as
     # deltas of the process-global trace registry around every dispatch
     # site, so shape-generic cache hits -- a program traced by ANOTHER
@@ -194,6 +199,26 @@ class EvaluationEngine:
                  fresh evaluation, so repeated sweeps over the same
                  (problem, arch, model) space stop re-scoring identical
                  signatures across searches and processes.
+    breaker:     optional circuit breaker (``runtime.fault_tolerance.
+                 CircuitBreaker``, duck-typed so core stays free of the
+                 runtime package). ``_check_backend_degraded`` reports a
+                 jax failure to it, and :meth:`maybe_restore_backend`
+                 re-arms the jax path when the breaker's probe schedule
+                 admits a half-open retry -- turning the one-way
+                 degradation into a recoverable state machine for
+                 long-lived processes (the mapping-service daemon).
+
+    ``seed_incumbent`` (attribute, default None) warm-starts a search:
+    when a batch arrives with ``probe`` set and no incumbent yet
+    (``incumbent == inf``), the seed is used as the incumbent for the
+    whole batch INSTEAD of the unpruned probe head -- admission prunes
+    from candidate #1. Sound by the lower-bound contract: any candidate
+    whose true metric beats the seed has ``lb <= true < seed`` and is
+    always admitted, so the best found is unchanged whenever the space
+    can beat the seed at all; a too-optimistic seed prunes everything
+    (every result None) and the CALLER must fall back to an unseeded
+    retry. Population calls that disable pruning (``incumbent=inf``
+    without ``probe``, e.g. genetic fitness batches) never consume it.
     """
 
     def __init__(
@@ -207,6 +232,7 @@ class EvaluationEngine:
         workers: int = 0,
         backend: Optional[str] = "numpy",
         store: Optional[ResultStore] = None,
+        breaker: Optional[object] = None,
     ) -> None:
         self.cost_model = cost_model
         self.problem = problem
@@ -233,6 +259,13 @@ class EvaluationEngine:
         # fused single-dispatch admit+score (jax backend only; lazy)
         self._fused_runner = None
         self._fused_failed = False
+        # nearest-neighbor warm start (see class docstring)
+        self.seed_incumbent: Optional[float] = None
+        # circuit-breaker hook (duck-typed; see class docstring)
+        self._breaker = breaker
+        self._requested_backend = self.backend
+        self._probe_pending = False  # restored jax path awaiting evidence
+        self._probe_baseline = 0  # fused_dispatches at restore time
 
     # -------------------------------------------------------------- #
     def signature(self, cand) -> Signature:
@@ -257,6 +290,28 @@ class EvaluationEngine:
         if isinstance(cand, Mapping):
             return self.signature(cand)
         return cand.cache_key(self._dims)
+
+    def _seed_for(self, incumbent: float, probe: int) -> Optional[float]:
+        """The effective warm-start incumbent for a batch, or None.
+
+        Consumed ONLY on the probe path (``probe > 0`` and no incumbent
+        yet) with pruning enabled -- exactly the situation where the
+        engine would otherwise bootstrap the incumbent from an unpruned
+        probe head. Population fitness calls (``incumbent=inf`` without
+        ``probe``) and batches that already carry a finite incumbent are
+        never touched, so genetic search semantics are preserved.
+        """
+        s = self.seed_incumbent
+        if (
+            probe
+            and incumbent == math.inf
+            and self.prune
+            and s is not None
+            and math.isfinite(s)
+            and s > 0.0
+        ):
+            return float(s)
+        return None
 
     def _scalarize(self, lb_cycles: float, lb_energy: float) -> float:
         if self.metric == "latency":
@@ -406,6 +461,12 @@ class EvaluationEngine:
         instead of dispatching -- results, counters, and side effects are
         identical to a fresh dispatch by construction.
         """
+        seed = self._seed_for(incumbent, probe)
+        if seed is not None:
+            self.stats.seeded_batches += 1
+            return self.evaluate_genome_batch(
+                gb, incumbent=seed, precomputed=precomputed
+            )
         if probe and incumbent == math.inf and len(gb) > probe:
             head = self.evaluate_genome_batch(
                 gb.select(slice(0, probe)),
@@ -508,6 +569,10 @@ class EvaluationEngine:
             return self.evaluate_genome_batch(
                 candidates, incumbent, probe, precomputed=precomputed
             )
+        seed = self._seed_for(incumbent, probe)
+        if seed is not None:
+            self.stats.seeded_batches += 1
+            return self.evaluate_batch(candidates, incumbent=seed)
         if probe and incumbent == math.inf and len(candidates) > probe:
             head = self.evaluate_batch(candidates[:probe])
             inc = incumbent
@@ -622,6 +687,10 @@ class EvaluationEngine:
                     ),
                 )
                 self.stats.score_s += perf_counter() - t0
+            # precomputed rows exist only because the device mega-dispatch
+            # actually served: that is jax evidence too (probe recovery),
+            # and a flag tripped since then must still degrade us
+            self._check_backend_degraded()
             return
 
         misses = order
@@ -691,6 +760,9 @@ class EvaluationEngine:
         if self.backend == "jax" and getattr(self._ctx, "_jax_failed", False):
             self.backend = "numpy"
             self.stats.backend_fallbacks += 1
+            self._probe_pending = False
+            if self._breaker is not None:
+                self._breaker.record_failure()
             log.warning(
                 "jax backend failed for engine (%s on %s); degraded to the "
                 "numpy path -- results identical by the backend contract",
@@ -698,7 +770,54 @@ class EvaluationEngine:
                 getattr(self.problem, "name", "?"),
             )
             return True
+        if (
+            self._probe_pending
+            and self.backend == "jax"
+            and self.stats.fused_dispatches > self._probe_baseline
+        ):
+            # the restored jax path actually served a fused dispatch
+            # without tripping the context flag: report recovery
+            self._probe_pending = False
+            if self._breaker is not None:
+                self._breaker.record_success()
         return False
+
+    def maybe_restore_backend(self) -> bool:
+        """Half-open retry of a degraded jax backend, gated by the
+        engine's circuit breaker.
+
+        A breaker-less engine keeps PR 6's one-way degradation (this is a
+        no-op). With a breaker, once its deterministic probe schedule
+        admits a retry (``allow()``), the engine clears the analysis
+        context's failure flag and re-arms the jax fused path; the next
+        fused dispatch that completes without re-tripping the flag
+        reports ``record_success`` (breaker closes), while a repeat
+        failure reports ``record_failure`` through the normal degradation
+        path (breaker re-opens). Returns True when a restore was armed.
+        Safe to call between batches at any cadence -- long-lived callers
+        (the mapping-service daemon) invoke it per query.
+        """
+        if (
+            self._breaker is None
+            or self._requested_backend != "jax"
+            or self.backend == "jax"
+        ):
+            return False
+        if not self._breaker.allow():
+            return False
+        self._ctx._jax_failed = False
+        self.backend = "jax"
+        self._fused_failed = False
+        self._fused_runner = None
+        self._probe_pending = True
+        self._probe_baseline = self.stats.fused_dispatches
+        log.info(
+            "circuit breaker admitted a jax probe for engine (%s on %s); "
+            "re-armed the fused path",
+            type(self.cost_model).__name__,
+            getattr(self.problem, "name", "?"),
+        )
+        return True
 
     def _partition_admitted(self, order, admit):
         """Split a batch's unique candidates by admit flag, counting one

@@ -195,6 +195,56 @@ def _sig_from_key(s: str):
     )
 
 
+def _model_digest(cost_model: CostModel) -> str:
+    return hashlib.sha256(
+        json.dumps([repr(p) for p in cost_model.store_key_parts()]).encode()
+    ).hexdigest()[:16]
+
+
+def _arch_digest(arch: Architecture) -> str:
+    return hashlib.sha256(
+        json.dumps(_canon_arch(arch), sort_keys=True, default=repr).encode()
+    ).hexdigest()[:16]
+
+
+def _problem_features(problem: Problem) -> dict:
+    """Content features of a problem for nearest-neighbor space lookup.
+
+    Dim NAMES are deliberately dropped: a 512x512x256 GEMM should be a
+    near neighbor of a conv whose iteration space factors the same way,
+    because what transfers between spaces is the *scale* of the search
+    landscape, not the labels. Sorted log2 sizes make the vector
+    permutation-invariant; macs (= iteration-space volume) rides along
+    for incumbent scaling at the call site.
+    """
+    sizes = sorted(max(int(s), 1) for s in problem.dims.values())
+    macs = 1.0
+    for s in sizes:
+        macs *= float(s)
+    return {
+        "ndims": len(sizes),
+        "logdims": [round(math.log2(s), 6) for s in sizes],
+        "macs": macs,
+    }
+
+
+def _feature_distance(a: dict, b: dict) -> float:
+    """L2 over aligned sorted log2-size vectors + a rank-mismatch penalty.
+
+    Vectors are right-aligned (largest dims paired with largest) and the
+    shorter one zero-padded on the left, so a GEMM and a conv with the
+    same dominant extents land close while a genuinely different scale
+    stays far. Deterministic: pure arithmetic on stored floats.
+    """
+    la, lb = list(a["logdims"]), list(b["logdims"])
+    n = max(len(la), len(lb))
+    la = [0.0] * (n - len(la)) + la
+    lb = [0.0] * (n - len(lb)) + lb
+    d2 = sum((x - y) ** 2 for x, y in zip(la, lb))
+    d2 += 4.0 * (a["ndims"] - b["ndims"]) ** 2
+    return math.sqrt(d2)
+
+
 class ResultStore:
     """Cross-search ``(space key, signature) -> Cost`` store.
 
@@ -216,14 +266,27 @@ class ResultStore:
         self,
         path: Optional[str] = None,
         max_entries_per_space: Optional[int] = None,
+        refresh: bool = False,
     ) -> None:
         self.path = Path(path) if path else None
         self.max_entries_per_space = (
             int(max_entries_per_space) if max_entries_per_space else None
         )
+        # read-refresh mode for LONG-LIVED processes (the mapping-service
+        # daemon): a get() miss re-stats the space's on-disk file and, when
+        # another process's flush has bumped its mtime since our load,
+        # reloads and unions the new entries -- daemon warm hits see
+        # sweep-written results without a restart. Off by default: batch
+        # sweeps load each space once and the extra stat per miss would be
+        # pure overhead.
+        self.refresh = bool(refresh)
         self._spaces: Dict[str, "OrderedDict[object, Cost]"] = {}
         self._loaded: set = set()  # space keys whose disk tier was read
         self._dirty: set = set()
+        self._space_mtime: Dict[str, float] = {}  # disk mtime at last read
+        self._meta: Dict[str, dict] = {}  # space key -> problem/arch features
+        self._meta_loaded = False
+        self._meta_dirty = False
         self.hits = 0
         self.misses = 0
         self.puts = 0
@@ -231,6 +294,7 @@ class ResultStore:
         self.corrupt = 0  # unreadable or version-mismatched files skipped
         self.evicted = 0  # entries dropped by the per-space LRU cap
         self.stale_tmps = 0  # crashed writers' scratch files cleaned at flush
+        self.reloads = 0  # read-refresh reloads of an mtime-bumped space
 
     # -------------------------------------------------------------- #
     def space_key(
@@ -245,36 +309,65 @@ class ResultStore:
                 d.popitem(last=False)  # least recently used first
                 self.evicted += 1
 
+    def _read_disk_tier(self, skey: str, d: "OrderedDict[object, Cost]") -> None:
+        """Read ``{skey}.json`` and union its entries into ``d`` (existing
+        signatures keep their in-memory Cost -- identical by construction).
+        Records the file's mtime so the read-refresh probe can tell when
+        another process's flush has replaced it."""
+        f = self.path / f"{skey}.json"
+        try:
+            self._space_mtime[skey] = f.stat().st_mtime
+        except OSError:
+            self._space_mtime[skey] = 0.0  # absent: any future flush is news
+        try:
+            payload = json.loads(f.read_text())
+            if (
+                isinstance(payload, dict)
+                and payload.get("version") == STORE_VERSION
+            ):
+                for key, rec in payload["costs"].items():
+                    sig = _sig_from_key(key)
+                    if sig not in d:
+                        d[sig] = _cost_from_record(rec)
+                        self.disk_loaded += 1
+                self._trim(d)
+            else:
+                self.corrupt += 1  # stale version: discard, rewrite later
+        except FileNotFoundError:
+            pass
+        except Exception:
+            self.corrupt += 1  # truncated/garbled file: start fresh
+
     def _space(self, skey: str) -> "OrderedDict[object, Cost]":
         d = self._spaces.get(skey)
         if d is None:
             d = self._spaces[skey] = OrderedDict()
         if self.path is not None and skey not in self._loaded:
             self._loaded.add(skey)
-            f = self.path / f"{skey}.json"
-            try:
-                payload = json.loads(f.read_text())
-                if (
-                    isinstance(payload, dict)
-                    and payload.get("version") == STORE_VERSION
-                ):
-                    for key, rec in payload["costs"].items():
-                        sig = _sig_from_key(key)
-                        if sig not in d:
-                            d[sig] = _cost_from_record(rec)
-                            self.disk_loaded += 1
-                    self._trim(d)
-                else:
-                    self.corrupt += 1  # stale version: discard, rewrite later
-            except FileNotFoundError:
-                pass
-            except Exception:
-                self.corrupt += 1  # truncated/garbled file: start fresh
+            self._read_disk_tier(skey, d)
         return d
+
+    def _maybe_reload(self, skey: str, d: "OrderedDict[object, Cost]") -> bool:
+        """Read-refresh probe: re-stat the space file and reload when its
+        mtime moved past our last read (another process flushed). Returns
+        True when a reload actually happened."""
+        if self.path is None or skey not in self._loaded:
+            return False
+        try:
+            mtime = (self.path / f"{skey}.json").stat().st_mtime
+        except OSError:
+            return False
+        if mtime <= self._space_mtime.get(skey, 0.0):
+            return False
+        self.reloads += 1
+        self._read_disk_tier(skey, d)
+        return True
 
     def get(self, skey: str, sig) -> Optional[Cost]:
         d = self._space(skey)
         c = d.get(sig)
+        if c is None and self.refresh and self._maybe_reload(skey, d):
+            c = d.get(sig)
         if c is None:
             self.misses += 1
         else:
@@ -289,6 +382,93 @@ class ResultStore:
             self.puts += 1
             self._dirty.add(skey)
             self._trim(d)
+
+    # -------------------------------------------------------------- #
+    # Space metadata: nearest-neighbor warm start
+    # -------------------------------------------------------------- #
+    def _load_meta(self) -> None:
+        if self._meta_loaded:
+            return
+        self._meta_loaded = True
+        if self.path is None:
+            return
+        try:
+            payload = json.loads((self.path / "_meta.json").read_text())
+            if (
+                isinstance(payload, dict)
+                and payload.get("version") == STORE_VERSION
+            ):
+                for skey, rec in payload.get("spaces", {}).items():
+                    self._meta.setdefault(skey, rec)
+            else:
+                self.corrupt += 1
+        except FileNotFoundError:
+            pass
+        except Exception:
+            self.corrupt += 1  # tolerated like a garbled space file
+
+    def register_space_meta(
+        self, skey: str, cost_model: CostModel, problem: Problem, arch: Architecture
+    ) -> None:
+        """Record the content features of a space so later queries can find
+        it as a nearest neighbor. Idempotent; persisted by :meth:`flush`."""
+        self._load_meta()
+        if skey in self._meta:
+            return
+        rec = dict(_problem_features(problem))
+        rec["model"] = _model_digest(cost_model)
+        rec["arch"] = _arch_digest(arch)
+        self._meta[skey] = rec
+        self._meta_dirty = True
+
+    def nearest_space(
+        self,
+        cost_model: CostModel,
+        problem: Problem,
+        arch: Architecture,
+        exclude: Optional[str] = None,
+    ) -> Optional[tuple]:
+        """Nearest registered space to ``problem`` under the SAME cost model
+        and architecture (costs from a different model or machine are not
+        comparable, so they never seed an incumbent). Returns
+        ``(skey, distance)`` or None; ties break on skey for determinism.
+        """
+        self._load_meta()
+        model, ad = _model_digest(cost_model), _arch_digest(arch)
+        q = _problem_features(problem)
+        best = None
+        for skey in sorted(self._meta):
+            if skey == exclude:
+                continue
+            rec = self._meta[skey]
+            if rec.get("model") != model or rec.get("arch") != ad:
+                continue
+            try:
+                dist = _feature_distance(q, rec)
+            except Exception:
+                continue  # malformed record from a foreign writer
+            if best is None or dist < best[1]:
+                best = (skey, dist)
+        return best
+
+    def space_meta(self, skey: str) -> Optional[dict]:
+        self._load_meta()
+        rec = self._meta.get(skey)
+        return dict(rec) if rec is not None else None
+
+    def best_in_space(self, skey: str, metric: str) -> Optional[float]:
+        """Minimum stored ``Cost.metric(metric)`` over a space (loads the
+        disk tier), or None when the space is empty/unknown."""
+        d = self._space(skey)
+        best = None
+        for c in d.values():
+            try:
+                v = float(c.metric(metric))
+            except Exception:
+                continue
+            if math.isfinite(v) and (best is None or v < best):
+                best = v
+        return best
 
     # -------------------------------------------------------------- #
     @contextlib.contextmanager
@@ -364,15 +544,18 @@ class ResultStore:
         with the union guarantee instead of clobbering it."""
         if self.path is None:
             self._dirty.clear()
+            self._meta_dirty = False
             return 0
         dirty = sorted(self._dirty)
-        if not dirty:
+        if not dirty and not self._meta_dirty:
             return 0
         self.path.mkdir(parents=True, exist_ok=True)
         cap = self.max_entries_per_space
         written = 0
         with self._store_lock():
             self._clean_stale_tmps()
+            if self._meta_dirty:
+                self._flush_meta_locked()
             for skey in dirty:
                 d = self._spaces[skey]
                 mem = {_sig_to_key(sig): _cost_to_record(c) for sig, c in d.items()}
@@ -399,10 +582,37 @@ class ResultStore:
                 # even if a non-POSIX platform skipped the lock
                 tmp = self.path / f".{skey}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
                 tmp.write_text(json.dumps(payload, separators=(",", ":")))
-                tmp.replace(self.path / f"{skey}.json")
+                target = self.path / f"{skey}.json"
+                tmp.replace(target)
                 written += len(merged)
+                # our own replace bumped the mtime; record it so the
+                # read-refresh probe doesn't reload what we just wrote
+                try:
+                    self._space_mtime[skey] = target.stat().st_mtime
+                except OSError:
+                    pass
         self._dirty.clear()
         return written
+
+    def _flush_meta_locked(self) -> None:
+        """Merge + atomically replace ``_meta.json``; caller holds the
+        directory lock. Prior records from other writers are preserved
+        (identical skeys describe identical spaces, so merge order is
+        immaterial)."""
+        merged: Dict[str, dict] = {}
+        try:
+            prior = json.loads((self.path / "_meta.json").read_text())
+            if isinstance(prior, dict) and prior.get("version") == STORE_VERSION:
+                merged.update(prior.get("spaces", {}))
+        except Exception:
+            pass  # absent/corrupt prior meta: rewrite from memory
+        merged.update(self._meta)
+        payload = {"version": STORE_VERSION, "spaces": merged}
+        tmp = self.path / f"._meta.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
+        tmp.write_text(json.dumps(payload, sort_keys=True, separators=(",", ":")))
+        tmp.replace(self.path / "_meta.json")
+        self._meta = merged
+        self._meta_dirty = False
 
     def stats_dict(self) -> dict:
         return {
@@ -413,6 +623,7 @@ class ResultStore:
             "corrupt": self.corrupt,
             "evicted": self.evicted,
             "stale_tmps": self.stale_tmps,
+            "reloads": self.reloads,
             "spaces": len(self._spaces),
             "entries": sum(len(d) for d in self._spaces.values()),
         }

@@ -43,7 +43,14 @@ independence into a service-grade execution tier:
       fail:G@K          raise on group G (first-occurrence order),
                         attempt K (0-based)
       hang:G@K[:SECS]   group G attempt K sleeps SECS (default 5.0)
-                        inside the watchdogged region
+                        inside the watchdogged region, BEFORE any work --
+                        models a wedged dispatch (nothing completes)
+      slow:G@K[:SECS]   group G attempt K takes SECS (default 1.0) of
+                        EXTRA latency spread evenly across its tasks --
+                        work completes, just slowly, so deadline-with-
+                        partial-result paths (the mapping service's
+                        ``budget_exhausted`` answers) are testable
+                        deterministically
       jaxfail:G         group G's analysis context reports a jax failure
                         -> engine degrades to numpy
       kill-after:N      SIGKILL this process right after the Nth
@@ -103,6 +110,7 @@ class FaultSpec:
 
     fails: Dict[Tuple[int, int], bool] = field(default_factory=dict)
     hangs: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    slows: Dict[Tuple[int, int], float] = field(default_factory=dict)
     jaxfail: frozenset = frozenset()
     kill_after: Optional[int] = None
 
@@ -125,6 +133,10 @@ class FaultSpec:
                     g, _, tail = rest.partition("@")
                     k, _, secs = tail.partition(":")
                     fs.hangs[(int(g), int(k))] = float(secs) if secs else 5.0
+                elif kind == "slow":
+                    g, _, tail = rest.partition("@")
+                    k, _, secs = tail.partition(":")
+                    fs.slows[(int(g), int(k))] = float(secs) if secs else 1.0
                 elif kind == "jaxfail":
                     jax_groups.add(int(rest))
                 elif kind == "kill-after":
@@ -146,6 +158,9 @@ class FaultSpec:
 
     def hang_s(self, group: int, attempt: int) -> float:
         return self.hangs.get((group, attempt), 0.0)
+
+    def slow_s(self, group: int, attempt: int) -> float:
+        return self.slows.get((group, attempt), 0.0)
 
 
 # --------------------------------------------------------------------- #
@@ -278,6 +293,9 @@ def run_group(payload: dict) -> dict:
     hang_s = payload.get("hang_s", 0.0)
     if hang_s > 0:
         time.sleep(hang_s)  # injected hang, inside the watchdogged region
+    # injected slowness: spread across tasks so the group makes progress
+    # (tasks complete, just late) instead of stalling up front like hang
+    slow_per_task = payload.get("slow_s", 0.0) / max(1, len(payload["tasks"]))
 
     store = payload.get("store")
     own_store = False
@@ -313,6 +331,8 @@ def run_group(payload: dict) -> dict:
     records: Dict[str, dict] = {}
     try:
         for tsk in payload["tasks"]:
+            if slow_per_task > 0:
+                time.sleep(slow_per_task)
             mp = _resolve_mapper(tsk["mapper"])
             if payload.get("warmup", True):
                 warmed += engine.warmup(mp.batch_hints())
@@ -471,6 +491,7 @@ class SweepExecutor:
             "warmup": self.warmup,
             "tasks": g.tasks,
             "hang_s": self.fault.hang_s(g.index, attempt),
+            "slow_s": self.fault.slow_s(g.index, attempt),
             "inject_jax_fail": g.index in self.fault.jaxfail,
         }
         if for_process:

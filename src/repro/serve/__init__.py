@@ -1,0 +1,14 @@
+"""Serving-tier daemons built on the search stack.
+
+``mapping_service`` is the mapping-as-a-service daemon: mapping queries
+(problem, arch, metric, mapper, budget) answered from the persistent
+:class:`~repro.core.cost.store.ResultStore` + answer journal in O(ms)
+when warm, bounded deadline-enforced search on miss. See
+``docs/mapping_service.md``.
+"""
+
+from repro.serve.mapping_service import (  # noqa: F401
+    MappingService,
+    QueryError,
+    query_fingerprint,
+)

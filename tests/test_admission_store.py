@@ -565,3 +565,120 @@ def test_search_counters_include_phases_and_store():
     assert d["store_hits"] == 0  # no store attached
     assert d["considered"] >= d["candidates"] > 0
     assert d["admit_s"] >= 0.0 and d["score_s"] > 0.0
+
+
+# --------------------------------------------------------------------- #
+# Read-refresh mode + space metadata (nearest-neighbor warm start)
+# --------------------------------------------------------------------- #
+def test_store_refresh_reloads_foreign_flush(tmp_path):
+    """A refresh-mode store sees another process's flush on a get-miss
+    (mtime probe + reload + ``reloads`` counter); a plain store does
+    not; a store's OWN flush never triggers a self-reload."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    ctx = get_context(GEMM, arch)
+    space = MapSpace(GEMM, arch)
+    rng = random.Random(0)
+    sigs = [space.random_genome(rng).signature(ctx.dims) for _ in range(3)]
+    skey = space_key(cm, GEMM, arch)
+    costs = {s: cm.evaluate_signature(GEMM, arch, s) for s in sigs}
+
+    reader = ResultStore(tmp_path / "s", refresh=True)
+    plain = ResultStore(tmp_path / "s")
+    assert reader.get(skey, sigs[0]) is None  # both load the empty tier
+    assert plain.get(skey, sigs[0]) is None
+
+    writer = ResultStore(tmp_path / "s")
+    writer.put(skey, sigs[0], costs[sigs[0]])
+    writer.flush()
+
+    got = reader.get(skey, sigs[0])
+    assert got is not None and _costs_equal(got, costs[sigs[0]])
+    assert reader.reloads == 1
+    assert plain.get(skey, sigs[0]) is None  # no refresh, no reload
+    assert plain.reloads == 0
+
+    # a self-flush records its own mtime: no spurious self-reload
+    reader.put(skey, sigs[1], costs[sigs[1]])
+    reader.flush()
+    assert reader.get(skey, sigs[1]) is not None
+    assert reader.reloads == 1
+    assert reader.stats_dict()["reloads"] == 1
+
+
+def test_store_space_meta_roundtrip_and_nearest(tmp_path):
+    """register_space_meta persists through flush; nearest_space picks
+    the content-closest space under the SAME model + arch only, honors
+    ``exclude``, and best_in_space returns the space's stored minimum."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    probs = {
+        "close": Problem.gemm(64, 64, 48, name="near-a"),
+        "far": Problem.gemm(1024, 1024, 1024, name="near-b"),
+    }
+    query = Problem.gemm(64, 64, 64, name="near-q")
+    store = ResultStore(tmp_path / "s")
+    keys = {}
+    for tag, p in probs.items():
+        sp = MapSpace(p, arch)
+        ctx = get_context(p, arch)
+        skey = space_key(cm, p, arch)
+        keys[tag] = skey
+        store.register_space_meta(skey, cm, p, arch)
+        rng = random.Random(1)
+        for _ in range(4):
+            sig = sp.random_genome(rng).signature(ctx.dims)
+            store.put(skey, sig, cm.evaluate_signature(p, arch, sig))
+    store.flush()
+    assert (tmp_path / "s" / "_meta.json").exists()
+
+    # a FRESH store (new process) reads the persisted meta registry
+    fresh = ResultStore(tmp_path / "s")
+    got = fresh.nearest_space(cm, query, arch)
+    assert got is not None
+    skey, dist = got
+    assert skey == keys["close"]
+    assert dist >= 0.0
+    # exclude the winner: the far space is next
+    skey2, dist2 = fresh.nearest_space(cm, query, arch, exclude=keys["close"])
+    assert skey2 == keys["far"] and dist2 > dist
+    # registration is idempotent
+    fresh.register_space_meta(keys["close"], cm, probs["close"], arch)
+    assert fresh.space_meta(keys["close"])["macs"] == 64 * 64 * 48
+
+    best = fresh.best_in_space(keys["close"], "edp")
+    d = fresh._space(keys["close"])
+    assert best == min(c.metric("edp") for c in d.values())
+    assert fresh.best_in_space("no-such-space", "edp") is None
+
+
+def test_store_nearest_space_filters_model_and_arch(tmp_path):
+    """Costs from a different cost model or machine are not comparable:
+    they must never be offered as a neighbor."""
+    store = ResultStore(tmp_path / "s")
+    tl, ms = TimeloopLikeModel(), MaestroLikeModel()
+    edge, cloud = edge_accelerator(), cloud_accelerator()
+    p = Problem.gemm(128, 128, 64, name="nn-f")
+    store.register_space_meta(space_key(ms, p, edge), ms, p, edge)
+    store.register_space_meta(space_key(tl, p, cloud), tl, p, cloud)
+    assert store.nearest_space(tl, p, edge) is None
+    store.register_space_meta(space_key(tl, p, edge), tl, p, edge)
+    got = store.nearest_space(tl, Problem.gemm(128, 128, 96), edge)
+    assert got is not None and got[0] == space_key(tl, p, edge)
+
+
+def test_store_meta_corruption_tolerated(tmp_path):
+    sdir = tmp_path / "s"
+    sdir.mkdir()
+    (sdir / "_meta.json").write_text("{definitely not json")
+    store = ResultStore(sdir)
+    p = Problem.gemm(32, 32, 32, name="nn-c")
+    cm = TimeloopLikeModel()
+    arch = edge_accelerator()
+    assert store.nearest_space(cm, p, arch) is None
+    assert store.corrupt == 1
+    # registration + flush rewrites a clean registry
+    store.register_space_meta(space_key(cm, p, arch), cm, p, arch)
+    store.flush()
+    fresh = ResultStore(sdir)
+    assert fresh.nearest_space(cm, Problem.gemm(48, 32, 32), arch) is not None

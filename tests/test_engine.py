@@ -2,6 +2,7 @@
 the direct cost-model evaluation, and pruning must never discard a
 candidate better than the incumbent."""
 
+import math
 import random
 
 import pytest
@@ -183,3 +184,152 @@ def test_engine_worker_pool_matches_serial():
             assert _costs_equal(a, b)
     finally:
         pooled.close()
+
+
+# --------------------------------------------------------------------- #
+# Nearest-neighbor incumbent seeding (seed_incumbent)
+# --------------------------------------------------------------------- #
+def test_seed_incumbent_prunes_early_but_never_changes_results():
+    """A valid (upper-bound) seed warm-starts admission pruning from
+    candidate #1 yet the search converges to the identical best."""
+    from repro.core.mappers import RandomMapper
+
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+
+    plain = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    ref = RandomMapper(samples=200, seed=3).search(
+        space, cm, "edp", engine=plain
+    )
+    assert ref.best_mapping is not None
+
+    seeded = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    seeded.seed_incumbent = ref.best_metric * 2.0  # a sound upper bound
+    res = RandomMapper(samples=200, seed=3).search(
+        space, cm, "edp", engine=seeded
+    )
+    assert res.best_metric == ref.best_metric
+    assert res.best_mapping.to_dict() == ref.best_mapping.to_dict()
+    assert seeded.stats.seeded_batches > 0
+    assert seeded.stats.pruned >= plain.stats.pruned  # never prunes less
+
+
+def test_seed_incumbent_too_optimistic_prunes_everything():
+    """An absurdly low seed bounds out every candidate: the search comes
+    back empty (the CALLER's cue to retry unseeded) rather than silently
+    returning a worse-than-seed mapping."""
+    from repro.core.mappers import RandomMapper
+
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+    eng = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    eng.seed_incumbent = 1e-300
+    res = RandomMapper(samples=100, seed=5).search(
+        space, cm, "edp", engine=eng
+    )
+    assert res.best_mapping is None
+    assert eng.stats.pruned > 0
+
+
+def test_seed_incumbent_ignored_by_population_fitness_calls():
+    """Genetic full-fitness batches (incumbent=inf, no probe) must never
+    consume the seed -- every individual needs a true score."""
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    ref = union_opt(GEMM, arch, mapper="genetic", cost_model="timeloop")
+
+    from repro.core.mappers import GeneticMapper
+
+    space = MapSpace(GEMM, arch)
+    eng = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    eng.seed_incumbent = 1e-300  # would prune EVERYTHING if consumed
+    res = GeneticMapper().search(space, cm, "edp", engine=eng)
+    assert res.best_mapping is not None
+    assert res.best_metric == ref.search.best_metric
+    assert eng.stats.seeded_batches == 0
+
+
+def test_seed_incumbent_ignored_with_finite_incumbent_or_no_prune():
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    eng = EvaluationEngine(cm, GEMM, arch, metric="edp")
+    eng.seed_incumbent = 123.0
+    assert eng._seed_for(math.inf, 8) == 123.0
+    assert eng._seed_for(50.0, 8) is None  # a real incumbent exists
+    assert eng._seed_for(math.inf, 0) is None  # not a probe batch
+    eng2 = EvaluationEngine(cm, GEMM, arch, metric="edp", prune=False)
+    eng2.seed_incumbent = 123.0
+    assert eng2._seed_for(math.inf, 8) is None  # nothing to prune with
+    eng.seed_incumbent = math.inf
+    assert eng._seed_for(math.inf, 8) is None  # non-finite seed dropped
+
+
+# --------------------------------------------------------------------- #
+# Circuit-breaker hook: degrade -> open, restore -> probe -> closed
+# --------------------------------------------------------------------- #
+def test_engine_breaker_degrade_open_then_probe_recovers():
+    pytest.importorskip("jax")
+    from repro.core.cost.analysis import get_context as _ctx_of
+    from repro.core.mappers import RandomMapper
+    from repro.runtime.fault_tolerance import CircuitBreaker
+
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    space = MapSpace(GEMM, arch)
+    br = CircuitBreaker(failure_threshold=1, probe_interval=1)
+    eng = EvaluationEngine(cm, GEMM, arch, metric="edp", backend="jax",
+                           breaker=br)
+    ctx = _ctx_of(GEMM, arch)
+    prior = ctx._jax_failed
+    try:
+        ctx._jax_failed = True  # poison: next batch degrades
+        res = RandomMapper(samples=64, seed=2).search(
+            space, cm, "edp", engine=eng
+        )
+        assert res.best_mapping is not None  # numpy path kept answering
+        assert eng.backend == "numpy"
+        assert eng.stats.backend_fallbacks == 1
+        assert br.state == CircuitBreaker.OPEN
+
+        # fault cleared + breaker admits the probe: jax path re-armed
+        ctx._jax_failed = False
+        assert eng.maybe_restore_backend() is True
+        assert eng.backend == "jax" and br.state == CircuitBreaker.HALF_OPEN
+        before = eng.stats.fused_dispatches
+        res2 = RandomMapper(samples=64, seed=4).search(
+            space, cm, "edp", engine=eng
+        )
+        assert res2.best_mapping is not None
+        assert eng.stats.fused_dispatches > before  # real jax evidence
+        assert br.state == CircuitBreaker.CLOSED
+        assert br.recovered == 1
+        assert br.transitions == [
+            "closed->open", "open->half_open", "half_open->closed"
+        ]
+    finally:
+        ctx._jax_failed = prior
+
+
+def test_maybe_restore_backend_noop_paths():
+    from repro.runtime.fault_tolerance import CircuitBreaker
+
+    arch = edge_accelerator()
+    cm = TimeloopLikeModel()
+    # no breaker: PR 6's one-way degradation is preserved
+    plain = EvaluationEngine(cm, GEMM, arch, backend="numpy")
+    assert plain.maybe_restore_backend() is False
+    # breaker attached but the backend never degraded: nothing to do
+    br = CircuitBreaker(failure_threshold=1, probe_interval=1)
+    jax_eng = EvaluationEngine(cm, GEMM, arch, backend="jax", breaker=br)
+    if jax_eng.backend == "jax":  # may auto-degrade where jax is absent
+        assert jax_eng.maybe_restore_backend() is False
+    # degraded with the circuit still open and no probe due: denied
+    br2 = CircuitBreaker(failure_threshold=1, probe_interval=3)
+    eng = EvaluationEngine(cm, GEMM, arch, backend="jax", breaker=br2)
+    eng.backend = "numpy"
+    br2.record_failure()
+    assert br2.state == CircuitBreaker.OPEN
+    assert eng.maybe_restore_backend() is False  # denied call 1 of 3
+    assert eng.backend == "numpy"

@@ -21,6 +21,7 @@ from repro.core.problem import Problem
 from repro.core.sweep_exec import FaultSpec, task_fingerprint
 from repro.runtime.fault_tolerance import (
     CallTimeoutError,
+    CircuitBreaker,
     RetryPolicy,
     RetryStats,
     StragglerMeter,
@@ -76,6 +77,31 @@ def test_fault_spec_rejects_bad_clause():
         FaultSpec.parse("explode:1@0")
     with pytest.raises(ValueError):
         FaultSpec.parse("fail:one@0")
+
+
+def test_slow_spec_parse_and_accessor():
+    fs = FaultSpec.parse("slow:1@0:0.25; slow:2@1")
+    assert fs.slow_s(1, 0) == 0.25
+    assert fs.slow_s(1, 1) == 0.0  # only attempt 0 is slowed
+    assert fs.slow_s(2, 1) == 1.0  # default seconds
+    assert fs.slow_s(0, 0) == 0.0
+    empty = FaultSpec.parse(None)
+    assert not empty.slows and empty.slow_s(0, 0) == 0.0
+
+
+def test_slow_injection_completes_and_converges_to_baseline():
+    """``slow`` stretches a group's wall clock but never its results:
+    unlike ``hang`` the work COMPLETES, so no retry/timeout machinery
+    fires and the sweep is bit-identical to the unslowed baseline."""
+    tasks = _tasks()
+    baseline = union_opt_sweep(tasks)
+    t0 = time.monotonic()
+    slowed = union_opt_sweep(tasks, fault_spec="slow:1@0:0.4")
+    wall = time.monotonic() - t0
+    assert _shape(slowed) == _shape(baseline)
+    assert slowed.stats["retries"] == 0
+    assert slowed.stats["timeouts"] == 0
+    assert wall >= 0.4  # the injected latency really was served
 
 
 # ------------------------------------------------------------------ #
@@ -339,6 +365,87 @@ def test_backoff_delay_is_deterministic_and_label_diverse():
     assert a1 != backoff_delay(pol, 1, "group1")  # labels de-synchronize
     assert backoff_delay(pol, 2, "group0") > 0
     assert backoff_delay(RetryPolicy(backoff_s=0.0), 1, "x") == 0.0
+
+
+def test_circuit_breaker_opens_after_threshold():
+    br = CircuitBreaker(failure_threshold=3, probe_interval=2)
+    assert br.state == CircuitBreaker.CLOSED
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CircuitBreaker.CLOSED  # below threshold
+    assert br.allow()
+    br.record_failure()
+    assert br.state == CircuitBreaker.OPEN
+    assert br.opened == 1
+    assert br.transitions == ["closed->open"]
+
+
+def test_circuit_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(failure_threshold=2, probe_interval=2)
+    br.record_failure()
+    br.record_success()  # streak broken
+    br.record_failure()
+    assert br.state == CircuitBreaker.CLOSED
+    br.record_failure()
+    assert br.state == CircuitBreaker.OPEN
+
+
+def test_circuit_breaker_probe_schedule_is_count_based():
+    br = CircuitBreaker(failure_threshold=1, probe_interval=3)
+    br.record_failure()
+    assert br.state == CircuitBreaker.OPEN
+    # denied, denied, then the 3rd call is admitted as the probe
+    assert br.allow() is False
+    assert br.allow() is False
+    assert br.allow() is True
+    assert br.state == CircuitBreaker.HALF_OPEN
+    assert br.probes == 1 and br.denied == 2
+    # only ONE probe in flight: further calls are denied while half-open
+    assert br.allow() is False
+    br.record_success()
+    assert br.state == CircuitBreaker.CLOSED
+    assert br.recovered == 1
+    assert br.transitions == [
+        "closed->open", "open->half_open", "half_open->closed"
+    ]
+
+
+def test_circuit_breaker_failed_probe_reopens():
+    br = CircuitBreaker(failure_threshold=1, probe_interval=1)
+    br.record_failure()
+    assert br.allow() is True  # probe admitted immediately (interval 1)
+    br.record_failure()  # the probe lost
+    assert br.state == CircuitBreaker.OPEN
+    assert br.opened == 2
+    # the schedule restarts: the next allow is a fresh probe
+    assert br.allow() is True
+    br.record_success()
+    assert br.state == CircuitBreaker.CLOSED
+
+
+def test_circuit_breaker_cooldown_uses_injected_clock():
+    now = [0.0]
+    br = CircuitBreaker(failure_threshold=1, probe_interval=1,
+                        cooldown_s=10.0, clock=lambda: now[0])
+    br.record_failure()
+    assert br.allow() is False  # inside the cooldown window
+    now[0] = 10.5
+    assert br.allow() is True  # cooldown elapsed -> count-based probe
+    assert br.state == CircuitBreaker.HALF_OPEN
+
+
+def test_circuit_breaker_rejects_bad_params_and_caps_transitions():
+    with pytest.raises(ValueError):
+        CircuitBreaker(failure_threshold=0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(probe_interval=0)
+    br = CircuitBreaker(failure_threshold=1, probe_interval=1)
+    for _ in range(100):  # open -> half-open -> open forever
+        br.record_failure()
+        br.allow()
+    assert len(br.transitions) <= 64
+    st = br.stats_dict()
+    assert st["state"] == br.state and st["opened"] == br.opened
 
 
 def test_straggler_meter_flags_outliers():
